@@ -1,0 +1,23 @@
+"""Shared helpers for the benchmark harness."""
+import os
+import time
+
+
+def rounds(default: int) -> int:
+    """Env-scalable round counts: REPRO_BENCH_SCALE=full for paper-scale."""
+    scale = os.environ.get("REPRO_BENCH_SCALE", "quick")
+    return {"quick": default, "med": default * 3, "full": default * 10}.get(
+        scale, default)
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.time() - self.t0
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,97 @@
+"""Paper Figure 7: depth-wise fine-tuning of ViT.
+
+Validates: (a) ViT blocks have IDENTICAL memory cost (the paper's
+noise-free skip-connection argument); (b) federated depth-wise ViT
+fine-tuning beats the FedAvg(x1/6-width) baseline."""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.vit_t16 import reduced as vit_reduced
+from repro.core import aggregation, blockwise
+from repro.core.decomposition import decompose
+from repro.core.memory_model import vit_memory
+from repro.fl.data import build_federated
+from repro.models import vit
+
+from benchmarks.bench_lib import csv_row, rounds
+
+
+def _acc(params, cfg, x, y):
+    import jax.numpy as jnp
+    logits = vit.apply(params, cfg, jnp.asarray(x))
+    return float((jnp.argmax(logits, -1) == jnp.asarray(y)).mean())
+
+
+def main() -> None:
+    t0 = time.time()
+    cfg = vit_reduced(num_classes=10)
+    mem = vit_memory(cfg, batch=32)
+    costs = {u.train_bytes() for u in mem.units}
+    print(f"# ViT blocks: {len(mem.units)} units, distinct cost values: "
+          f"{len(costs)} (paper: identical)")
+
+    data = build_federated(num_clients=8, alpha=1.0, n_train=1600,
+                           n_test=400, image_size=cfg.image_size, seed=3)
+    key = jax.random.PRNGKey(3)
+    n_rounds = rounds(6)
+
+    # depth-wise fine-tuning (fedepth) on full-width ViT
+    params = vit.init(key, cfg)
+    runner = blockwise.vit_runner(cfg)
+    budget = mem.block_train_bytes(0, max(1, len(mem.units) // 3))
+    dec = decompose(mem, budget)
+    rng = np.random.default_rng(3)
+    step_cache = {}
+    for r in range(n_rounds):
+        cohort = rng.choice(8, size=4, replace=False)
+        locals_, ws = [], []
+        for k in cohort:
+            batch = data.client_batch(k, 64, rng)
+            local = blockwise.client_update(runner, params, dec, [batch],
+                                            lr=0.05, local_steps=2,
+                                            step_cache=step_cache)
+            locals_.append(local)
+            ws.append(1.0)
+        params = aggregation.fedavg(locals_, ws)
+    acc_depth = _acc(params, cfg, data.x_test, data.y_test)
+
+    # FedAvg x1/6-width baseline
+    import dataclasses
+    import jax.numpy as jnp
+    from repro.fl.baselines import make_sgd_step
+    cfg6 = dataclasses.replace(cfg, width_ratio=1 / 6)
+    p6 = vit.init(key, cfg6)
+
+    def loss6(p, b):
+        lg = vit.apply(p, cfg6, b["images"])
+        lz = jax.nn.logsumexp(lg, -1)
+        gold = jnp.take_along_axis(lg, b["labels"][:, None], -1)[:, 0]
+        return (lz - gold).mean()
+
+    step6 = make_sgd_step(loss6, 0.05, 0.9)
+    for r in range(n_rounds):
+        cohort = rng.choice(8, size=4, replace=False)
+        locals_, ws = [], []
+        for k in cohort:
+            batch = data.client_batch(k, 64, rng)
+            lp = p6
+            vel = jax.tree.map(jnp.zeros_like, lp)
+            for _ in range(2):
+                lp, vel = step6(lp, vel, batch)
+            locals_.append(lp)
+            ws.append(1.0)
+        p6 = aggregation.fedavg(locals_, ws)
+    acc_w = _acc(p6, cfg6, data.x_test, data.y_test)
+
+    print(f"  fedepth-ViT acc={acc_depth:.3f}   FedAvg(x1/6-width) "
+          f"acc={acc_w:.3f}")
+    us = (time.time() - t0) * 1e6
+    print(csv_row("fig7_vit_finetune", us,
+                  f"uniform_blocks={len(costs) == 1};"
+                  f"fedepth_vit={acc_depth:.3f};fedavg_sixth={acc_w:.3f}"))
+
+
+if __name__ == "__main__":
+    main()

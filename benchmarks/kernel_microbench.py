@@ -1,0 +1,62 @@
+"""Kernel micro-benchmarks: wall time of the jnp (execution) path and the
+interpret-mode Pallas path on CPU, per kernel — correctness-speed tracking,
+not TPU performance (see roofline_report for the TPU model)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+from benchmarks.bench_lib import csv_row
+
+
+def bench(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    B, T, Hq, Hkv, D = 2, 512, 8, 2, 64
+    ks = jax.random.split(key, 8)
+    q = jax.random.normal(ks[0], (B, T, Hq, D))
+    k = jax.random.normal(ks[1], (B, T, Hkv, D))
+    v = jax.random.normal(ks[2], (B, T, Hkv, D))
+
+    fa = jax.jit(lambda q, k, v: ops.attention(q, k, v, force="ref"))
+    us = bench(fa, q, k, v)
+    print(csv_row("attention_ref_512", us, f"B{B}xT{T}xH{Hq}xD{D}"))
+
+    r = jax.random.normal(ks[3], (B, T, 4, 32))
+    w = jax.random.normal(ks[4], (B, T, 4, 32)) * 0.3
+    u = jax.random.normal(ks[5], (4, 32)) * 0.1
+    rw = jax.jit(lambda *a: ops.rwkv6(*a, force="ref")[0])
+    us = bench(rw, r, r, r, w, u)
+    print(csv_row("rwkv6_ref_512", us, f"B{B}xT{T}xH4xD32"))
+
+    x = jax.random.normal(ks[6], (B, T, 4, 32))
+    dt = jax.nn.softplus(jax.random.normal(ks[7], (B, T, 4)))
+    A = -jnp.ones((4,))
+    Bm = jax.random.normal(ks[3], (B, T, 16))
+    Cm = jax.random.normal(ks[4], (B, T, 16))
+    Dp = jnp.ones((4,))
+    mb = jax.jit(lambda *a: ops.mamba2(*a, force="ref")[0])
+    us = bench(mb, x, dt, A, Bm, Cm, Dp)
+    print(csv_row("mamba2_ref_512", us, f"B{B}xT{T}xH4xP32xN16"))
+
+    h = jax.random.normal(ks[0], (B, T, 128))
+    wce = jax.random.normal(ks[1], (128, 8192)) * 0.05
+    lbl = jax.random.randint(ks[2], (B, T), 0, 8192)
+    ce = jax.jit(lambda h, w: ops.cross_entropy(h, w, lbl, force="ref")[0])
+    us = bench(ce, h, wce)
+    print(csv_row("chunked_ce_ref_8k_vocab", us, f"BT{B * T}xV8192"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Roofline report: reads experiments/dryrun/*.json (produced by
+repro.launch.dryrun) and prints the per-(arch x shape x mesh) three-term
+roofline table with dominant bottleneck and MODEL_FLOPS/HLO_FLOPS ratio."""
+import glob
+import json
+import os
+import time
+
+from benchmarks.bench_lib import csv_row
+
+
+def load_all(pattern="experiments/dryrun/*.json"):
+    rows = []
+    for path in sorted(glob.glob(pattern)):
+        try:
+            rows.extend(json.load(open(path)))
+        except Exception:
+            pass
+    return rows
+
+
+def main() -> None:
+    t0 = time.time()
+    rows = load_all()
+    ok = [r for r in rows if r.get("status") == "ok"]
+    skipped = [r for r in rows if r.get("status") == "skipped"]
+    failed = [r for r in rows if r.get("status") == "FAILED"]
+    if not rows:
+        print("# no dry-run artifacts found — run "
+              "experiments/run_sweep.sh first")
+        print(csv_row("roofline_report", 0.0, "no_data=1"))
+        return
+
+    hdr = (f"{'arch':<26}{'shape':<13}{'mesh':<9}{'t_comp':>9}{'t_mem':>9}"
+           f"{'t_coll':>9}  {'bottleneck':<11}{'useful':>7}{'hbm_GiB':>9}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in sorted(ok, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        hbm = (r.get("mem_temp_size_in_bytes", 0)
+               + r.get("mem_argument_size_in_bytes", 0)) / 2**30
+        print(f"{r['arch']:<26}{r['shape']:<13}{r['mesh']:<9}"
+              f"{r['t_compute_s']:>9.3g}{r['t_memory_s']:>9.3g}"
+              f"{r['t_collective_s']:>9.3g}  {r['bottleneck']:<11}"
+              f"{r['useful_flops_ratio']:>7.2f}{hbm:>9.1f}")
+    for r in skipped:
+        print(f"{r['arch']:<26}{r['shape']:<13}{r['mesh']:<9} SKIPPED: "
+              f"{r.get('reason', '')[:60]}")
+    for r in failed:
+        print(f"{r['arch']:<26}{r['shape']:<13} FAILED: "
+              f"{r.get('error', '')[:80]}")
+
+    us = (time.time() - t0) * 1e6
+    print(csv_row("roofline_report", us,
+                  f"ok={len(ok)};skipped={len(skipped)};failed={len(failed)}"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Scenario: serve a small model with batched requests — prefill via the
+cache-consistent decode path, then batched generation, for an
+attention-free (RWKV6), a hybrid (Zamba2), and a GQA dense (Yi) backbone.
+
+Run:  PYTHONPATH=src python examples/serve_batched_decode.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced_config
+from repro.models import build, init_cache
+
+
+def serve(arch: str, batch=2, prompt_len=12, gen=6):
+    cfg = get_reduced_config(arch)
+    lm = build(cfg)
+    key = jax.random.PRNGKey(0)
+    params = lm.init(key)
+    S = prompt_len + gen
+    prompts = jax.random.randint(jax.random.fold_in(key, 1),
+                                 (batch, prompt_len), 0, cfg.vocab_size)
+    cache = init_cache(cfg, batch, S)
+    decode = jax.jit(lambda p, t, c, i: lm.decode_step(
+        p, t, c, i, kernel_force="ref"))
+
+    logits = None
+    t0 = time.time()
+    for t in range(prompt_len):
+        logits, cache = decode(params, prompts[:, t:t + 1], cache,
+                               jnp.int32(t))
+    prefill_s = time.time() - t0
+
+    cur = jnp.argmax(logits[:, -1], -1)[:, None]
+    outs = []
+    t0 = time.time()
+    for g in range(gen):
+        outs.append(np.asarray(cur))
+        logits, cache = decode(params, cur, cache, jnp.int32(prompt_len + g))
+        cur = jnp.argmax(logits[:, -1], -1)[:, None]
+    tok_s = gen * batch / max(time.time() - t0, 1e-9)
+    print(f"  {arch:<16} prefill={prefill_s:5.2f}s  decode={tok_s:7.1f} tok/s"
+          f"  first-gen={np.concatenate(outs, 1)[0][:4].tolist()}")
+
+
+def main():
+    print("batched serving across architecture families:")
+    for arch in ("rwkv6-7b", "zamba2-1.2b", "yi-6b"):
+        serve(arch)
+
+
+if __name__ == "__main__":
+    main()

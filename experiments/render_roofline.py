@@ -1,0 +1,66 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run JSONs.
+
+    PYTHONPATH=src python experiments/render_roofline.py > experiments/roofline.md
+"""
+import glob
+import json
+
+
+def load(mesh_tag):
+    rows = []
+    for p in sorted(glob.glob(f"experiments/dryrun/*_{mesh_tag}.json")):
+        rows.extend(json.load(open(p)))
+    return rows
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.1f}"
+
+
+def main():
+    print("## §Dry-run — lower+compile status (every arch x shape x mesh)\n")
+    for tag in ("16x16", "2x16x16"):
+        rows = load(tag)
+        if not rows:
+            continue
+        ok = sum(r.get("status") == "ok" for r in rows)
+        sk = sum(r.get("status") == "skipped" for r in rows)
+        fl = sum(r.get("status") == "FAILED" for r in rows)
+        print(f"**mesh {tag}**: {ok} ok / {sk} skipped / {fl} failed "
+              f"(skips are documented arch-policy, DESIGN.md §4)\n")
+        print("| arch | shape | status | lower s | compile s | "
+              "HBM/dev GiB (temp+args) | accum |")
+        print("|---|---|---|---|---|---|---|")
+        for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+            if r.get("status") == "ok":
+                hbm = (r.get("mem_temp_size_in_bytes", 0)
+                       + r.get("mem_argument_size_in_bytes", 0)) / 2**30
+                print(f"| {r['arch']} | {r['shape']} | ok | "
+                      f"{r['lower_s']:.1f} | {r['compile_s']:.1f} | "
+                      f"{hbm:.1f} | {r.get('accum_steps', 1)} |")
+            else:
+                reason = r.get("reason", r.get("error", ""))[:70]
+                print(f"| {r['arch']} | {r['shape']} | "
+                      f"{r['status'].lower()} | - | - | {reason} | - |")
+        print()
+
+    print("\n## §Roofline — three-term model per (arch x shape), single-pod "
+          "16x16 (256 chips, v5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI)\n")
+    rows = [r for r in load("16x16") if r.get("status") == "ok"]
+    print("| arch | shape | t_compute s | t_memory s | t_collective s | "
+          "bottleneck | MODEL/HLO flops | collective mix |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        mix = ", ".join(f"{k.split('-')[-1]}:{v / 2**30:.2f}G"
+                        for k, v in sorted(
+                            r.get("collectives_by_kind", {}).items(),
+                            key=lambda kv: -kv[1])[:3])
+        print(f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3g} | "
+              f"{r['t_memory_s']:.3g} | {r['t_collective_s']:.3g} | "
+              f"**{r['bottleneck']}** | {r['useful_flops_ratio']:.2f} | "
+              f"{mix} |")
+    print()
+
+
+if __name__ == "__main__":
+    main()

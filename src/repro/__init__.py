@@ -1,0 +1,3 @@
+"""repro: FeDepth (memory-adaptive depth-wise heterogeneous FL) as a
+production-grade multi-pod JAX framework."""
+__version__ = "0.1.0"

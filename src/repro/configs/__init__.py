@@ -1,0 +1,58 @@
+"""Architecture config registry.
+
+``get_config(arch_id)`` returns the full assigned config; every entry also
+exposes ``reduced()`` for CPU smoke tests (2 layers, d_model<=512, <=4
+experts).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import InputShape, ModelConfig, SHAPES, SHAPE_BY_NAME
+from repro.configs import (  # noqa: F401
+    h2o_danube3_4b,
+    llama4_maverick_400b_a17b,
+    minicpm_2b,
+    qwen2_7b,
+    qwen2_vl_2b,
+    qwen3_moe_235b_a22b,
+    rwkv6_7b,
+    whisper_small,
+    yi_6b,
+    zamba2_1_2b,
+)
+
+_MODULES = {
+    "yi-6b": yi_6b,
+    "whisper-small": whisper_small,
+    "minicpm-2b": minicpm_2b,
+    "rwkv6-7b": rwkv6_7b,
+    "qwen3-moe-235b-a22b": qwen3_moe_235b_a22b,
+    "qwen2-vl-2b": qwen2_vl_2b,
+    "zamba2-1.2b": zamba2_1_2b,
+    "qwen2-7b": qwen2_7b,
+    "llama4-maverick-400b-a17b": llama4_maverick_400b_a17b,
+    "h2o-danube-3-4b": h2o_danube3_4b,
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    return _MODULES[arch_id].CONFIG
+
+
+def get_reduced_config(arch_id: str) -> ModelConfig:
+    return _MODULES[arch_id].reduced()
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {k: m.CONFIG for k, m in _MODULES.items()}
+
+
+__all__ = [
+    "ARCH_IDS", "InputShape", "ModelConfig", "SHAPES", "SHAPE_BY_NAME",
+    "get_config", "get_reduced_config", "all_configs",
+]

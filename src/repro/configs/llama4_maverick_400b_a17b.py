@@ -1,0 +1,31 @@
+"""Llama-4 Maverick — MoE 128 experts top-1 + shared expert, early fusion.
+[hf:meta-llama/Llama-4-Scout-17B-16E family, scaled per assignment]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    source="hf:meta-llama/Llama-4-Scout-17B-16E",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    d_ff=8192,          # per-expert hidden size
+    vocab_size=202048,
+    head_dim=128,
+    num_experts=128,
+    experts_per_token=1,
+    num_shared_experts=1,
+    moe_every=2,          # MoE interleaved with dense FFN layers (Maverick)
+    dense_d_ff=16384,
+    rope_theta=500_000.0,
+    norm_eps=1e-5,
+)
+
+
+def reduced() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+        d_ff=128, vocab_size=512, head_dim=32, num_experts=4,
+        experts_per_token=1, num_shared_experts=1)

@@ -1,0 +1,27 @@
+"""MiniCPM-2B — llama-like dense decoder trained with a WSD schedule.
+[arXiv:2404.06395]  (MHA: kv_heads == heads.)"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm-2b",
+    family="dense",
+    source="arXiv:2404.06395",
+    num_layers=40,
+    d_model=2304,
+    num_heads=36,
+    num_kv_heads=36,
+    d_ff=5760,
+    vocab_size=122753,
+    tie_embeddings=True,
+    norm_eps=1e-5,
+)
+
+# MiniCPM's signature warmup-stable-decay schedule; consumed by train.optim.
+WSD_SCHEDULE = dict(warmup_frac=0.01, stable_frac=0.89, decay_frac=0.10)
+
+
+def reduced() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, head_dim=0, num_layers=2, d_model=144, num_heads=4, num_kv_heads=4,
+        d_ff=288, vocab_size=512)

@@ -1,0 +1,29 @@
+"""Qwen2-VL-2B — VLM language backbone with M-RoPE; vision tower stubbed.
+[arXiv:2409.12191]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    source="arXiv:2409.12191",
+    num_layers=28,
+    d_model=1536,
+    num_heads=12,
+    num_kv_heads=2,
+    d_ff=8960,
+    vocab_size=151936,
+    qkv_bias=True,
+    mrope_sections=(16, 24, 24),  # temporal/height/width rotary sections (head_dim=128 halves)
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    norm_eps=1e-6,
+    frontend_embed_tokens=256,    # stubbed vision patches prepended
+)
+
+
+def reduced() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, head_dim=0, num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+        d_ff=256, vocab_size=512, mrope_sections=(4, 6, 6),
+        frontend_embed_tokens=16)

@@ -1,0 +1,126 @@
+"""Input shapes and ShapeDtypeStruct stand-ins for dry-run lowering.
+
+``input_specs(config, shape)`` returns a dict of ``jax.ShapeDtypeStruct``
+matching exactly what ``train_step`` / ``serve_step`` consume — no device
+allocation ever happens for the full-size architectures.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig, SHAPES, SHAPE_BY_NAME
+
+__all__ = ["SHAPES", "SHAPE_BY_NAME", "input_specs", "shape_applicable"]
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """Whether an (arch, shape) pair is in scope; reason string if not.
+
+    Policy from DESIGN.md §4: long_500k decode needs sub-quadratic
+    attention — run for SSM / hybrid / sliding-window archs, skip for pure
+    full-attention archs.  Whisper has a fixed 1500-frame encoder context,
+    so 32k/500k decode is out of architectural spec; it runs train_4k and
+    prefill (audio-conditioned generation up to its context) only.
+    """
+    if shape.name == "long_500k":
+        subquadratic = (cfg.family in ("ssm", "hybrid")
+                        or cfg.sliding_window > 0)
+        if not subquadratic:
+            return False, ("full quadratic attention at 524288 tokens; no "
+                           "sub-quadratic variant configured (DESIGN.md §4)")
+    if cfg.is_encoder_decoder and shape.seq_len > cfg.max_seq_len:
+        return False, ("whisper decoder positions extended to 32k for the "
+                       "assigned shapes; 500k exceeds both the learned "
+                       "position table and the quadratic-attention policy "
+                       "(DESIGN.md §4)")
+    return True, ""
+
+
+def _token_dtype() -> jnp.dtype:
+    return jnp.int32
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for every model input of the given step kind."""
+    B, T = shape.global_batch, shape.seq_len
+    f32, bf16, i32 = jnp.float32, jnp.bfloat16, _token_dtype()
+
+    if shape.mode == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, T), i32),
+            "labels": jax.ShapeDtypeStruct((B, T), i32),
+        }
+        if cfg.is_encoder_decoder:
+            # stubbed conv-frontend frame embeddings (assignment carve-out)
+            S = cfg.max_source_positions
+            specs["encoder_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), bf16)
+        if cfg.family == "vlm":
+            P = cfg.frontend_embed_tokens
+            specs["vision_embeds"] = jax.ShapeDtypeStruct((B, P, cfg.d_model), bf16)
+            specs["mrope_positions"] = jax.ShapeDtypeStruct((3, B, T), i32)
+        return specs
+
+    if shape.mode == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, T), i32)}
+        if cfg.is_encoder_decoder:
+            S = cfg.max_source_positions
+            specs["encoder_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), bf16)
+        if cfg.family == "vlm":
+            P = cfg.frontend_embed_tokens
+            specs["vision_embeds"] = jax.ShapeDtypeStruct((B, P, cfg.d_model), bf16)
+            specs["mrope_positions"] = jax.ShapeDtypeStruct((3, B, T), i32)
+        return specs
+
+    # decode: ONE new token per sequence, cache of seq_len
+    assert shape.mode == "decode"
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+        "cache": cache_specs(cfg, B, T),
+        "cache_index": jax.ShapeDtypeStruct((), i32),
+    }
+    if cfg.family == "vlm":
+        specs["mrope_positions"] = jax.ShapeDtypeStruct((3, B, 1), i32)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int):
+    """Per-layer decode cache ShapeDtypeStructs (KV / SSM state / both)."""
+    bf16, f32 = jnp.bfloat16, jnp.float32
+    L, hd = cfg.num_layers, cfg.head_dim
+    kinds = cfg.layer_kinds()
+    cache: Dict[str, jax.ShapeDtypeStruct] = {}
+
+    n_attn = sum(1 for k in kinds if k.startswith("attn") or k in ("dense", "moe"))
+    if cfg.family == "ssm":
+        # RWKV6: per-layer matrix state (heads, head_dim, head_dim) + token-shift
+        H = cfg.d_model // cfg.rwkv_head_dim
+        cache["rwkv_state"] = jax.ShapeDtypeStruct(
+            (L, batch, H, cfg.rwkv_head_dim, cfg.rwkv_head_dim), f32)
+        cache["rwkv_shift"] = jax.ShapeDtypeStruct((L, 2, batch, cfg.d_model), bf16)
+        return cache
+
+    if cfg.family == "hybrid":
+        n_mamba = sum(1 for k in kinds if k == "mamba")
+        n_attn = sum(1 for k in kinds if k.startswith("attn"))
+        d_in = cfg.ssm_expand * cfg.d_model
+        nh = cfg.ssm_num_heads
+        cache["ssm_state"] = jax.ShapeDtypeStruct(
+            (n_mamba, batch, nh, cfg.ssm_head_dim, cfg.ssm_state_dim), f32)
+        cache["conv_state"] = jax.ShapeDtypeStruct((n_mamba, batch, 4, d_in), bf16)
+        if n_attn:
+            kv_len = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+            cache["k"] = jax.ShapeDtypeStruct((n_attn, batch, kv_len, cfg.num_kv_heads, hd), bf16)
+            cache["v"] = jax.ShapeDtypeStruct((n_attn, batch, kv_len, cfg.num_kv_heads, hd), bf16)
+        return cache
+
+    # dense / moe / vlm / audio decoder: KV cache, bounded by sliding window
+    kv_len = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    cache["k"] = jax.ShapeDtypeStruct((L, batch, kv_len, cfg.num_kv_heads, hd), bf16)
+    cache["v"] = jax.ShapeDtypeStruct((L, batch, kv_len, cfg.num_kv_heads, hd), bf16)
+    if cfg.is_encoder_decoder:
+        S = cfg.max_source_positions
+        cache["enc_out"] = jax.ShapeDtypeStruct((batch, S, cfg.d_model), bf16)
+    return cache

@@ -1,0 +1,6 @@
+"""FeDepth core — the paper's contribution:
+memory model -> memory-adaptive decomposition -> depth-wise sequential
+block training -> FedAvg aggregation, + partial training and MKD variants.
+"""
+from repro.core.decomposition import Decomposition, decompose  # noqa: F401
+from repro.core.memory_model import ModelMemory, UnitCost, model_memory  # noqa: F401

@@ -1,0 +1,79 @@
+"""Server-side aggregation (paper Algorithm 1, line 7).
+
+FeDepth clients return FULL-SIZE models, so aggregation is plain weighted
+FedAvg over the sampled cohort — this is exactly the paper's robustness
+argument (contribution 3): no width-matching, no nested slicing, no
+dependence on the largest-memory clients being present.
+
+Partial-training clients (paper §Extreme Memory) never touched their
+skipped prefix: their returned prefix equals the broadcast global prefix,
+so plain averaging silently no-ops those coordinates for them; we also
+provide ``aggregate_masked`` that reweights per-parameter by who actually
+trained it (a beyond-paper refinement, off by default to stay faithful).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def fedavg(client_params: Sequence, weights: Sequence[float]):
+    """Weighted average of client pytrees.  weights ~ p_k, renormalized
+    over the sampled cohort."""
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / w.sum()
+    return jax.tree.map(
+        lambda *xs: sum(wi * x.astype(jnp.float32)
+                        for wi, x in zip(w, xs)).astype(xs[0].dtype),
+        *client_params)
+
+
+def fedavg_delta(global_params, client_params: Sequence,
+                 weights: Sequence[float], server_lr: float = 1.0):
+    """Server update in delta form (supports server learning rates /
+    FedAdam-style extensions): W <- W + lr * avg(W_k - W)."""
+    avg = fedavg(client_params, weights)
+    return jax.tree.map(
+        lambda g, a: (g.astype(jnp.float32)
+                      + server_lr * (a.astype(jnp.float32)
+                                     - g.astype(jnp.float32))).astype(g.dtype),
+        global_params, avg)
+
+
+def aggregate_masked(global_params, client_params: Sequence,
+                     weights: Sequence[float],
+                     trained_masks: Sequence) -> object:
+    """Per-parameter reweighting by who actually trained each leaf.
+
+    ``trained_masks[k]`` is a pytree of {0,1} scalars (or arrays) marking
+    which leaves client k trained (partial-training clients skip a
+    prefix).  Leaves nobody trained keep the global value.
+    """
+    w = jnp.asarray(weights, jnp.float32)
+
+    def combine(g, *pairs):
+        xs = pairs[:len(client_params)]
+        ms = pairs[len(client_params):]
+        num = sum(wi * mi * x.astype(jnp.float32)
+                  for wi, x, mi in zip(w, xs, ms))
+        den = sum(wi * mi for wi, mi in zip(w, ms))
+        den = jnp.maximum(den, 1e-12)
+        out = num / den
+        any_trained = sum(ms) > 0
+        return jnp.where(any_trained, out, g.astype(jnp.float32)).astype(g.dtype)
+
+    return jax.tree.map(combine, global_params, *client_params,
+                        *trained_masks)
+
+
+def trained_mask_for(params, dec, runner) -> object:
+    """Mask pytree: 1 for leaves in any trained block of ``dec``, plus the
+    head; 0 for the skipped prefix."""
+    mask = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    for (lo, hi) in dec.blocks:
+        train = runner.split(mask, lo, hi)
+        ones = jax.tree.map(jnp.ones_like, train)
+        mask = runner.merge(mask, ones, lo=lo, hi=hi)
+    return mask

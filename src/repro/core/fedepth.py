@@ -1,0 +1,109 @@
+"""FEDEPTH — Algorithm 1: the full federated round loop.
+
+Composes:  memory model -> per-client decomposition -> depth-wise
+sequential ClientUpdate -> FedAvg aggregation.  Variants:
+  * head="skip"  -> FEDEPTH           (skip-connection classifier)
+  * head="aux"   -> m-FEDEPTH         (auxiliary classifiers)
+  * clients with surplus budget       -> MKD local update (core.mkd)
+  * clients below the finest block    -> partial training (skip prefix)
+
+Model- and optimizer-agnostic: anything with a BlockRunner works, and the
+local solver is plain SGD-momentum (optionally FedProx via ``prox_mu``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import aggregation, blockwise, mkd
+from repro.core.blockwise import BlockRunner
+from repro.core.decomposition import Decomposition, decompose
+from repro.core.memory_model import ModelMemory
+
+
+@dataclasses.dataclass
+class ClientSpec:
+    """One client's capability + data."""
+    client_id: int
+    budget_bytes: int
+    n_samples: int
+    surplus_models: int = 1   # M > 1 -> MKD locally
+
+
+@dataclasses.dataclass
+class FedepthConfig:
+    rounds: int = 10
+    participation: float = 0.1
+    lr: float = 0.1
+    momentum: float = 0.9
+    local_steps: int = 1
+    head: str = "skip"          # "skip" -> FeDepth, "aux" -> m-FeDepth
+    prox_mu: float = 0.0
+    masked_aggregation: bool = False  # beyond-paper refinement
+    seed: int = 0
+
+
+class FedepthServer:
+    """Server orchestration (Algorithm 1)."""
+
+    def __init__(self, runner: BlockRunner, mem: ModelMemory,
+                 clients: Sequence[ClientSpec], cfg: FedepthConfig,
+                 *, mkd_fns=None):
+        self.runner = runner
+        self.mem = mem
+        self.clients = list(clients)
+        self.cfg = cfg
+        self.mkd_fns = mkd_fns  # (logits_fn, task_loss_fn) for surplus
+        self.rng = np.random.default_rng(cfg.seed)
+        # precompute each client's decomposition (paper: before training)
+        self.decomps: Dict[int, Decomposition] = {
+            c.client_id: decompose(mem, c.budget_bytes) for c in clients}
+
+    def sample_cohort(self) -> List[ClientSpec]:
+        k = max(1, int(np.ceil(self.cfg.participation * len(self.clients))))
+        idx = self.rng.choice(len(self.clients), size=k, replace=False)
+        return [self.clients[i] for i in idx]
+
+    def round(self, global_params, client_batches: Callable):
+        """One communication round.  ``client_batches(client_id)`` yields
+        that client's local batch list."""
+        cohort = self.sample_cohort()
+        results, weights, masks = [], [], []
+        for c in cohort:
+            dec = self.decomps[c.client_id]
+            batches = client_batches(c.client_id)
+            if c.surplus_models > 1 and self.mkd_fns is not None:
+                logits_fn, task_fn = self.mkd_fns
+                plist = [global_params] * c.surplus_models
+                plist = mkd.mkd_local_update(
+                    logits_fn, task_fn, list(plist), batches,
+                    lr=self.cfg.lr, momentum=self.cfg.momentum,
+                    local_steps=self.cfg.local_steps)
+                local = plist[0]
+            else:
+                local = blockwise.client_update(
+                    self.runner, global_params, dec, batches,
+                    lr=self.cfg.lr, momentum=self.cfg.momentum,
+                    local_steps=self.cfg.local_steps,
+                    prox_mu=self.cfg.prox_mu)
+            results.append(local)
+            weights.append(float(c.n_samples))
+            if self.cfg.masked_aggregation:
+                masks.append(aggregation.trained_mask_for(
+                    global_params, dec, self.runner))
+        if self.cfg.masked_aggregation:
+            return aggregation.aggregate_masked(global_params, results,
+                                                weights, masks)
+        return aggregation.fedavg(results, weights)
+
+    def fit(self, global_params, client_batches: Callable,
+            eval_fn: Optional[Callable] = None, log_every: int = 1):
+        history = []
+        for r in range(self.cfg.rounds):
+            global_params = self.round(global_params, client_batches)
+            if eval_fn is not None and (r + 1) % log_every == 0:
+                metric = eval_fn(global_params)
+                history.append((r + 1, metric))
+        return global_params, history

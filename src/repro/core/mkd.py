@@ -1,0 +1,73 @@
+"""Mutual knowledge distillation (paper §Exploit Sufficient Memory).
+
+Clients with surplus memory (r >= 2) train M > 1 models jointly:
+
+  min_{W^1..W^M}  (1/M) Σ_m F_k(W^m)
+                  + (1/(M-1)) Σ_{m'≠m} KL(h^{m'} || h^m)
+
+and upload ONE model (the knowledge consensus makes any of them
+representative), keeping communication at 1x.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def kl_logits(p_logits: jax.Array, q_logits: jax.Array,
+              temperature: float = 1.0) -> jax.Array:
+    """KL(softmax(p) || softmax(q)), mean over batch."""
+    pf = jax.nn.log_softmax(p_logits.astype(jnp.float32) / temperature, -1)
+    qf = jax.nn.log_softmax(q_logits.astype(jnp.float32) / temperature, -1)
+    kl = jnp.sum(jnp.exp(pf) * (pf - qf), axis=-1)
+    return kl.mean()
+
+
+def mkd_loss(logits_fn: Callable, params_list: Sequence, batch,
+             task_loss_fn: Callable, *, temperature: float = 1.0,
+             kd_weight: float = 1.0) -> jax.Array:
+    """Joint MKD objective over M models.
+
+    logits_fn(params, batch) -> logits;  task_loss_fn(params, batch) ->
+    scalar supervised loss.  Teachers' logits enter the KL under
+    stop_gradient of the *other* models, matching deep mutual learning
+    (each model distills from its peers' current predictions).
+    """
+    M = len(params_list)
+    assert M > 1
+    logits = [logits_fn(p, batch) for p in params_list]
+    task = sum(task_loss_fn(p, batch) for p in params_list) / M
+    kd = 0.0
+    for m in range(M):
+        for mp in range(M):
+            if mp == m:
+                continue
+            teacher = jax.lax.stop_gradient(logits[mp])
+            kd = kd + kl_logits(teacher, logits[m], temperature)
+    kd = kd / (M * (M - 1))
+    return task + kd_weight * kd
+
+
+def mkd_local_update(logits_fn, task_loss_fn, params_list: List, batches, *,
+                     lr: float = 0.1, momentum: float = 0.9,
+                     local_steps: int = 1, temperature: float = 1.0):
+    """SGD-momentum on the joint MKD objective; returns updated list.
+    The caller uploads ``params_list[0]`` (paper: upload one model)."""
+    vels = [jax.tree.map(jnp.zeros_like, p) for p in params_list]
+
+    def loss(plist, batch):
+        return mkd_loss(logits_fn, plist, batch, task_loss_fn,
+                        temperature=temperature)
+
+    grad_fn = jax.grad(loss)
+    for _ in range(local_steps):
+        for batch in batches:
+            grads = grad_fn(params_list, batch)
+            for m in range(len(params_list)):
+                vels[m] = jax.tree.map(lambda v, g: momentum * v + g,
+                                       vels[m], grads[m])
+                params_list[m] = jax.tree.map(lambda p, v: p - lr * v,
+                                              params_list[m], vels[m])
+    return params_list

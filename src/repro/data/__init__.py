@@ -1,0 +1,2 @@
+"""Data pipelines (synthetic token + image generators)."""
+from repro.data.tokens import TokenPipeline  # noqa: F401

@@ -1,0 +1,3 @@
+"""Federated-learning runtime: data partitions, simulation loop, baselines."""
+from repro.fl.data import FederatedData, build_federated  # noqa: F401
+from repro.fl.simulate import SimConfig, run_experiment  # noqa: F401

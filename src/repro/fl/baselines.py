@@ -1,0 +1,281 @@
+"""FL baselines the paper compares against (all on PreResNet/ViT):
+
+  * ``fedavg_update``     — FedAvg at a fixed width ratio (×min(r)): the
+    lowest-common-denominator baseline (McMahan et al. 2017).
+  * ``heterofl``          — width-slimming with nested prefix-slice
+    aggregation (Diao et al. 2021).
+  * ``splitmix``          — base sub-networks of width r, mixed ensemble
+    (Hong et al. 2022).
+  * ``depthfl``           — FIXED-depth prefix sub-models with auxiliary
+    classifiers (Kim et al. 2023), reproduced to conform to memory
+    budgets as the paper did (footnote 2).
+
+All local solvers are SGD-momentum to match the paper's setup.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.preresnet20 import ResNetConfig, scaled
+from repro.core.memory_model import resnet_memory
+from repro.fl import width as width_util
+from repro.models import resnet
+
+
+def _ce(logits, labels):
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32),
+                               labels[:, None], axis=-1)[:, 0]
+    return (logz - gold).mean()
+
+
+def sgd_local(loss_fn: Callable, params, batches, *, lr=0.1, momentum=0.9,
+              local_steps=1, step_fn=None):
+    """step_fn: optional pre-jitted (params, vel, batch) -> (params, vel);
+    callers that run many clients should build one via make_sgd_step and
+    reuse it (jit caches by function identity)."""
+    vel = jax.tree.map(jnp.zeros_like, params)
+    step = step_fn or make_sgd_step(loss_fn, lr, momentum)
+    for _ in range(local_steps):
+        for b in batches:
+            params, vel = step(params, vel, b)
+    return params
+
+
+def make_sgd_step(loss_fn: Callable, lr: float, momentum: float):
+    @jax.jit
+    def step(params, vel, batch):
+        g = jax.grad(loss_fn)(params, batch)
+        vel = jax.tree.map(lambda v, gi: momentum * v + gi, vel, g)
+        params = jax.tree.map(lambda p, v: p - lr * v, params, vel)
+        return params, vel
+    return step
+
+
+# --------------------------------------------------------------------------
+# FedAvg (x r)
+# --------------------------------------------------------------------------
+import functools
+
+
+@functools.lru_cache(maxsize=64)
+def fedavg_step(cfg: ResNetConfig, lr: float, momentum: float):
+    def loss(p, b):
+        return _ce(resnet.apply(p, cfg, b["images"]), b["labels"])
+    return make_sgd_step(loss, lr, momentum)
+
+
+def fedavg_local(cfg: ResNetConfig, params, batches, *, lr=0.1,
+                 momentum=0.9, local_steps=1):
+    step = fedavg_step(cfg, lr, momentum)
+    return sgd_local(None, params, batches, lr=lr, momentum=momentum,
+                     local_steps=local_steps, step_fn=step)
+
+
+# --------------------------------------------------------------------------
+# HeteroFL
+# --------------------------------------------------------------------------
+def heterofl_local(cfg_full: ResNetConfig, global_params, ratio: float,
+                   batches, *, lr=0.1, momentum=0.9, local_steps=1):
+    """Slice -> local train -> pad back with mask."""
+    sub, sub_cfg = width_util.slice_resnet(global_params, cfg_full, ratio)
+    sub = fedavg_local(sub_cfg, sub, batches, lr=lr, momentum=momentum,
+                       local_steps=local_steps)
+    return width_util.pad_resnet(sub, cfg_full, sub_cfg)
+
+
+def heterofl_aggregate(global_params, padded_list: Sequence,
+                       mask_list: Sequence, weights: Sequence[float]):
+    """Nested aggregation: each coordinate averages over the clients whose
+    slice covers it; uncovered coordinates keep the global value."""
+    w = jnp.asarray(weights, jnp.float32)
+
+    def combine(g, *rest):
+        ps = rest[:len(padded_list)]
+        ms = rest[len(padded_list):]
+        num = sum(wi * m * p.astype(jnp.float32)
+                  for wi, p, m in zip(w, ps, ms))
+        den = sum(wi * m for wi, m in zip(w, ms))
+        out = num / jnp.maximum(den, 1e-12)
+        return jnp.where(den > 0, out, g.astype(jnp.float32)).astype(g.dtype)
+
+    return jax.tree.map(combine, global_params, *padded_list, *mask_list)
+
+
+# --------------------------------------------------------------------------
+# SplitMix
+# --------------------------------------------------------------------------
+class SplitMixState:
+    """K = round(1/r) independent base networks of width r; the global
+    model is their logit-mean ensemble."""
+
+    def __init__(self, cfg_full: ResNetConfig, base_ratio: float, key):
+        self.base_cfg = width_util.subnet_config(cfg_full, base_ratio)
+        self.k = max(1, int(round(1.0 / base_ratio)))
+        keys = jax.random.split(key, self.k)
+        self.bases = [resnet.init(k, self.base_cfg) for k in keys]
+
+    def capacity(self, ratio: float) -> int:
+        """How many base nets a client at width-ratio ``ratio`` trains:
+        budget is ~ratio activations; each base costs ~base_ratio."""
+        per_base = 1.0 / self.k
+        return max(1, min(self.k, int(ratio / per_base)))
+
+    def ensemble_logits(self, images):
+        if not hasattr(self, "_ens_jit"):
+            cfg = self.base_cfg
+            self._ens_jit = jax.jit(
+                lambda ps, x: sum(resnet.apply(p, cfg, x) for p in ps)
+                / len(ps))
+        return self._ens_jit(self.bases, images)
+
+
+def splitmix_round(state: SplitMixState, cohort, client_batches, ratios,
+                   *, lr=0.1, momentum=0.9, local_steps=1, rng=None):
+    """Each sampled client trains a rotating subset of base nets."""
+    rng = rng or np.random.default_rng(0)
+    updates: List[List] = [[] for _ in range(state.k)]
+    weights: List[List[float]] = [[] for _ in range(state.k)]
+    for ci, c in enumerate(cohort):
+        cap = state.capacity(ratios[ci])
+        chosen = rng.choice(state.k, size=cap, replace=False)
+        batches = client_batches(c)
+        for b_idx in chosen:
+            new = fedavg_local(state.base_cfg, state.bases[b_idx], batches,
+                               lr=lr, momentum=momentum,
+                               local_steps=local_steps)
+            updates[b_idx].append(new)
+            weights[b_idx].append(1.0)
+    for b_idx in range(state.k):
+        if updates[b_idx]:
+            w = jnp.asarray(weights[b_idx])
+            w = w / w.sum()
+            state.bases[b_idx] = jax.tree.map(
+                lambda *xs: sum(wi * x for wi, x in zip(w, xs)),
+                *updates[b_idx])
+    return state
+
+
+# --------------------------------------------------------------------------
+# DepthFL (fixed-depth split + aux classifiers)
+# --------------------------------------------------------------------------
+def depthfl_depth_for_budget(cfg: ResNetConfig, budget_bytes: int,
+                             batch: int, *, layers_per_block: int = 2,
+                             optimizer_slots: int = 2) -> int:
+    """Deepest PREFIX (in fixed 2-resblock steps) whose *end-to-end*
+    training cost fits the budget.  Unlike FeDepth the prefix trains
+    jointly, so cost is the SUM over prefix units — that is DepthFL's
+    structural disadvantage under tight memory."""
+    mem = resnet_memory(cfg, batch)
+    n = len(mem.units)
+    best = 0
+    # fixed-step exits plus the FULL depth (so the real classifier head is
+    # trainable by the richest tier — without it no client ever supervises
+    # the final head and the global model stays at chance)
+    options = sorted(set(list(range(layers_per_block, n,
+                                    layers_per_block)) + [n]))
+    for d in options:
+        cost = (mem.embed.train_bytes(optimizer_slots)
+                + sum(u.train_bytes(optimizer_slots) for u in mem.units[:d])
+                + mem.head.train_bytes(optimizer_slots))
+        if cost <= budget_bytes:
+            best = d
+    return best
+
+
+def depthfl_init_aux(cfg: ResNetConfig, key, layers_per_block: int = 2):
+    """Aux classifier at each fixed-depth exit."""
+    from repro.models.resnet import block_channels
+    chans = block_channels(cfg)
+    aux = {}
+    exits = list(range(layers_per_block, cfg.num_blocks + 1,
+                       layers_per_block))
+    for i, e in enumerate(exits):
+        c = chans[e - 1][1]
+        k = jax.random.fold_in(key, i)
+        aux[f"exit_{e}"] = {
+            "w": (jax.random.normal(k, (c, cfg.num_classes))
+                  * (1 / np.sqrt(c))).astype(jnp.float32),
+            "b": jnp.zeros((cfg.num_classes,), jnp.float32)}
+    return aux
+
+
+@functools.lru_cache(maxsize=64)
+def _depthfl_step(cfg: ResNetConfig, depth: int, lr: float, momentum: float,
+                  layers_per_block: int = 2):
+    """Jitted DepthFL prefix step.  All round-varying state (global params,
+    aux heads) is threaded as arguments so the compiled step is reusable
+    across rounds."""
+    exits = [e for e in range(layers_per_block, depth + 1, layers_per_block)]
+
+    def loss(tp, global_params, aux_all, b):
+        trained, aux_t = tp
+        merged = dict(global_params)
+        merged["stem"] = trained["stem"]
+        merged["blocks"] = list(trained["blocks"]) \
+            + global_params["blocks"][depth:]
+        merged["head_norm"] = trained["head_norm"]
+        merged["classifier"] = trained["classifier"]
+        a_merged = dict(aux_all)
+        a_merged.update(aux_t)
+        x = resnet.stem(merged, b["images"])
+        total = 0.0
+        lo = 0
+        for e in exits:
+            x = resnet.forward_blocks(merged, cfg, x, lo, e)
+            lo = e
+            h = x.mean((1, 2))
+            logits = h @ a_merged[f"exit_{e}"]["w"] + a_merged[f"exit_{e}"]["b"]
+            total = total + _ce(logits, b["labels"])
+        if depth == cfg.num_blocks:
+            # run any remaining blocks past the last fixed exit, then the
+            # REAL classifier head (the full-depth tier supervises it)
+            x = resnet.forward_blocks(merged, cfg, x, lo, depth)
+            total = total + _ce(resnet.head(merged, cfg, x), b["labels"])
+        return total / (len(exits) + (depth == cfg.num_blocks))
+
+    @jax.jit
+    def step(tp, vel, global_params, aux_all, batch):
+        g = jax.grad(loss)(tp, global_params, aux_all, batch)
+        vel = jax.tree.map(lambda v, gi: momentum * v + gi, vel, g)
+        tp = jax.tree.map(lambda p, v: p - lr * v, tp, vel)
+        return tp, vel
+
+    return step
+
+
+def depthfl_local(cfg: ResNetConfig, params, aux, depth: int, batches, *,
+                  layers_per_block: int = 2, lr=0.1, momentum=0.9,
+                  local_steps=1, step_cache=None):
+    """Train the prefix [0, depth) end-to-end with ALL aux exits <= depth
+    supervised jointly.  Unlike FeDepth, the prefix backpropagates as a
+    whole — its memory is the SUM over prefix blocks."""
+    if depth == 0:
+        return params, aux, None
+
+    trained = {"stem": params["stem"],
+               "blocks": params["blocks"][:depth],
+               "head_norm": params["head_norm"],
+               "classifier": params["classifier"]}
+    aux_t = {k: v for k, v in aux.items()
+             if int(k.split("_")[1]) <= depth}
+
+    step = _depthfl_step(cfg, depth, lr, momentum, layers_per_block)
+    tp = (trained, aux_t)
+    vel = jax.tree.map(jnp.zeros_like, tp)
+    for _ in range(local_steps):
+        for b in batches:
+            tp, vel = step(tp, vel, params, aux, b)
+
+    merged = dict(params)
+    merged["stem"] = tp[0]["stem"]
+    merged["blocks"] = list(tp[0]["blocks"]) + params["blocks"][depth:]
+    merged["head_norm"] = tp[0]["head_norm"]
+    merged["classifier"] = tp[0]["classifier"]
+    new_aux = dict(aux)
+    new_aux.update(tp[1])
+    return merged, new_aux, depth

@@ -1,0 +1,111 @@
+"""Width-slimming utilities for the HeteroFL / SplitMix baselines.
+
+HeteroFL subnetworks are PREFIX channel slices of the global PreResNet:
+client at ratio r takes the first round(r*C) channels of every conv /
+norm / classifier-input.  Padding a local model back to full size +
+a 0/1 mask enables the server's nested aggregation.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.preresnet20 import ResNetConfig, scaled
+from repro.models import resnet
+
+
+def subnet_config(cfg_full: ResNetConfig, ratio: float) -> ResNetConfig:
+    import dataclasses
+    return dataclasses.replace(cfg_full, width_ratio=ratio,
+                               name=f"{cfg_full.name}-x{ratio:g}")
+
+
+def slice_resnet(params, cfg_full: ResNetConfig, ratio: float):
+    """Take the prefix-channel subnetwork at width ``ratio``.
+    Returns (sub_params, sub_cfg)."""
+    sub_cfg = subnet_config(cfg_full, ratio)
+    full_ch = resnet.block_channels(cfg_full)
+    sub_ch = resnet.block_channels(sub_cfg)
+    w0 = sub_cfg.widths()[0]
+
+    out = {"stem": params["stem"][:, :, :, :w0]}
+    blocks = []
+    for bp, (fc, sc) in zip(params["blocks"], zip(full_ch, sub_ch)):
+        (fin, fout, _), (sin, sout, _) = fc, sc
+        nb = {
+            "n1": {"w": bp["n1"]["w"][:sin], "b": bp["n1"]["b"][:sin]},
+            "conv1": bp["conv1"][:, :, :sin, :sout],
+            "n2": {"w": bp["n2"]["w"][:sout], "b": bp["n2"]["b"][:sout]},
+            "conv2": bp["conv2"][:, :, :sout, :sout],
+        }
+        if "proj" in bp:
+            nb["proj"] = bp["proj"][:, :, :sin, :sout]
+        blocks.append(nb)
+    out["blocks"] = blocks
+    wl = sub_cfg.widths()[-1]
+    out["head_norm"] = {"w": params["head_norm"]["w"][:wl],
+                        "b": params["head_norm"]["b"][:wl]}
+    out["classifier"] = {"w": params["classifier"]["w"][:wl],
+                         "b": params["classifier"]["b"]}
+    return out, sub_cfg
+
+
+def pad_resnet(sub_params, cfg_full: ResNetConfig, sub_cfg: ResNetConfig):
+    """Zero-pad a subnetwork back to full shape + a matching 0/1 mask."""
+    template = jax.eval_shape(
+        lambda: resnet.init(jax.random.PRNGKey(0), cfg_full))
+
+    def pad_like(small, big_sd):
+        pads = [(0, b - s) for s, b in zip(small.shape, big_sd.shape)]
+        padded = jnp.pad(small, pads)
+        mask = jnp.pad(jnp.ones_like(small, jnp.float32), pads)
+        return padded, mask
+
+    flat_small = _flatten(sub_params)
+    flat_big = _flatten(template)
+    padded, masks = {}, {}
+    for k, big_sd in flat_big.items():
+        if k in flat_small:
+            p, m = pad_like(flat_small[k], big_sd)
+        else:  # leaf absent in subnetwork (e.g. proj present in both; safety)
+            p = jnp.zeros(big_sd.shape, big_sd.dtype)
+            m = jnp.zeros(big_sd.shape, jnp.float32)
+        padded[k] = p
+        masks[k] = m
+    return _unflatten(padded), _unflatten(masks)
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat):
+    root: dict = {}
+    for key, v in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return _listify(root)
+
+
+def _listify(node):
+    if not isinstance(node, dict):
+        return node
+    keys = list(node.keys())
+    if keys and all(k.isdigit() for k in keys):
+        return [_listify(node[str(i)]) for i in range(len(keys))]
+    return {k: _listify(v) for k, v in node.items()}

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels (+ jnp oracles) for the framework's compute hot-spots.
+
+Modules:
+  flash_attention — GQA/causal/sliding-window attention, online softmax
+  rwkv6_scan      — RWKV6 (Finch) data-dependent-decay recurrence
+  mamba2_ssd      — Mamba2 chunked state-space scan (SSD form)
+  chunked_ce      — large-vocab cross-entropy without materialized logits
+  ops             — public dispatching wrappers (use these)
+  ref             — pure-jnp oracles (ground truth for tests)
+"""
+from repro.kernels import ops, ref  # noqa: F401

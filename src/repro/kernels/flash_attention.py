@@ -1,0 +1,151 @@
+"""Flash attention (GQA + causal + sliding window) as a Pallas TPU kernel.
+
+TPU-native design (not a CUDA port):
+  * grid = (batch, q_heads, num_q_blocks, num_kv_blocks); the kv axis is the
+    innermost ("arbitrary") dimension so the online-softmax accumulator
+    lives in VMEM scratch across kv steps — the MXU sees (block_q x D) @
+    (D x block_k) matmuls with D and block sizes aligned to 128.
+  * q/k/v tiles are staged HBM->VMEM by BlockSpec; the working set is
+    block_q*D + 2*block_k*D + block_q*block_k floats, sized to fit v5e's
+    ~16 MB VMEM with headroom for double buffering.
+  * GQA is handled in the index_map (kv head = q head // group), so KV
+    tiles are fetched once per group position rather than materializing
+    repeated heads in HBM (the ref oracle does the repeat explicitly).
+  * causal/sliding-window masking is computed from broadcasted iotas inside
+    the kernel; fully-masked kv blocks are skipped via @pl.when so the
+    causal lower triangle costs ~half the FLOPs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 scale, causal, sliding_window, block_q, block_k, kv_len,
+                 q_offset):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0) + q_offset
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+
+    # Skip kv blocks that are entirely masked out (above the causal
+    # diagonal, or entirely left of the sliding window).
+    live = jnp.bool_(True)
+    if causal:
+        # dead if even the last q row of this block precedes the k block
+        live &= (ki * block_k) <= (qi * block_q + q_offset + block_q - 1)
+    if sliding_window:
+        live &= (ki * block_k + block_k - 1) > (
+            qi * block_q + q_offset - sliding_window)
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)                  # (bk, D)
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+        mask = k_pos < kv_len                                 # ragged tail
+        if causal:
+            mask &= k_pos <= q_pos
+        if sliding_window:
+            mask &= k_pos > q_pos - sliding_window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                                   # (bq, 1)
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                                # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "sliding_window", "q_offset", "scale",
+                     "block_q", "block_k", "interpret"))
+def flash_attention(
+    q: jax.Array,            # (B, Tq, Hq, D)
+    k: jax.Array,            # (B, Tk, Hkv, D)
+    v: jax.Array,            # (B, Tk, Hkv, D)
+    *,
+    causal: bool = True,
+    sliding_window: int = 0,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Tq, Hq, D = q.shape
+    _, Tk, Hkv, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    scale = float(scale) if scale is not None else D ** -0.5
+
+    block_q = min(block_q, Tq)
+    block_k = min(block_k, Tk)
+
+    # (B, H, T, D) layout: last two dims are the MXU tile
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+
+    nq = pl.cdiv(Tq, block_q)
+    nk = pl.cdiv(Tk, block_k)
+    grid = (B, Hq, nq, nk)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal,
+        sliding_window=sliding_window, block_q=block_q, block_k=block_k,
+        kv_len=Tk, q_offset=q_offset)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, i, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, i, j: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Tq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),   # acc
+            pltpu.VMEM((block_q, 1), jnp.float32),   # m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # l
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,148 @@
+"""Flash attention in pure jnp (lax.scan over KV blocks, custom VJP).
+
+This is the portable twin of the Pallas kernel: identical semantics
+(causal, GQA, sliding window, online softmax) with O(T * block) live
+memory in BOTH passes — forward saves only (out, logsumexp); backward
+recomputes probabilities blockwise from the saved stats.
+
+GQA is handled natively in the einsums (q reshaped to (Hkv, group)); KV
+heads are never expanded, so the live working set stays at the GQA cache
+size — this matters at kv=4 x 32k where an expanded KV would be 8x larger.
+
+It is the path the multi-device dry-run lowers (Pallas TPU kernels don't
+lower on the CPU host platform), so the compiled memory profile matches
+what the TPU kernel delivers: no (Tq, Tk) tensor ever exists in HBM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as _mcommon
+
+NEG_INF = -1e30
+
+
+def _mask(q_pos, k_pos, causal, window):
+    mask = None
+    if causal:
+        mask = k_pos[None, :] <= q_pos[:, None]
+    if window:
+        w = k_pos[None, :] > q_pos[:, None] - window
+        mask = w if mask is None else (mask & w)
+    return mask
+
+
+def _chunk(x, nk, bk):
+    """(B, Tk, H, D) -> (nk, B, bk, H, D), zero-padded."""
+    B, Tk, H, D = x.shape
+    pad = nk * bk - Tk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return x.reshape(B, nk, bk, H, D).transpose(1, 0, 2, 3, 4)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention_jnp(q, k, v, causal=True, sliding_window=0,
+                        q_offset=0, scale=None, block_k=1024):
+    out, _ = _fwd_impl(q, k, v, causal, sliding_window, q_offset, scale,
+                       block_k)
+    return out
+
+
+def _fwd_impl(q, k, v, causal, sliding_window, q_offset, scale, block_k):
+    B, Tq, Hq, D = q.shape
+    _, Tk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    bk = min(block_k, Tk)
+    nk = -(-Tk // bk)
+
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Tq, Hkv, G, D)
+    kc = _chunk(k, nk, bk)
+    vc = _chunk(v, nk, bk)
+    q_pos = jnp.arange(Tq) + q_offset
+
+    def body(carry, xs):
+        acc, m, l = carry
+        ki, k_blk, v_blk = xs
+        k_blk = k_blk.astype(jnp.float32)
+        v_blk = v_blk.astype(jnp.float32)
+        k_pos = ki * bk + jnp.arange(bk)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k_blk)
+        live = k_pos < Tk
+        msk = _mask(q_pos, k_pos, causal, sliding_window)
+        msk = live[None, :] if msk is None else (msk & live[None, :])
+        s = jnp.where(msk[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(-1, keepdims=True)
+        acc = acc * alpha[..., 0].transpose(0, 3, 1, 2)[..., None] \
+            + jnp.einsum("bhgqk,bkhd->bqhgd", p, v_blk)
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((B, Tq, Hkv, G, D), jnp.float32)
+    m0 = jnp.full((B, Hkv, G, Tq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Tq, 1), jnp.float32)
+    (acc, m, l), _ = _mcommon.scan(body, (acc0, m0, l0),
+                                   (jnp.arange(nk), kc, vc))
+    l_safe = jnp.maximum(l, 1e-30)
+    out = acc / l_safe[..., 0].transpose(0, 3, 1, 2)[..., None]
+    lse = m + jnp.log(l_safe)                     # (B,Hkv,G,Tq,1)
+    return out.reshape(B, Tq, Hq, D).astype(q.dtype), lse
+
+
+def _fwd(q, k, v, causal, sliding_window, q_offset, scale, block_k):
+    out, lse = _fwd_impl(q, k, v, causal, sliding_window, q_offset, scale,
+                         block_k)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd(causal, sliding_window, q_offset, scale, block_k, res, g):
+    q, k, v, out, lse = res
+    B, Tq, Hq, D = q.shape
+    _, Tk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    sc = scale if scale is not None else D ** -0.5
+    bk = min(block_k, Tk)
+    nk = -(-Tk // bk)
+
+    qf = q.astype(jnp.float32).reshape(B, Tq, Hkv, G, D)
+    kc = _chunk(k, nk, bk)
+    vc = _chunk(v, nk, bk)
+    gf = g.astype(jnp.float32).reshape(B, Tq, Hkv, G, D)
+    of = out.astype(jnp.float32).reshape(B, Tq, Hkv, G, D)
+    delta = jnp.einsum("bqhgd,bqhgd->bhgq", gf, of)[..., None]
+    q_pos = jnp.arange(Tq) + q_offset
+
+    def body(dq, xs):
+        ki, k_blk, v_blk = xs
+        k_blk = k_blk.astype(jnp.float32)
+        v_blk = v_blk.astype(jnp.float32)
+        k_pos = ki * bk + jnp.arange(bk)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf * sc, k_blk)
+        live = k_pos < Tk
+        msk = _mask(q_pos, k_pos, causal, sliding_window)
+        msk = live[None, :] if msk is None else (msk & live[None, :])
+        s = jnp.where(msk[None, None, None], s, NEG_INF)
+        p = jnp.exp(s - lse)                              # (B,Hkv,G,Tq,bk)
+        dp = jnp.einsum("bqhgd,bkhd->bhgqk", gf, v_blk)
+        ds = p * (dp - delta) * sc
+        dq = dq + jnp.einsum("bhgqk,bkhd->bqhgd", ds, k_blk)
+        dk_blk = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qf)
+        dv_blk = jnp.einsum("bhgqk,bqhgd->bkhd", p, gf)
+        return dq, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((B, Tq, Hkv, G, D), jnp.float32)
+    dq, (dk_c, dv_c) = _mcommon.scan(body, dq0, (jnp.arange(nk), kc, vc))
+    dk = dk_c.transpose(1, 0, 2, 3, 4).reshape(B, nk * bk, Hkv, D)[:, :Tk]
+    dv = dv_c.transpose(1, 0, 2, 3, 4).reshape(B, nk * bk, Hkv, D)[:, :Tk]
+    return (dq.reshape(B, Tq, Hq, D).astype(q.dtype),
+            dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+flash_attention_jnp.defvjp(_fwd, _bwd)

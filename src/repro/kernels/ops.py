@@ -1,0 +1,222 @@
+"""Public kernel ops: platform dispatch + differentiable wrappers.
+
+Models call these, never the kernels directly.  Dispatch policy:
+  * TPU      -> Pallas kernel (compiled)
+  * CPU/GPU  -> pure-jnp oracle from ``ref.py`` (exact semantics; this is
+                also the path the multi-device dry-run lowers, so lowering
+                never depends on Pallas TPU lowering support)
+  * tests    -> ``force="interpret"`` runs the Pallas kernel body in
+                interpret mode against the oracle.
+
+Backward passes: pallas forwards carry a ``jax.custom_vjp`` whose backward
+recomputes activations chunk-wise in jnp (flash-style: O(chunk) live
+memory, not O(T^2) / O(V)).  The oracle path is plainly differentiable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.chunked_ce import chunked_cross_entropy as _ce_pallas
+from repro.kernels.flash_attention import flash_attention as _fa_pallas
+from repro.kernels.flash_jnp import flash_attention_jnp
+from repro.kernels.mamba2_ssd import mamba2_scan as _ssd_pallas
+from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv_pallas
+
+Mode = Optional[str]  # None (auto) | "ref" | "pallas" | "interpret" | "naive"
+# "naive": materializing oracles with NO internal lax loops — used by the
+# dry-run COSTING lowering, because XLA cost_analysis counts a while-loop
+# body once regardless of trip count (verified; see EXPERIMENTS.md §Dry-run
+# methodology).  Never use for execution at scale.
+
+
+def _backend(force: Mode) -> str:
+    if force in ("ref", "pallas", "interpret", "naive"):
+        return force
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+# sequences above this use the chunked-jnp flash path on non-TPU
+# backends (the naive oracle would materialize a (Tq, Tk) tensor)
+_REF_NAIVE_MAX_T = 2048
+
+
+def attention(q, k, v, *, causal=True, sliding_window=0, q_offset=0,
+              scale=None, block_q=128, block_k=128, force: Mode = None):
+    be = _backend(force)
+    if be == "naive":
+        return ref.attention(q, k, v, causal=causal,
+                             sliding_window=sliding_window,
+                             q_offset=q_offset, scale=scale)
+    if be == "ref":
+        if q.shape[1] * k.shape[1] < _REF_NAIVE_MAX_T ** 2:
+            return ref.attention(q, k, v, causal=causal,
+                                 sliding_window=sliding_window,
+                                 q_offset=q_offset, scale=scale)
+        return flash_attention_jnp(q, k, v, causal, sliding_window,
+                                   q_offset, scale)
+    interpret = be == "interpret"
+    return _fa_vjp(q, k, v, causal, sliding_window, q_offset, scale,
+                   block_q, block_k, interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def _fa_vjp(q, k, v, causal, sliding_window, q_offset, scale, block_q,
+            block_k, interpret):
+    return _fa_pallas(q, k, v, causal=causal, sliding_window=sliding_window,
+                      q_offset=q_offset, scale=scale, block_q=block_q,
+                      block_k=block_k, interpret=interpret)
+
+
+def _fa_fwd(q, k, v, causal, sliding_window, q_offset, scale, block_q,
+            block_k, interpret):
+    out = _fa_vjp(q, k, v, causal, sliding_window, q_offset, scale,
+                  block_q, block_k, interpret)
+    return out, (q, k, v)
+
+
+def _fa_bwd(causal, sliding_window, q_offset, scale, block_q, block_k,
+            interpret, res, g):
+    q, k, v = res
+    # recompute-based backward, chunked over q blocks: live memory is
+    # (block_q x Tk) per chunk instead of (Tq x Tk).
+    B, Tq, Hq, D = q.shape
+    cq = min(block_q * 4, Tq)
+    nchunks = -(-Tq // cq)
+
+    def chunk_grad(i):
+        start = i * cq
+        qs = jax.lax.dynamic_slice_in_dim(q, start, cq, axis=1)
+        gs = jax.lax.dynamic_slice_in_dim(g, start, cq, axis=1)
+
+        def f(qs_, k_, v_):
+            return ref.attention(qs_, k_, v_, causal=causal,
+                                 sliding_window=sliding_window,
+                                 q_offset=q_offset + start, scale=scale)
+
+        _, vjp = jax.vjp(f, qs, k, v)
+        return vjp(gs)
+
+    dqs, dks, dvs = [], [], []
+    for i in range(nchunks):  # unrolled: nchunks is static & small
+        dq_i, dk_i, dv_i = chunk_grad(i)
+        dqs.append(dq_i)
+        dks.append(dk_i)
+        dvs.append(dv_i)
+    dq = jnp.concatenate(dqs, axis=1)[:, :Tq]
+    dk = sum(dks)
+    dv = sum(dvs)
+    return dq, dk, dv
+
+
+_fa_vjp.defvjp(_fa_fwd, _fa_bwd)
+
+
+# --------------------------------------------------------------------------
+# rwkv6
+# --------------------------------------------------------------------------
+def rwkv6(r, k, v, w, u, initial_state=None, *, block_t=128,
+          force: Mode = None):
+    be = _backend(force)
+    if be in ("ref", "naive"):
+        return ref.rwkv6_scan(r, k, v, w, u, initial_state)
+    return _rwkv_pallas(r, k, v, w, u, initial_state, block_t=block_t,
+                        interpret=(be == "interpret"))
+
+
+# --------------------------------------------------------------------------
+# mamba2
+# --------------------------------------------------------------------------
+def mamba2(x, dt, A, Bm, Cm, D, initial_state=None, *, block_t=128,
+           force: Mode = None):
+    be = _backend(force)
+    if be in ("ref", "naive"):
+        return ref.mamba2_scan(x, dt, A, Bm, Cm, D, initial_state)
+    return _ssd_pallas(x, dt, A, Bm, Cm, D, initial_state, block_t=block_t,
+                       interpret=(be == "interpret"))
+
+
+# --------------------------------------------------------------------------
+# cross-entropy over large vocab
+# --------------------------------------------------------------------------
+def cross_entropy(hidden, lm_head, labels, *, block_t=256, block_v=2048,
+                  force: Mode = None):
+    be = _backend(force)
+    if be == "naive":
+        return ref.cross_entropy_logits(hidden, lm_head, labels)
+    if be == "ref":
+        return _ce_chunked_jnp(hidden, lm_head, labels)
+    if be == "interpret":
+        return _ce_pallas(hidden, lm_head, labels, block_t=block_t,
+                          block_v=block_v, interpret=True)
+    return _ce_custom(hidden, lm_head, labels, block_t, block_v)
+
+
+def _ce_chunked_jnp(hidden, lm_head, labels, chunk=2048):
+    """Differentiable chunked CE in pure jnp (scan over token chunks) —
+    never materializes the full (B*T, V) logits.  Used on CPU and as the
+    dry-run lowering path (memory profile matches the Pallas kernel)."""
+    from repro.models import common as _mcommon
+    B, T, Dm = hidden.shape
+    BT = B * T
+    if _mcommon._SCAN_UNROLL:
+        # costing mode unrolls this scan; keep the body count tractable
+        chunk = max(chunk, BT // 8)
+    h = hidden.reshape(BT, Dm)
+    lbl = labels.reshape(BT)
+    chunk = min(chunk, BT)
+    pad = (-BT) % chunk
+    if pad:
+        h = jnp.concatenate([h, jnp.zeros((pad, Dm), h.dtype)])
+        lbl = jnp.concatenate([lbl, jnp.full((pad,), -100, lbl.dtype)])
+    hc = h.reshape(-1, chunk, Dm)
+    lc = lbl.reshape(-1, chunk)
+
+    def body(carry, xs):
+        hs, ls = xs
+        logits = hs.astype(jnp.float32) @ lm_head.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(ls, 0)[:, None], axis=-1)[:, 0]
+        valid = ls >= 0
+        nll = jnp.where(valid, logz - gold, 0.0)
+        return carry + nll.sum(), valid.sum()
+
+    from repro.models import common as _mc2
+    total, ns = _mc2.scan(body, jnp.float32(0.0), (hc, lc))
+    n = jnp.maximum(ns.sum(), 1)
+    return total / n, n
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _ce_custom(hidden, lm_head, labels, block_t, block_v):
+    loss, _ = _ce_pallas(hidden, lm_head, labels, block_t=block_t,
+                         block_v=block_v)
+    return loss, jnp.maximum((labels >= 0).sum(), 1)
+
+
+def _ce_fwd(hidden, lm_head, labels, block_t, block_v):
+    out = _ce_custom(hidden, lm_head, labels, block_t, block_v)
+    return out, (hidden, lm_head, labels)
+
+
+def _ce_bwd(block_t, block_v, res, g):
+    hidden, lm_head, labels = res
+    gloss = g[0]
+
+    def f(h_, w_):
+        return _ce_chunked_jnp(h_, w_, labels)[0]
+
+    _, vjp = jax.vjp(f, hidden, lm_head)
+    dh, dw = vjp(gloss)
+    return dh, dw, None
+
+
+_ce_custom.defvjp(_ce_fwd, _ce_bwd)

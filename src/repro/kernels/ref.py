@@ -1,0 +1,162 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: tests assert the Pallas kernels
+(interpret=True on CPU, compiled on TPU) match these to tolerance, and the
+portable model path (used for CPU smoke tests and the dry-run lowering)
+calls these directly.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+def attention(
+    q: jax.Array,          # (B, Tq, Hq, D)
+    k: jax.Array,          # (B, Tk, Hkv, D)
+    v: jax.Array,          # (B, Tk, Hkv, D)
+    *,
+    causal: bool = True,
+    sliding_window: int = 0,
+    q_offset: int = 0,     # absolute position of q[0] (decode: Tk - 1)
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Reference GQA attention with optional causal mask / sliding window.
+
+    Returns (B, Tq, Hq, D) in q's dtype; softmax in fp32.
+    """
+    B, Tq, Hq, D = q.shape
+    _, Tk, Hkv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    rep = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if rep > 1:
+        kf = jnp.repeat(kf, rep, axis=2)
+        vf = jnp.repeat(vf, rep, axis=2)
+
+    logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+
+    q_pos = jnp.arange(Tq) + q_offset
+    k_pos = jnp.arange(Tk)
+    mask = jnp.ones((Tq, Tk), dtype=bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if sliding_window:
+        mask &= k_pos[None, :] > q_pos[:, None] - sliding_window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# RWKV6 (Finch) WKV recurrence with data-dependent decay
+# --------------------------------------------------------------------------
+def rwkv6_scan(
+    r: jax.Array,   # (B, T, H, D) receptance
+    k: jax.Array,   # (B, T, H, D) key
+    v: jax.Array,   # (B, T, H, D) value
+    w: jax.Array,   # (B, T, H, D) per-channel decay logits; decay = exp(-exp(w))
+    u: jax.Array,   # (H, D) bonus for current token
+    initial_state: Optional[jax.Array] = None,  # (B, H, D, D)
+):
+    """Reference WKV6:  S_t = diag(d_t) S_{t-1} + k_t v_t^T,
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T),  d_t = exp(-exp(w_t)).
+
+    Returns (y, final_state): y (B,T,H,D), state (B,H,D,D) fp32.
+    """
+    B, T, H, D = r.shape
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    decay = jnp.exp(-jnp.exp(w.astype(jnp.float32)))
+    uf = u.astype(jnp.float32)
+
+    if initial_state is None:
+        initial_state = jnp.zeros((B, H, D, D), jnp.float32)
+
+    def step(S, xs):
+        r_t, k_t, v_t, d_t = xs          # each (B, H, D)
+        kv = k_t[..., :, None] * v_t[..., None, :]      # (B,H,D,D) outer
+        y = jnp.einsum("bhd,bhde->bhe", r_t, S + uf[None, :, :, None] * kv)
+        S_new = d_t[..., :, None] * S + kv
+        return S_new, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, decay))
+    final, ys = jax.lax.scan(step, initial_state, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(r.dtype)          # (B,T,H,D)
+    return y, final
+
+
+# --------------------------------------------------------------------------
+# Mamba2 SSD scan
+# --------------------------------------------------------------------------
+def mamba2_scan(
+    x: jax.Array,    # (B, T, H, P)   inner activations, P = head_dim
+    dt: jax.Array,   # (B, T, H)      softplus-activated step sizes (>0)
+    A: jax.Array,    # (H,)           negative state decay rates (A < 0)
+    Bm: jax.Array,   # (B, T, N)      input projection (shared across heads)
+    Cm: jax.Array,   # (B, T, N)      output projection
+    D: jax.Array,    # (H,)           skip connection
+    initial_state: Optional[jax.Array] = None,  # (B, H, P, N)
+):
+    """Reference Mamba2 SSD:  h_t = exp(A dt_t) h_{t-1} + dt_t (B_t ⊗ x_t),
+    y_t = C_t · h_t + D x_t.   Returns (y, final_state)."""
+    B, T, H, P = x.shape
+    N = Bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Df = D.astype(jnp.float32)
+
+    if initial_state is None:
+        initial_state = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def step(h, xs):
+        x_t, dt_t, b_t, c_t = xs   # (B,H,P), (B,H), (B,N), (B,N)
+        da = jnp.exp(Af[None, :] * dt_t)                    # (B,H)
+        dBx = (dt_t[..., None, None] * x_t[..., :, None]
+               * b_t[:, None, None, :])                     # (B,H,P,N)
+        h_new = da[..., None, None] * h + dBx
+        y = jnp.einsum("bhpn,bn->bhp", h_new, c_t)
+        return h_new, y
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    final, ys = jax.lax.scan(step, initial_state, xs)
+    y = jnp.moveaxis(ys, 0, 1) + xf * Df[None, None, :, None]
+    return y.astype(x.dtype), final
+
+
+# --------------------------------------------------------------------------
+# chunked cross-entropy (memory-efficient logits)
+# --------------------------------------------------------------------------
+def cross_entropy_logits(
+    hidden: jax.Array,      # (B, T, D)
+    lm_head: jax.Array,     # (D, V)
+    labels: jax.Array,      # (B, T) int32; -100 = ignore
+):
+    """Reference CE computed with full materialized logits (the thing the
+    chunked kernel avoids).  Returns (mean_loss, n_valid)."""
+    logits = hidden.astype(jnp.float32) @ lm_head.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    valid = labels >= 0
+    n = jnp.maximum(valid.sum(), 1)
+    return jnp.where(valid, nll, 0.0).sum() / n, n

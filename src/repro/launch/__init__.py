@@ -1,0 +1,2 @@
+"""Launch layer: production meshes, sharding rules, dry-run, drivers.
+NOTE: never import repro.launch.dryrun from tests — it sets XLA_FLAGS."""

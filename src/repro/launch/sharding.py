@@ -1,0 +1,222 @@
+"""Sharding rules: param/batch/cache PartitionSpecs per architecture.
+
+Policy (DESIGN.md §5):
+  * TP: weight matrices shard their "wide" dim on ``model``; MoE experts
+    shard the expert dim on ``model`` (expert parallelism).
+  * FSDP (big archs or ``fsdp=True``): the other contraction dim
+    additionally shards on ``data`` so param+optimizer state fits HBM
+    (needed for qwen3-moe 235B / llama4 400B: ~6 bytes/param of train
+    state vs 16 GB/chip).
+  * ``pod`` is pure DP: params replicated across pods, batch sharded.
+  * batch shards on ("pod","data"); decode KV caches shard batch on
+    ``data`` and the sequence dim on ``model`` (GQA kv-head counts are
+    below 16, so head-sharding alone cannot use the model axis).
+
+Rules are (regex over param path) -> PartitionSpec templates, resolved
+against the actual mesh axis names.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+
+FSDP_THRESHOLD = 30e9  # params above this always shard on data too
+
+
+def needs_fsdp(cfg: ModelConfig) -> bool:
+    return cfg.param_count() > FSDP_THRESHOLD
+
+
+# --------------------------------------------------------------------------
+# param rules
+# --------------------------------------------------------------------------
+def _rules(cfg: ModelConfig, fsdp: bool):
+    """[(path_regex, spec_without_leading_stack_dims)].  Specs are given
+    for the LAST dims of the leaf; leading stacked dims (units/layers/
+    groups) are padded with None."""
+    d_axis = "data" if fsdp else None
+    R = [
+        # --- attention ---
+        (r".*attn.*/wq$", (d_axis, "model")),
+        (r".*attn.*/wk$", (d_axis, "model")),
+        (r".*attn.*/wv$", (d_axis, "model")),
+        (r".*attn.*/wo$", ("model", d_axis)),
+        (r".*attn.*/b[qkv]$", ("model",)),
+        # --- dense mlp ---
+        (r".*mlp/w_gate$", (d_axis, "model")),
+        (r".*mlp/w_up$", (d_axis, "model")),
+        (r".*mlp/w_down$", ("model", d_axis)),
+        (r".*/(w1|b1)$", (d_axis, "model")),
+        (r".*/w2$", ("model", d_axis)),
+        (r".*/b2$", (None,)),
+        # --- moe: expert dim on model (EP); FSDP shards expert ffn dim ---
+        (r".*moe/w_gate$", ("model", None, d_axis)),
+        (r".*moe/w_up$", ("model", None, d_axis)),
+        (r".*moe/w_down$", ("model", d_axis, None)),
+        (r".*moe/router$", (None, None)),
+        (r".*moe/shared_gate$", (d_axis, "model")),
+        (r".*moe/shared_up$", (d_axis, "model")),
+        (r".*moe/shared_down$", ("model", d_axis)),
+        # --- rwkv time/channel mix ---
+        (r".*/(wr|wk|wv|wg|wo)$", (d_axis, "model")),
+        (r".*/mix_lora_a$", (d_axis, None)),
+        (r".*/mix_lora_b$", (None, None, "model")),
+        (r".*/w_lora_a$", (d_axis, None)),
+        (r".*/w_lora_b$", (None, "model")),
+        (r".*/cm_k$", (d_axis, "model")),
+        (r".*/cm_v$", ("model", d_axis)),
+        (r".*/cm_r$", (d_axis, "model")),
+        (r".*/bonus_u$", (None, None)),
+        # --- mamba ---
+        (r".*/in_proj$", (d_axis, "model")),
+        (r".*/out_proj$", ("model", d_axis)),
+        (r".*/conv_w$", (None, "model")),
+        (r".*/conv_b$", ("model",)),
+        # --- embeddings / head ---
+        (r"^embed$", ("model", d_axis)),
+        (r"^(lm_head)$", (d_axis, "model")),
+        (r"^(pos_dec|pos_enc|pos|cls)$", None),
+        (r".*classifier/w$", (None, None)),
+    ]
+    return R
+
+
+def _stack_depth(path: str, cfg: ModelConfig) -> int:
+    """Number of leading stacked dims for this leaf (scan axes)."""
+    if cfg.family == "hybrid" and "mamba_groups" in path:
+        return 2  # (groups, per-group)
+    for key in ("units/", "layers/", "enc_layers/", "dec_layers/",
+                "blocks/"):
+        if key in path:
+            return 1
+    if path == "invocation_norms":
+        return 1
+    return 0
+
+
+def param_specs(cfg: ModelConfig, params_shape, mesh: Mesh,
+                fsdp: Optional[bool] = None) -> Any:
+    """PartitionSpec pytree matching ``params_shape`` (a ShapeDtypeStruct
+    pytree from eval_shape)."""
+    fsdp = needs_fsdp(cfg) if fsdp is None else fsdp
+    rules = _rules(cfg, fsdp)
+    axis_names = set(mesh.axis_names)
+
+    def spec_for(path: str, leaf) -> P:
+        nd = len(leaf.shape)
+        stack = _stack_depth(path, cfg)
+        for pat, tmpl in rules:
+            if re.search(pat, path):
+                if tmpl is None:
+                    return P()
+                tail = [a if (a in axis_names) else None for a in tmpl]
+                tail = tail[-(nd - stack):] if nd - stack else []
+                spec = [None] * stack + list(tail)
+                spec = spec[:nd] + [None] * (nd - len(spec))
+                # drop axes that don't divide the dim
+                out = []
+                for dim, ax in zip(leaf.shape, spec):
+                    if ax is None:
+                        out.append(None)
+                    else:
+                        size = mesh.shape[ax]
+                        out.append(ax if dim % size == 0 else None)
+                return P(*out)
+        return P()  # replicated default (norms, biases, scalars)
+
+    return _map_with_path(spec_for, params_shape)
+
+
+def _map_with_path(fn, tree, prefix=""):
+    if isinstance(tree, dict):
+        return {k: _map_with_path(fn, v, f"{prefix}{k}/") for k, v in
+                tree.items()}
+    if isinstance(tree, (list, tuple)):
+        seq = [_map_with_path(fn, v, f"{prefix}{i}/")
+               for i, v in enumerate(tree)]
+        return type(tree)(seq) if not isinstance(tree, tuple) else tuple(seq)
+    return fn(prefix[:-1], tree)
+
+
+# --------------------------------------------------------------------------
+# batch / cache rules
+# --------------------------------------------------------------------------
+def batch_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh) -> Dict:
+    """Specs for the input_specs() dict."""
+    baxes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    b = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+
+    def fits(dim_size, ax):
+        if ax is None:
+            return None
+        sz = int(np.prod([mesh.shape[a] for a in
+                          (ax if isinstance(ax, tuple) else (ax,))]))
+        return ax if dim_size % sz == 0 else None
+
+    def batch_leading(leaf_name: str, leaf):
+        nd = len(leaf.shape)
+        if leaf_name == "mrope_positions":
+            return P(None, fits(leaf.shape[1], b), *([None] * (nd - 2)))
+        if leaf_name == "cache_index":
+            return P()
+        return P(fits(leaf.shape[0], b), *([None] * (nd - 1)))
+
+    from repro.configs.shapes import input_specs
+    specs = input_specs(cfg, shape)
+    out = {}
+    for k, v in specs.items():
+        if k == "cache":
+            out[k] = cache_specs_sharding(cfg, v, mesh)
+        else:
+            out[k] = batch_leading(k, v)
+    return out
+
+
+def cache_specs_sharding(cfg: ModelConfig, cache: Dict, mesh: Mesh) -> Dict:
+    """Decode cache: batch on data axes, sequence dim on model."""
+    baxes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    b = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+    m = "model" if "model" in mesh.axis_names else None
+
+    def spec(name, leaf):
+        shp = leaf.shape
+
+        def fits(dim_size, ax):
+            if ax is None:
+                return None
+            sz = int(np.prod([mesh.shape[a] for a in
+                              (ax if isinstance(ax, tuple) else (ax,))]))
+            return ax if dim_size % sz == 0 else None
+
+        if name in ("k", "v"):            # (L, B, S, Hkv, hd)
+            return P(None, fits(shp[1], b), fits(shp[2], m), None, None)
+        if name == "enc_out":             # (B, S, D)
+            return P(fits(shp[0], b), None, fits(shp[2], m))
+        if name == "rwkv_state":          # (L, B, H, D, D)
+            return P(None, fits(shp[1], b), fits(shp[2], m), None, None)
+        if name == "rwkv_shift":          # (L, 2, B, D)
+            return P(None, None, fits(shp[2], b), fits(shp[3], m))
+        if name == "ssm_state":           # (L, B, nh, hd, N)
+            return P(None, fits(shp[1], b), fits(shp[2], m), None, None)
+        if name == "conv_state":          # (L, B, K, din)
+            return P(None, fits(shp[1], b), None, fits(shp[3], m))
+        return P()
+
+    return {k: spec(k, v) for k, v in cache.items()}
+
+
+def opt_state_specs(param_spec_tree):
+    """Optimizer slots mirror their parameter's sharding."""
+    return param_spec_tree
+
+
+def to_named(tree_specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))

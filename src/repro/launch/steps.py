@@ -1,0 +1,261 @@
+"""pjit-able step functions (train / prefill / decode) + FeDepth block step.
+
+These are what the dry-run lowers and what train.py/serve.py run.  Params
+are bf16 (compute) with fp32 SGD-momentum slots — the paper's optimizer,
+priced exactly like ``core.memory_model`` assumes (optimizer_slots=2:
+master-grade fp32 momentum + bf16 params counted via params+grads).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.configs.shapes import cache_specs, input_specs
+from repro.models import build
+from repro.models.api import LM
+
+
+def abstract_params(lm: LM, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree of the model params — no allocation."""
+    return jax.eval_shape(
+        lambda: lm.init(jax.random.PRNGKey(0), dtype=dtype))
+
+
+def abstract_opt_state(params_shape):
+    """fp32 momentum slot per param."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params_shape)
+
+
+# --------------------------------------------------------------------------
+# training
+# --------------------------------------------------------------------------
+def make_train_step(lm: LM, *, lr: float = 1e-3, momentum: float = 0.9,
+                    clip_norm: float = 1.0, accum_steps: int = 1,
+                    grad_shardings=None, microbatch_shardings=None,
+                    kernel_force=None):
+    """Full-model SGD-momentum train step (the paper-faithful baseline a
+    memory-rich client runs; also the standard pretraining step).
+
+    ``accum_steps > 1`` splits the batch into microbatches and accumulates
+    fp32 grads in a lax.scan: live activation memory is one microbatch,
+    the standard way a 4M-token global batch fits 16 GB/chip HBM.
+    """
+
+    def loss_fn(p, batch):
+        loss, metrics = lm.loss_fn(p, batch, kernel_force=kernel_force)
+        return loss, metrics
+
+    def train_step(params, momentum_state, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def to_micro(path, x):
+                # mrope_positions carries batch on dim 1 ((3, B, T))
+                bdim = 1 if (path and getattr(path[-1], "key", None)
+                             == "mrope_positions") else 0
+                if x.ndim == 0:
+                    return x
+                shp = (x.shape[:bdim]
+                       + (accum_steps, x.shape[bdim] // accum_steps)
+                       + x.shape[bdim + 1:])
+                x = x.reshape(shp)
+                return jnp.moveaxis(x, bdim, 0)
+
+            micro = jax.tree_util.tree_map_with_path(to_micro, batch)
+            if microbatch_shardings is not None:
+                # without this, propagation can leave the microbatch
+                # unsharded on batch and the whole step loses DP sharding
+                micro = jax.lax.with_sharding_constraint(
+                    micro, microbatch_shardings)
+
+            def micro_step(acc, mb):
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                acc_g, acc_l = acc
+                acc_g = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32) / accum_steps,
+                    acc_g, g)
+                return (acc_g, acc_l + l / accum_steps), m
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            if grad_shardings is not None:
+                # keep the fp32 accumulator sharded like the params —
+                # without this XLA replicates it (24 GB for a 6B model)
+                g0 = jax.lax.with_sharding_constraint(g0, grad_shardings)
+            (grads, loss), metrics = jax.lax.scan(
+                micro_step, (g0, jnp.float32(0.0)), micro)
+            metrics = jax.tree.map(lambda x: x[-1], metrics)
+
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+        momentum_state = jax.tree.map(
+            lambda v, g: momentum * v + g.astype(jnp.float32) * scale,
+            momentum_state, grads)
+        params = jax.tree.map(
+            lambda p, v: (p.astype(jnp.float32) - lr * v).astype(p.dtype),
+            params, momentum_state)
+        return params, momentum_state, {"loss": loss, "gnorm": gnorm,
+                                        **metrics}
+
+    return train_step
+
+
+def make_fedepth_block_step(lm: LM, lo: int, hi: int, *, lr: float = 1e-3,
+                            momentum: float = 0.9, accum_steps: int = 1,
+                            buffered_z: bool = False,
+                            microbatch_shardings=None, kernel_force=None):
+    """The paper's technique as a datacenter train step: differentiate only
+    units [lo, hi) + head; prefix runs under stop_gradient.  Optimizer
+    state exists ONLY for the block.
+
+    ``accum_steps``: microbatch gradient accumulation (same motivation as
+    the full step — one microbatch's activations live at a time).
+    ``buffered_z``: the paper's z_{j-1} buffering — the batch carries the
+    PRECOMPUTED prefix activation ``z_in`` (B,T,D) instead of tokens, so
+    the step skips the prefix forward entirely (the buffer is written once
+    per schedule pass and lives in HBM between block steps)."""
+    from repro.core import blockwise
+    runner = blockwise.lm_runner(lm, kernel_force=kernel_force)
+
+    def one_loss(params, train, batch):
+        if buffered_z:
+            z = batch["z_in"]
+        else:
+            z = runner.embed(params, batch)
+            if lo > 0:
+                z = runner.apply_units(params, z, 0, lo)
+        return blockwise.block_loss_fn(runner, params, train, z, batch,
+                                       lo, hi, hi - 1)
+
+    def block_step(params, block_momentum, batch):
+        train = runner.split(params, lo, hi)
+
+        if accum_steps == 1:
+            loss, grads = jax.value_and_grad(
+                lambda tp: one_loss(params, tp, batch))(train)
+        else:
+            def to_micro(path, x):
+                bdim = 1 if (path and getattr(path[-1], "key", None)
+                             == "mrope_positions") else 0
+                if x.ndim == 0:
+                    return x
+                shp = (x.shape[:bdim]
+                       + (accum_steps, x.shape[bdim] // accum_steps)
+                       + x.shape[bdim + 1:])
+                return jnp.moveaxis(x.reshape(shp), bdim, 0)
+
+            micro = jax.tree_util.tree_map_with_path(to_micro, batch)
+            if microbatch_shardings is not None:
+                micro = jax.lax.with_sharding_constraint(
+                    micro, microbatch_shardings)
+
+            def micro_step(acc, mb):
+                l, g = jax.value_and_grad(
+                    lambda tp: one_loss(params, tp, mb))(train)
+                acc_g, acc_l = acc
+                acc_g = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32) / accum_steps,
+                    acc_g, g)
+                return (acc_g, acc_l + l / accum_steps), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              train)
+            (grads, loss), _ = jax.lax.scan(
+                micro_step, (g0, jnp.float32(0.0)), micro)
+
+        block_momentum = jax.tree.map(
+            lambda v, g: momentum * v + g.astype(jnp.float32),
+            block_momentum, grads)
+        train = jax.tree.map(
+            lambda p, v: (p.astype(jnp.float32) - lr * v).astype(p.dtype),
+            train, block_momentum)
+        params = runner.merge(params, train, lo=lo, hi=hi)
+        return params, block_momentum, {"loss": loss}
+
+    return block_step, runner
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+def make_prefill_step(lm: LM, *, kernel_force=None):
+    def prefill_step(params, batch):
+        return lm.prefill(params, batch, kernel_force=kernel_force)
+
+    return prefill_step
+
+
+def make_decode_step(lm: LM, *, kernel_force=None):
+    def decode_step(params, batch):
+        tokens = batch["tokens"]
+        cache = batch["cache"]
+        idx = batch["cache_index"]
+        logits, new_cache = lm.decode_step(
+            params, tokens, cache, idx,
+            mrope_positions=batch.get("mrope_positions"),
+            kernel_force=kernel_force)
+        return logits, new_cache
+
+    return decode_step
+
+
+def make_multi_decode_step(lm: LM, n_tokens: int, *, kernel_force=None):
+    """Decode N tokens per dispatch (greedy feedback).  Loop-invariant
+    weight collectives (the FSDP all-gathers that dominate single-token
+    decode for 400B models) are hoisted/CSE'd by XLA across the token
+    loop, amortizing them by N."""
+
+    def multi_decode(params, batch):
+        cache = batch["cache"]
+        idx = batch["cache_index"]
+        tok = batch["tokens"]
+
+        def body(carry, _):
+            tok, cache, idx = carry
+            logits, cache = lm.decode_step(params, tok, cache, idx,
+                                           kernel_force=kernel_force)
+            nxt = jnp.argmax(logits[:, -1], -1)[:, None]
+            return (nxt, cache, idx + 1), logits
+
+        from repro.models import common as _c
+        (tok, cache, idx), logits = _c.scan(body, (tok, cache, idx), None,
+                                            length=n_tokens)
+        return logits, cache
+
+    return multi_decode
+
+
+def step_for_shape(lm: LM, shape: InputShape, *, kernel_force=None,
+                   fedepth_block: Optional[Tuple[int, int]] = None,
+                   accum_steps: int = 1, grad_shardings=None,
+                   microbatch_shardings=None, buffered_z: bool = False,
+                   decode_tokens: int = 1):
+    """(step_fn, needs_opt_state) for the shape's mode."""
+    if shape.mode == "train":
+        if fedepth_block is not None:
+            lo, hi = fedepth_block
+            fn, _ = make_fedepth_block_step(
+                lm, lo, hi, accum_steps=accum_steps,
+                buffered_z=buffered_z,
+                microbatch_shardings=microbatch_shardings,
+                kernel_force=kernel_force)
+            return fn, True
+        return make_train_step(lm, kernel_force=kernel_force,
+                               accum_steps=accum_steps,
+                               grad_shardings=grad_shardings,
+                               microbatch_shardings=microbatch_shardings), True
+    if shape.mode == "prefill":
+        return make_prefill_step(lm, kernel_force=kernel_force), False
+    if decode_tokens > 1:
+        return make_multi_decode_step(lm, decode_tokens,
+                                      kernel_force=kernel_force), False
+    return make_decode_step(lm, kernel_force=kernel_force), False

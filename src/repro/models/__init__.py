@@ -1,0 +1,2 @@
+"""Model substrate: all assigned architecture families in pure JAX."""
+from repro.models.api import LM, build, init_cache  # noqa: F401

@@ -1,0 +1,97 @@
+"""Unified model API over all families.
+
+``build(cfg)`` -> ``LM`` with:
+  init(key, dtype)           params
+  loss_fn(params, batch)     (loss, metrics)       [train_4k]
+  prefill(params, batch)     last-token logits      [prefill_32k]
+  decode_step(params, tokens, cache, idx) -> (logits, cache)  [decode shapes]
+  init_cache(batch, seq_len) zeroed decode cache
+  num_blocks / forward range hooks consumed by repro.core (FeDepth)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import rwkv6, transformer, whisper, zamba2
+
+
+@dataclasses.dataclass(frozen=True)
+class LM:
+    cfg: ModelConfig
+    module: Any  # the family module
+
+    def init(self, key, dtype=jnp.float32):
+        return self.module.init(key, self.cfg, dtype)
+
+    def loss_fn(self, params, batch, *, kernel_force=None):
+        return self.module.loss_fn(params, self.cfg, batch,
+                                   kernel_force=kernel_force)
+
+    def prefill(self, params, batch, *, kernel_force=None):
+        return self.module.prefill(params, self.cfg, batch,
+                                   kernel_force=kernel_force)
+
+    def decode_step(self, params, tokens, cache, cache_index, *,
+                    mrope_positions=None, kernel_force=None):
+        kwargs = {}
+        if mrope_positions is not None:
+            kwargs["mrope_positions"] = mrope_positions
+        return self.module.decode_step(params, self.cfg, tokens, cache,
+                                       cache_index, kernel_force=kernel_force,
+                                       **kwargs)
+
+    # ---- depth structure for FeDepth ------------------------------------
+    @property
+    def num_depth_units(self) -> int:
+        """Finest decomposition granularity (paper: 'finest blocks')."""
+        cfg = self.cfg
+        if cfg.family == "hybrid":
+            return zamba2.group_layout(cfg)[0]
+        if cfg.family == "ssm":
+            return cfg.num_layers
+        if cfg.is_encoder_decoder:
+            return cfg.encoder_layers + cfg.num_layers
+        return cfg.num_layers // cfg.moe_every
+
+    def apply_range(self, params, x, lo: int, hi: int, *, kernel_force=None,
+                    **kw):
+        cfg = self.cfg
+        if cfg.family == "hybrid":
+            return zamba2.apply_group_range(params, cfg, x, lo, hi,
+                                            kernel_force=kernel_force, **kw)
+        if cfg.family == "ssm":
+            return rwkv6.apply_layer_range(params, cfg, x, lo, hi,
+                                           kernel_force=kernel_force, **kw)
+        if cfg.is_encoder_decoder:
+            raise NotImplementedError(
+                "whisper blocks handled via core.blockwise enc/dec split")
+        return transformer.apply_unit_range(params, cfg, x, lo, hi,
+                                            kernel_force=kernel_force, **kw)
+
+    def forward_hidden(self, params, tokens, **kw):
+        return self.module.forward_hidden(params, self.cfg, tokens, **kw)
+
+
+def build(cfg: ModelConfig) -> LM:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return LM(cfg, transformer)
+    if cfg.family == "ssm":
+        return LM(cfg, rwkv6)
+    if cfg.family == "hybrid":
+        return LM(cfg, zamba2)
+    if cfg.family == "audio":
+        return LM(cfg, whisper)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               dtype=jnp.float32) -> Dict[str, jax.Array]:
+    """Zeroed decode cache matching ``configs.shapes.cache_specs``."""
+    from repro.configs.shapes import cache_specs
+    specs = cache_specs(cfg, batch, seq_len)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)

@@ -1,0 +1,136 @@
+"""GQA attention layer (params, forward, decode-with-cache).
+
+Uses ``repro.kernels.ops.attention`` so the TPU path gets the Pallas flash
+kernel and the CPU/dry-run path gets the jnp oracle with identical
+semantics (causal, GQA, sliding window).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import common
+
+
+def init(key, cfg: ModelConfig, dtype=common.DEFAULT_DTYPE):
+    d, hd = cfg.d_model, cfg.head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": common.dense_init(ks[0], (d, nq * hd), dtype=dtype),
+        "wk": common.dense_init(ks[1], (d, nkv * hd), dtype=dtype),
+        "wv": common.dense_init(ks[2], (d, nkv * hd), dtype=dtype),
+        "wo": common.dense_init(ks[3], (nq * hd, d), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nq * hd,), dtype)
+        p["bk"] = jnp.zeros((nkv * hd,), dtype)
+        p["bv"] = jnp.zeros((nkv * hd,), dtype)
+    return p
+
+
+def _project_qkv(p, cfg: ModelConfig, x):
+    B, T, _ = x.shape
+    hd = cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(B, T, cfg.num_heads, hd)
+    k = k.reshape(B, T, cfg.num_kv_heads, hd)
+    v = v.reshape(B, T, cfg.num_kv_heads, hd)
+    return q, k, v
+
+
+def forward(p, cfg: ModelConfig, x, positions, *,
+            mrope_positions: Optional[jax.Array] = None,
+            causal: bool = True, kernel_force=None):
+    """Full-sequence attention. x: (B,T,D); positions: (B,T)."""
+    q, k, v = _project_qkv(p, cfg, x)
+    if cfg.mrope_sections is not None and mrope_positions is not None:
+        q = common.apply_mrope(q, mrope_positions, cfg.rope_theta,
+                               cfg.mrope_sections)
+        k = common.apply_mrope(k, mrope_positions, cfg.rope_theta,
+                               cfg.mrope_sections)
+    elif cfg.num_heads and not cfg.is_encoder_decoder:
+        q = common.apply_rope(q, positions, cfg.rope_theta)
+        k = common.apply_rope(k, positions, cfg.rope_theta)
+    out = ops.attention(q, k, v, causal=causal,
+                        sliding_window=cfg.sliding_window,
+                        force=kernel_force)
+    B, T, _, _ = out.shape
+    return out.reshape(B, T, -1) @ p["wo"]
+
+
+def decode(p, cfg: ModelConfig, x, cache_k, cache_v, cache_index, *,
+           mrope_positions: Optional[jax.Array] = None,
+           kernel_force=None) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode. x: (B,1,D); cache_k/v: (B, S, Hkv, hd) where S is
+    the KV window (== seq_len, or sliding_window if set).  Returns
+    (out, new_k, new_v).  With a sliding window the cache is a ring buffer
+    indexed by ``cache_index % window``."""
+    B = x.shape[0]
+    S = cache_k.shape[1]
+    x = common.ws_replicate(x)
+    q, k, v = _project_qkv(p, cfg, x)
+    q = common.ws_batch_sharded(q)
+    k = common.ws_batch_sharded(k)
+    v = common.ws_batch_sharded(v)
+    pos = jnp.broadcast_to(cache_index[None, None], (B, 1)).astype(jnp.int32)
+    if cfg.mrope_sections is not None and mrope_positions is not None:
+        q = common.apply_mrope(q, mrope_positions, cfg.rope_theta,
+                               cfg.mrope_sections)
+        k = common.apply_mrope(k, mrope_positions, cfg.rope_theta,
+                               cfg.mrope_sections)
+    elif not cfg.is_encoder_decoder:   # whisper uses learned positions
+        q = common.apply_rope(q, pos, cfg.rope_theta)
+        k = common.apply_rope(k, pos, cfg.rope_theta)
+
+    slot = jnp.where(cfg.sliding_window > 0, cache_index % S,
+                     jnp.minimum(cache_index, S - 1)).astype(jnp.int32)
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), slot, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), slot, axis=1)
+
+    # mask out unwritten cache slots: positions > cache_index are invalid
+    # (for ring buffers every slot is valid once cache_index >= S)
+    kf = new_k.astype(jnp.float32)
+    vf = new_v.astype(jnp.float32)
+    qf = q.astype(jnp.float32) * (cfg.head_dim ** -0.5)
+    rep = cfg.num_heads // cfg.num_kv_heads
+    if rep > 1:
+        kf = jnp.repeat(kf, rep, axis=2)
+        vf = jnp.repeat(vf, rep, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)           # (B,H,1,S)
+    valid = jnp.arange(S) <= cache_index if not cfg.sliding_window else \
+        jnp.arange(S) < jnp.minimum(cache_index + 1, S)
+    logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf).astype(x.dtype)
+    out = common.ws_replicate(out.reshape(B, 1, -1))
+    out = out @ p["wo"]
+    return out, new_k, new_v
+
+
+def cross_attention_init(key, cfg: ModelConfig, dtype=common.DEFAULT_DTYPE):
+    return init(key, cfg, dtype)
+
+
+def cross_forward(p, cfg: ModelConfig, x, enc_out, *, kernel_force=None):
+    """Decoder cross-attention over encoder output (no mask, no rope)."""
+    B, T, _ = x.shape
+    S = enc_out.shape[1]
+    hd = cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, T, cfg.num_heads, hd)
+    k = (enc_out @ p["wk"]).reshape(B, S, cfg.num_kv_heads, hd)
+    v = (enc_out @ p["wv"]).reshape(B, S, cfg.num_kv_heads, hd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(1, 1, cfg.num_heads, hd)
+    out = ops.attention(q, k, v, causal=False, force=kernel_force)
+    return out.reshape(B, T, -1) @ p["wo"]

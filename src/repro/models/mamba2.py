@@ -1,0 +1,87 @@
+"""Mamba2 layer (SSD form) — used by the zamba2 hybrid stack.
+
+Structure per layer: norm -> in_proj [z | x | B | C | dt] -> causal
+depthwise conv(4) on x -> silu -> SSD scan (``ops.mamba2``) -> gate by
+silu(z) -> out_proj.  Decode carries (conv_state, ssm_state) — O(1) in
+sequence length.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import common
+
+Params = Dict[str, Any]
+CONV_K = 4
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def init(key, cfg: ModelConfig, dtype=common.DEFAULT_DTYPE) -> Params:
+    d = cfg.d_model
+    din = d_inner(cfg)
+    N = cfg.ssm_state_dim
+    nh = cfg.ssm_num_heads
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * din + 2 * N + nh
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "in_proj": common.dense_init(ks[0], (d, proj_out), dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (CONV_K, din)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((din,), dtype),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        "A_log": jnp.zeros((nh,), dtype),        # A = -exp(A_log)
+        "D": jnp.ones((nh,), dtype),
+        "out_proj": common.dense_init(ks[2], (din, d), dtype=dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj):
+    din = d_inner(cfg)
+    N = cfg.ssm_state_dim
+    nh = cfg.ssm_num_heads
+    z = proj[..., :din]
+    xs = proj[..., din:2 * din]
+    Bm = proj[..., 2 * din:2 * din + N]
+    Cm = proj[..., 2 * din + N:2 * din + 2 * N]
+    dt = proj[..., 2 * din + 2 * N:]
+    assert dt.shape[-1] == nh
+    return z, xs, Bm, Cm, dt
+
+
+def _causal_conv(x, w, b, conv_state: Optional[jax.Array] = None):
+    """Depthwise causal conv, kernel CONV_K.  x: (B,T,C); w: (K,C)."""
+    K = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros_like(x[:, :K - 1])
+    else:
+        pad = conv_state[:, -(K - 1):]
+    xp = jnp.concatenate([pad, x], axis=1)              # (B, T+K-1, C)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K)) + b
+    return out, xp[:, -CONV_K:]                          # new conv tail
+
+
+def forward(lp: Params, cfg: ModelConfig, x, *, kernel_force=None,
+            conv_state=None, ssm_state=None) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B,T,d) -> (out, new_conv_state, new_ssm_state)."""
+    B, T, d = x.shape
+    nh, hd = cfg.ssm_num_heads, cfg.ssm_head_dim
+    h = common.rms_norm(x, lp["norm"], cfg.norm_eps)
+    z, xs, Bm, Cm, dt = _split_proj(cfg, h @ lp["in_proj"])
+    xs, new_conv = _causal_conv(xs, lp["conv_w"], lp["conv_b"], conv_state)
+    xs = jax.nn.silu(xs)
+    Bm = jax.nn.silu(Bm)
+    Cm = jax.nn.silu(Cm)
+    dt = jax.nn.softplus(dt + lp["dt_bias"])
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    y, new_ssm = ops.mamba2(xs.reshape(B, T, nh, hd), dt, A, Bm, Cm,
+                            lp["D"], ssm_state, force=kernel_force)
+    y = y.reshape(B, T, -1) * jax.nn.silu(z)
+    return y @ lp["out_proj"], new_conv, new_ssm

@@ -1,0 +1,117 @@
+"""Mixture-of-Experts FFN layer with top-k routing.
+
+Two execution paths:
+  * ``dispatch="dense"`` — capacity-based one-hot dispatch/combine einsums
+    (GShard style).  Portable, shards cleanly (experts on the ``model``
+    mesh axis become an all-to-all in the compiled collective schedule),
+    FLOP count = tokens * top_k * capacity_factor * expert_ffn.  This is
+    the baseline/dry-run path.
+  * ``moe_ep.forward_ep`` — shard_map + explicit all_to_all expert
+    parallelism (enabled via ``common.ep_moe()`` / dry-run ``--moe-ep``).
+
+Router: softmax over expert logits, top-k, probs renormalized over the
+selected experts; load-balance auxiliary loss per Switch Transformer.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+
+
+def init(key, cfg: ModelConfig, dtype=common.DEFAULT_DTYPE):
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": common.dense_init(ks[0], (d, e), dtype=dtype),
+        "w_gate": common.stacked(ks[1], e, common.dense_init, (d, f), dtype=dtype),
+        "w_up": common.stacked(ks[2], e, common.dense_init, (d, f), dtype=dtype),
+        "w_down": common.stacked(ks[3], e, common.dense_init, (f, d), dtype=dtype),
+    }
+    if cfg.num_shared_experts:
+        s = cfg.num_shared_experts
+        kss = jax.random.split(ks[4], 3)
+        p["shared_gate"] = common.dense_init(kss[0], (d, f * s), dtype=dtype)
+        p["shared_up"] = common.dense_init(kss[1], (d, f * s), dtype=dtype)
+        p["shared_down"] = common.dense_init(kss[2], (f * s, d), dtype=dtype)
+    return p
+
+
+def router_topk(logits: jax.Array, k: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (topk_probs (T,k), topk_idx (T,k), aux_loss scalar)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)   # (T,E)
+    topk_probs, topk_idx = jax.lax.top_k(probs, k)
+    topk_probs = topk_probs / jnp.maximum(
+        topk_probs.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load balance: E * sum_e(frac_tokens_e * mean_prob_e)
+    E = logits.shape[-1]
+    onehot = jax.nn.one_hot(topk_idx[..., 0], E)   # first choice decides load
+    frac = onehot.mean(0)
+    mean_prob = probs.mean(0)
+    aux = E * jnp.sum(frac * mean_prob)
+    return topk_probs, topk_idx, aux
+
+
+def forward(p, cfg: ModelConfig, x, *, capacity_factor: float = 1.25):
+    """x: (B, T, D) -> (out, aux_loss).
+
+    Scatter/gather dispatch (linear in tokens — the GShard one-hot einsum
+    is O(tokens^2) through the (N, E, C) dispatch tensor and cannot lower
+    at 1M-token batches).  Tokens over capacity are dropped (their
+    contribution is a zero add into slot 0); the expert FFN runs batched
+    as (E, C, D) with the expert axis sharded on ``model`` (EP)."""
+    B, T, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+
+    if common._EP_MOE:
+        mesh = common._context_mesh()
+        if mesh is not None and "model" in mesh.axis_names \
+                and E % mesh.shape["model"] == 0:
+            from repro.models import moe_ep
+            return moe_ep.forward_ep(p, cfg, x, mesh,
+                                     capacity_factor=capacity_factor)
+
+    N = B * T
+    xt = x.reshape(N, D)
+
+    logits = xt @ p["router"]
+    topk_probs, topk_idx, aux = router_topk(logits, K)
+
+    capacity = max(1, int(capacity_factor * N * K / E))
+    C = capacity
+
+    # position of each (token, choice) within its expert's queue
+    flat_idx = topk_idx.reshape(-1)                           # (N*K,)
+    onehot = jax.nn.one_hot(flat_idx, E, dtype=jnp.int32)     # (N*K, E)
+    pos = ((jnp.cumsum(onehot, axis=0) - 1) * onehot).max(-1)  # (N*K,)
+    keep = pos < C
+
+    slot = jnp.where(keep, flat_idx * C + pos, 0)             # (N*K,)
+    xr = jnp.repeat(xt, K, axis=0) * keep[:, None].astype(x.dtype)
+    xr = common.shard_hint(xr, "data", None)
+    expert_in = jnp.zeros((E * C, D), x.dtype).at[slot].add(xr)
+    expert_in = expert_in.reshape(E, C, D)
+    # pin expert-parallel layout: expert axis on "model" (GSPMD otherwise
+    # picks different layouts at different depths — breaks cost
+    # extrapolation and can replicate the expert FFN)
+    expert_in = common.shard_hint(expert_in, "model", None, None)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, p["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", expert_in, p["w_up"])
+    h = common.shard_hint(h, "model", None, None)
+    expert_out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])   # (E, C, D)
+    expert_out = common.shard_hint(expert_out, "model", None, None)
+
+    gathered = expert_out.reshape(E * C, D)[slot]             # (N*K, D)
+    w = (topk_probs.reshape(-1) * keep).astype(x.dtype)[:, None]
+    out = (gathered * w).reshape(N, K, D).sum(1).reshape(B, T, D)
+
+    if cfg.num_shared_experts:
+        shared = (jax.nn.silu(xt @ p["shared_gate"]) * (xt @ p["shared_up"])) \
+            @ p["shared_down"]
+        out = out + shared.reshape(B, T, D)
+    return out, aux.astype(jnp.float32)

@@ -1,0 +1,137 @@
+"""Pre-activation ResNet-20 (He et al. 2016b) — the paper's FL model.
+
+Width-scalable (``width_ratio`` shrinks channels; HeteroFL/SplitMix take
+prefix channel slices so nested aggregation is well-defined) and
+depth-decomposable (stem + 9 two-conv blocks + head — matching the paper's
+Table 1 B_1..B_9).
+
+BatchNorm is replaced by GroupNorm (HeteroFL does the analogous static-BN
+replacement: per-client batch statistics don't transfer across federated
+aggregation).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.preresnet20 import ResNetConfig
+from repro.models import common
+
+Params = Dict[str, Any]
+GN_GROUPS = 8
+
+
+def _conv_init(key, kh, kw, cin, cout, dtype):
+    scale = (2.0 / (kh * kw * cin)) ** 0.5
+    return (jax.random.normal(key, (kh, kw, cin, cout)) * scale).astype(dtype)
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def group_norm(x, w, b, groups=GN_GROUPS, eps=1e-5):
+    B, H, W, C = x.shape
+    g = min(groups, C)
+    while C % g:
+        g -= 1
+    xf = x.astype(jnp.float32).reshape(B, H, W, g, C // g)
+    mu = xf.mean((1, 2, 4), keepdims=True)
+    var = xf.var((1, 2, 4), keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (xf.reshape(B, H, W, C) * w + b).astype(x.dtype)
+
+
+def _norm_init(c, dtype):
+    return {"w": jnp.ones((c,), dtype), "b": jnp.zeros((c,), dtype)}
+
+
+def block_channels(cfg: ResNetConfig) -> List[Tuple[int, int, int]]:
+    """Per residual block: (c_in, c_out, stride)."""
+    widths = cfg.widths()
+    out = []
+    c_in = widths[0]
+    for s, (n, w) in enumerate(zip(cfg.stage_blocks, widths)):
+        for b in range(n):
+            stride = 2 if (s > 0 and b == 0) else 1
+            out.append((c_in, w, stride))
+            c_in = w
+    return out
+
+
+def init(key, cfg: ResNetConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    widths = cfg.widths()
+    blocks = []
+    bkeys = jax.random.split(ks[1], cfg.num_blocks)
+    for bk, (cin, cout, stride) in zip(bkeys, block_channels(cfg)):
+        k1, k2, k3 = jax.random.split(bk, 3)
+        bp = {
+            "n1": _norm_init(cin, dtype),
+            "conv1": _conv_init(k1, 3, 3, cin, cout, dtype),
+            "n2": _norm_init(cout, dtype),
+            "conv2": _conv_init(k2, 3, 3, cout, cout, dtype),
+        }
+        if stride != 1 or cin != cout:
+            bp["proj"] = _conv_init(k3, 1, 1, cin, cout, dtype)
+        blocks.append(bp)
+    return {
+        "stem": _conv_init(ks[0], 3, 3, cfg.in_channels, widths[0], dtype),
+        "blocks": blocks,
+        "head_norm": _norm_init(widths[-1], dtype),
+        "classifier": {
+            "w": common.dense_init(ks[2], (widths[-1], cfg.num_classes),
+                                   dtype=dtype),
+            "b": jnp.zeros((cfg.num_classes,), dtype),
+        },
+    }
+
+
+def _block_forward(bp, x, stride):
+    h = jax.nn.relu(group_norm(x, bp["n1"]["w"], bp["n1"]["b"]))
+    sc = _conv(h, bp["proj"], stride) if "proj" in bp else x
+    h = _conv(h, bp["conv1"], stride)
+    h = jax.nn.relu(group_norm(h, bp["n2"]["w"], bp["n2"]["b"]))
+    h = _conv(h, bp["conv2"], 1)
+    return sc + h
+
+
+def forward_blocks(p: Params, cfg: ResNetConfig, x, lo: int, hi: int):
+    """Run residual blocks [lo, hi) on feature maps x."""
+    chans = block_channels(cfg)
+    for i in range(lo, hi):
+        x = _block_forward(p["blocks"][i], x, chans[i][2])
+    return x
+
+
+def stem(p: Params, x):
+    return _conv(x, p["stem"], 1)
+
+
+def head(p: Params, cfg: ResNetConfig, x):
+    x = jax.nn.relu(group_norm(x, p["head_norm"]["w"], p["head_norm"]["b"]))
+    x = x.mean((1, 2))
+    return x @ p["classifier"]["w"] + p["classifier"]["b"]
+
+
+def apply(p: Params, cfg: ResNetConfig, images):
+    """images: (B, H, W, C) -> logits (B, num_classes)."""
+    x = stem(p, images)
+    x = forward_blocks(p, cfg, x, 0, cfg.num_blocks)
+    return head(p, cfg, x)
+
+
+# ----- FeDepth skip-connection head (paper: zero-pad channels + pool) -----
+def head_from_block(p: Params, cfg: ResNetConfig, x, block_idx: int):
+    """Attach the classifier to an intermediate block's activation via the
+    paper's skip connection: zero-pad channels to the head width, then the
+    normal head.  'This may inject negligible noise' (paper §Comparison)."""
+    c_head = cfg.widths()[-1]
+    c_cur = x.shape[-1]
+    if c_cur < c_head:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, c_head - c_cur)))
+    return head(p, cfg, x)

@@ -1,0 +1,190 @@
+"""RWKV-6 (Finch) — attention-free LM with data-dependent decay.
+
+Faithful block structure (arXiv:2404.05892), sized by ``ModelConfig``:
+  * time-mix: token-shift lerp with data-dependent mix (LoRA on shifted
+    input), r/k/v/g/w projections, WKV recurrence via the Pallas kernel
+    (`ops.rwkv6`), group-norm on heads, output gate.
+  * channel-mix: token-shift lerp, squared-relu FFN.
+
+Depth is scanned; FeDepth block ranges slice the stacked params.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import common
+
+Params = Dict[str, Any]
+LORA_R = 32
+
+
+def _init_layer(key, cfg: ModelConfig, dtype):
+    d, dff = cfg.d_model, cfg.d_ff
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    ks = jax.random.split(key, 12)
+    return {
+        "tm_norm": jnp.ones((d,), dtype),
+        # token-shift mix coefficients (static part) for r,k,v,g,w
+        "mix": (jax.random.uniform(ks[0], (5, d)) * 0.5).astype(dtype),
+        # data-dependent mix LoRA
+        "mix_lora_a": common.dense_init(ks[1], (d, LORA_R * 5), dtype=dtype),
+        "mix_lora_b": common.dense_init(ks[2], (5, LORA_R, d), scale=0.01,
+                                        dtype=dtype),
+        "wr": common.dense_init(ks[3], (d, d), dtype=dtype),
+        "wk": common.dense_init(ks[4], (d, d), dtype=dtype),
+        "wv": common.dense_init(ks[5], (d, d), dtype=dtype),
+        "wg": common.dense_init(ks[6], (d, d), dtype=dtype),
+        # data-dependent decay: w = base + lora
+        "w_base": (jax.random.normal(ks[7], (d,)) * 0.5 - 0.5).astype(dtype),
+        "w_lora_a": common.dense_init(ks[8], (d, LORA_R), dtype=dtype),
+        "w_lora_b": common.dense_init(ks[9], (LORA_R, d), scale=0.01,
+                                      dtype=dtype),
+        "bonus_u": (jax.random.normal(ks[10], (H, hd)) * 0.1).astype(dtype),
+        "ln_x": jnp.ones((d,), dtype),
+        "wo": common.dense_init(ks[11], (d, d), dtype=dtype),
+        "cm_norm": jnp.ones((d,), dtype),
+        "cm_mix": (jax.random.uniform(jax.random.fold_in(key, 99), (2, d))
+                   * 0.5).astype(dtype),
+        "cm_k": common.dense_init(jax.random.fold_in(key, 100), (d, dff),
+                                  dtype=dtype),
+        "cm_v": common.dense_init(jax.random.fold_in(key, 101), (dff, d),
+                                  dtype=dtype),
+        "cm_r": common.dense_init(jax.random.fold_in(key, 102), (d, d),
+                                  dtype=dtype),
+    }
+
+
+def init(key, cfg: ModelConfig, dtype=common.DEFAULT_DTYPE) -> Params:
+    ks = jax.random.split(key, 3)
+    layer_keys = jax.random.split(ks[0], cfg.num_layers)
+    layers = jax.tree.map(lambda *xs: jnp.stack(xs),
+                          *[_init_layer(k, cfg, dtype) for k in layer_keys])
+    return {
+        "embed": common.embed_init(ks[1], (cfg.vocab_size, cfg.d_model), dtype),
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": common.dense_init(ks[2], (cfg.d_model, cfg.vocab_size),
+                                     dtype=dtype),
+    }
+
+
+def _token_shift(x, shifted_in: Optional[jax.Array] = None):
+    """x_{t-1} sequence (zeros / provided carry at t=0)."""
+    prev = jnp.zeros_like(x[:, :1]) if shifted_in is None else shifted_in
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _time_mix(lp, cfg: ModelConfig, x, kernel_force, state=None, shift=None):
+    B, T, d = x.shape
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    xs = _token_shift(x, shift)
+    base = xs + (x - xs) * 0.5  # anchor for data-dependent mix
+    lora = jnp.tanh(base @ lp["mix_lora_a"]).reshape(B, T, 5, LORA_R)
+    dyn = jnp.einsum("btfr,frd->btfd", lora, lp["mix_lora_b"])
+    mixed = xs[:, :, None, :] + (x - xs)[:, :, None, :] * \
+        (lp["mix"][None, None] + dyn)                       # (B,T,5,d)
+    mr, mk, mv, mg, mw = [mixed[:, :, i] for i in range(5)]
+
+    r = (mr @ lp["wr"]).reshape(B, T, H, hd)
+    k = (mk @ lp["wk"]).reshape(B, T, H, hd)
+    v = (mv @ lp["wv"]).reshape(B, T, H, hd)
+    g = jax.nn.silu(mg @ lp["wg"])
+    w = (lp["w_base"] + jnp.tanh(mw @ lp["w_lora_a"]) @ lp["w_lora_b"]
+         ).reshape(B, T, H, hd)
+
+    y, new_state = ops.rwkv6(r, k, v, w, lp["bonus_u"], state,
+                             force=kernel_force)
+    y = y.reshape(B, T, d)
+    # per-head group norm
+    yh = y.reshape(B, T, H, hd).astype(jnp.float32)
+    mu = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = (yh.reshape(B, T, d) * lp["ln_x"]).astype(x.dtype)
+    return (y * g) @ lp["wo"], new_state, x[:, -1:]
+
+
+def _channel_mix(lp, x, shift=None):
+    xs = _token_shift(x, shift)
+    mk = xs + (x - xs) * lp["cm_mix"][0]
+    mr = xs + (x - xs) * lp["cm_mix"][1]
+    k = jnp.square(jax.nn.relu(mk @ lp["cm_k"]))
+    return jax.nn.sigmoid(mr @ lp["cm_r"]) * (k @ lp["cm_v"]), x[:, -1:]
+
+
+def _layer_forward(lp, cfg: ModelConfig, x, kernel_force,
+                   state=None, shifts=None):
+    h = common.rms_norm(x, lp["tm_norm"], cfg.norm_eps)
+    tm, new_state, tm_last = _time_mix(lp, cfg, h, kernel_force, state,
+                                       None if shifts is None else shifts[0])
+    x = x + tm
+    h = common.rms_norm(x, lp["cm_norm"], cfg.norm_eps)
+    cm, cm_last = _channel_mix(lp, h, None if shifts is None else shifts[1])
+    x = x + cm
+    return x, new_state, (tm_last, cm_last)
+
+
+def apply_layer_range(p: Params, cfg: ModelConfig, x, lo: int, hi: int, *,
+                      kernel_force=None, remat: bool = True):
+    layers = jax.tree.map(lambda a: a[lo:hi], p["layers"])
+
+    def body(h, lp):
+        h, _, _ = _layer_forward(lp, cfg, h, kernel_force)
+        return h, None
+
+    body = common.maybe_checkpoint(body, remat)
+    x, _ = common.scan(body, x, layers)
+    return x, jnp.float32(0.0)
+
+
+def forward_hidden(p: Params, cfg: ModelConfig, tokens, *, kernel_force=None,
+                   lo: int = 0, hi: Optional[int] = None, remat: bool = True,
+                   **_):
+    x = p["embed"][tokens]
+    hi = hi if hi is not None else cfg.num_layers
+    return apply_layer_range(p, cfg, x, lo, hi, kernel_force=kernel_force,
+                             remat=remat)
+
+
+def loss_fn(p: Params, cfg: ModelConfig, batch, *, kernel_force=None):
+    x, _ = forward_hidden(p, cfg, batch["tokens"], kernel_force=kernel_force)
+    x = common.rms_norm(x, p["final_norm"], cfg.norm_eps)
+    ce, n = ops.cross_entropy(x, p["lm_head"], batch["labels"],
+                              force=kernel_force)
+    return ce, {"ce": ce, "aux": jnp.float32(0.0), "n_tokens": n}
+
+
+def prefill(p: Params, cfg: ModelConfig, batch, *, kernel_force=None):
+    x, _ = forward_hidden(p, cfg, batch["tokens"], kernel_force=kernel_force,
+                          remat=False)
+    x = common.rms_norm(x[:, -1:], p["final_norm"], cfg.norm_eps)
+    return x @ p["lm_head"]
+
+
+def decode_step(p: Params, cfg: ModelConfig, tokens, cache, cache_index, *,
+                kernel_force=None, **_):
+    """cache: {"rwkv_state": (L,B,H,hd,hd) fp32,
+               "rwkv_shift": (L,2,B,d)} — O(1) in sequence length."""
+    x = p["embed"][tokens]                      # (B,1,d)
+
+    def body(h, xs):
+        lp, state, shift = xs
+        tm_shift = shift[0][:, None]            # (B,1,d)
+        cm_shift = shift[1][:, None]
+        h, new_state, (tm_last, cm_last) = _layer_forward(
+            lp, cfg, h, kernel_force, state, (tm_shift, cm_shift))
+        new_shift = jnp.stack([tm_last[:, 0], cm_last[:, 0]])
+        return h, (new_state, new_shift)
+
+    x, (ns, nsh) = common.scan(
+        body, x, (p["layers"], cache["rwkv_state"], cache["rwkv_shift"]))
+    x = common.rms_norm(x, p["final_norm"], cfg.norm_eps)
+    logits = x @ p["lm_head"]
+    return logits, {"rwkv_state": ns, "rwkv_shift": nsh}

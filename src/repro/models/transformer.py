@@ -1,0 +1,229 @@
+"""Decoder-only transformer LM covering the dense / moe / vlm families.
+
+Depth structure: the repeating pattern ("unit") is ``moe_every`` layers
+(1 for pure dense/moe archs; 2 for llama4's interleaved dense+MoE).  Units
+are param-stacked on a leading axis and executed with ``jax.lax.scan`` so
+HLO size is O(1) in depth; FeDepth blocks are contiguous *unit* ranges,
+sliced out of the stack at trace time (block boundaries are static).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import attention, common, moe
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def _init_sublayer(key, cfg: ModelConfig, kind: str, dtype):
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    p = {
+        "attn_norm": jnp.ones((d,), dtype),
+        "attn": attention.init(ks[0], cfg, dtype),
+        "mlp_norm": jnp.ones((d,), dtype),
+    }
+    if kind == "moe":
+        p["moe"] = moe.init(ks[1], cfg, dtype)
+    else:
+        d_ff = cfg.dense_d_ff or cfg.d_ff
+        kss = jax.random.split(ks[2], 3)
+        p["mlp"] = {
+            "w_gate": common.dense_init(kss[0], (d, d_ff), dtype=dtype),
+            "w_up": common.dense_init(kss[1], (d, d_ff), dtype=dtype),
+            "w_down": common.dense_init(kss[2], (d_ff, d), dtype=dtype),
+        }
+    return p
+
+
+def init(key, cfg: ModelConfig, dtype=common.DEFAULT_DTYPE) -> Params:
+    kinds = cfg.layer_kinds()
+    n_units = cfg.num_layers // cfg.moe_every
+    ks = jax.random.split(key, 3)
+
+    def unit_init(k):
+        sub_keys = jax.random.split(k, cfg.moe_every)
+        return {f"sub_{i}": _init_sublayer(sub_keys[i], cfg,
+                                           kinds[i], dtype)
+                for i in range(cfg.moe_every)}
+
+    unit_keys = jax.random.split(ks[0], n_units)
+    units = jax.tree.map(lambda *xs: jnp.stack(xs),
+                         *[unit_init(k) for k in unit_keys])
+
+    p: Params = {
+        "embed": common.embed_init(ks[1], (cfg.vocab_size, cfg.d_model),
+                                   dtype),
+        "units": units,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = common.dense_init(ks[2], (cfg.d_model, cfg.vocab_size),
+                                         dtype=dtype)
+    return p
+
+
+def lm_head_weight(p: Params, cfg: ModelConfig) -> jax.Array:
+    return p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+def _sublayer_forward(sub: Params, cfg: ModelConfig, kind: str, x, positions,
+                      mrope_positions, kernel_force):
+    h = common.rms_norm(x, sub["attn_norm"], cfg.norm_eps)
+    x = x + attention.forward(sub["attn"], cfg, h, positions,
+                              mrope_positions=mrope_positions,
+                              kernel_force=kernel_force)
+    h = common.rms_norm(x, sub["mlp_norm"], cfg.norm_eps)
+    if kind == "moe":
+        out, aux = moe.forward(sub["moe"], cfg, h)
+    else:
+        out = common.swiglu(h, sub["mlp"]["w_gate"], sub["mlp"]["w_up"],
+                            sub["mlp"]["w_down"])
+        aux = jnp.float32(0.0)
+    return x + out, aux
+
+
+def apply_unit_range(p: Params, cfg: ModelConfig, x, lo: int, hi: int, *,
+                     positions=None, mrope_positions=None,
+                     kernel_force=None, remat: bool = True):
+    """Run units [lo, hi) over hidden states x.  Returns (x, aux_loss)."""
+    kinds = cfg.layer_kinds()
+    if positions is None:
+        positions = common.causal_positions(x.shape[0], x.shape[1])
+    units = jax.tree.map(lambda a: a[lo:hi], p["units"])
+
+    def body(carry, unit):
+        h, aux = carry
+        for i in range(cfg.moe_every):
+            h, a = _sublayer_forward(unit[f"sub_{i}"], cfg, kinds[i], h,
+                                     positions, mrope_positions,
+                                     kernel_force)
+            aux = aux + a
+        return (h, aux), None
+
+    body = common.maybe_checkpoint(body, remat)
+    (x, aux), _ = common.scan(body, (x, jnp.float32(0.0)), units)
+    return x, aux
+
+
+def embed_inputs(p: Params, cfg: ModelConfig, tokens, *,
+                 vision_embeds=None):
+    x = p["embed"][tokens]
+    if vision_embeds is not None:
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def forward_hidden(p: Params, cfg: ModelConfig, tokens, *,
+                   vision_embeds=None, mrope_positions=None,
+                   kernel_force=None, lo: int = 0, hi: Optional[int] = None,
+                   remat: bool = True):
+    """Embeddings -> units [lo,hi) -> hidden states (pre final-norm)."""
+    x = embed_inputs(p, cfg, tokens, vision_embeds=vision_embeds)
+    B, T, _ = x.shape
+    positions = common.causal_positions(B, T)
+    if mrope_positions is not None and vision_embeds is not None:
+        # prepend stub temporal positions for the vision tokens
+        P = vision_embeds.shape[1]
+        vis = jnp.broadcast_to(
+            jnp.arange(P, dtype=jnp.int32)[None, None, :],
+            (3, B, P))
+        mrope_positions = jnp.concatenate(
+            [vis, mrope_positions + P], axis=2)
+    hi = hi if hi is not None else cfg.num_layers // cfg.moe_every
+    x, aux = apply_unit_range(p, cfg, x, lo, hi, positions=positions,
+                              mrope_positions=mrope_positions,
+                              kernel_force=kernel_force, remat=remat)
+    return x, aux
+
+
+def loss_fn(p: Params, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
+            kernel_force=None) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Mean next-token CE (+ MoE aux) on a train batch."""
+    x, aux = forward_hidden(
+        p, cfg, batch["tokens"],
+        vision_embeds=batch.get("vision_embeds"),
+        mrope_positions=batch.get("mrope_positions"),
+        kernel_force=kernel_force)
+    x = common.rms_norm(x, p["final_norm"], cfg.norm_eps)
+    labels = batch["labels"]
+    if batch.get("vision_embeds") is not None:
+        # no loss on the stubbed vision prefix
+        P = batch["vision_embeds"].shape[1]
+        x = x[:, P:]
+    ce, n = ops.cross_entropy(x, lm_head_weight(p, cfg), labels,
+                              force=kernel_force)
+    loss = ce + cfg.router_aux_coef * aux
+    return loss, {"ce": ce, "aux": aux, "n_tokens": n}
+
+
+def prefill(p: Params, cfg: ModelConfig, batch, *, kernel_force=None):
+    """Prefill forward: returns last-position logits."""
+    x, _ = forward_hidden(
+        p, cfg, batch["tokens"],
+        vision_embeds=batch.get("vision_embeds"),
+        mrope_positions=batch.get("mrope_positions"),
+        kernel_force=kernel_force, remat=False)
+    x = common.rms_norm(x[:, -1:], p["final_norm"], cfg.norm_eps)
+    return x @ lm_head_weight(p, cfg)
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+def decode_step(p: Params, cfg: ModelConfig, tokens, cache, cache_index, *,
+                mrope_positions=None, kernel_force=None):
+    """One decode step.  tokens: (B,1); cache: {"k","v"}: (L,B,S,Hkv,hd).
+    Returns (logits (B,1,V), new_cache)."""
+    x = common.ws_replicate(p["embed"][tokens])
+    kinds = cfg.layer_kinds()
+    n_units = cfg.num_layers // cfg.moe_every
+    m = cfg.moe_every
+    L = cfg.num_layers
+
+    # (L, B, S, H, hd) -> (n_units, m, B, S, H, hd) for scan
+    ck = cache["k"].reshape((n_units, m) + cache["k"].shape[1:])
+    cv = cache["v"].reshape((n_units, m) + cache["v"].shape[1:])
+
+    def body(carry, xs):
+        h = carry
+        unit, k_u, v_u = xs
+        new_k, new_v = [], []
+        for i in range(m):
+            sub = unit[f"sub_{i}"]
+            hn = common.rms_norm(h, sub["attn_norm"], cfg.norm_eps)
+            a, nk, nv = attention.decode(sub["attn"], cfg, hn, k_u[i], v_u[i],
+                                         cache_index,
+                                         mrope_positions=mrope_positions,
+                                         kernel_force=kernel_force)
+            h = h + a
+            hn = common.rms_norm(h, sub["mlp_norm"], cfg.norm_eps)
+            if kinds[i] == "moe":
+                out, _ = moe.forward(sub["moe"], cfg, hn)
+            else:
+                mlp = sub["mlp"]
+                out = common.swiglu(hn, mlp["w_gate"], mlp["w_up"],
+                                    mlp["w_down"])
+            h = h + out
+            new_k.append(nk)
+            new_v.append(nv)
+        return h, (jnp.stack(new_k), jnp.stack(new_v))
+
+    x, (nk, nv) = common.scan(body, x, (p["units"], ck, cv))
+    new_cache = dict(cache)
+    new_cache["k"] = nk.reshape(cache["k"].shape)
+    new_cache["v"] = nv.reshape(cache["v"].shape)
+    x = common.rms_norm(x, p["final_norm"], cfg.norm_eps)
+    logits = x @ lm_head_weight(p, cfg)
+    return logits, new_cache

@@ -1,0 +1,114 @@
+"""ViT-T/16 — the paper's depth-wise fine-tuning model.
+
+All encoder blocks have identical activation shapes, which is exactly the
+paper's observation for why FeDepth skip connections are noise-free on
+ViT.  Width-scalable for the FedAvg(x1/6) baseline comparison.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.vit_t16 import ViTConfig
+from repro.models import common
+
+Params = Dict[str, Any]
+
+
+def dims(cfg: ViTConfig):
+    d = max(8, int(round(cfg.d_model * cfg.width_ratio)))
+    d -= d % cfg.num_heads
+    dff = max(8, int(round(cfg.d_ff * cfg.width_ratio)))
+    return d, dff
+
+
+def _ln_init(d, dtype):
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def _block_init(key, d, dff, dtype):
+    ks = jax.random.split(key, 5)
+    return {
+        "ln1": _ln_init(d, dtype),
+        "wqkv": common.dense_init(ks[0], (d, 3 * d), dtype=dtype),
+        "wo": common.dense_init(ks[1], (d, d), dtype=dtype),
+        "ln2": _ln_init(d, dtype),
+        "w1": common.dense_init(ks[2], (d, dff), dtype=dtype),
+        "b1": jnp.zeros((dff,), dtype),
+        "w2": common.dense_init(ks[3], (dff, d), dtype=dtype),
+        "b2": jnp.zeros((d,), dtype),
+    }
+
+
+def init(key, cfg: ViTConfig, dtype=jnp.float32) -> Params:
+    d, dff = dims(cfg)
+    ks = jax.random.split(key, 5)
+    patch_dim = cfg.patch_size * cfg.patch_size * cfg.in_channels
+    bkeys = jax.random.split(ks[0], cfg.num_layers)
+    blocks = jax.tree.map(lambda *xs: jnp.stack(xs),
+                          *[_block_init(k, d, dff, dtype) for k in bkeys])
+    return {
+        "patch_embed": common.dense_init(ks[1], (patch_dim, d), dtype=dtype),
+        "cls": (jax.random.normal(ks[2], (1, 1, d)) * 0.02).astype(dtype),
+        "pos": (jax.random.normal(ks[3], (1, cfg.num_patches + 1, d))
+                * 0.02).astype(dtype),
+        "blocks": blocks,
+        "head_norm": _ln_init(d, dtype),
+        "classifier": {
+            "w": common.dense_init(ks[4], (d, cfg.num_classes), dtype=dtype),
+            "b": jnp.zeros((cfg.num_classes,), dtype),
+        },
+    }
+
+
+def patchify(cfg: ViTConfig, images):
+    """(B, H, W, C) -> (B, N, patch_dim)"""
+    B, H, W, C = images.shape
+    ps = cfg.patch_size
+    x = images.reshape(B, H // ps, ps, W // ps, ps, C)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(B, (H // ps) * (W // ps), ps * ps * C)
+
+
+def _block_forward(bp, cfg: ViTConfig, x):
+    B, N, d = x.shape
+    nh = cfg.num_heads
+    h = common.layer_norm(x, bp["ln1"]["w"], bp["ln1"]["b"])
+    qkv = (h @ bp["wqkv"]).reshape(B, N, 3, nh, d // nh)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+    attn = jax.nn.softmax(
+        jnp.einsum("bqhd,bkhd->bhqk", q, k) / (d // nh) ** 0.5, axis=-1)
+    a = jnp.einsum("bhqk,bkhd->bqhd", attn, v).reshape(B, N, d)
+    x = x + a @ bp["wo"]
+    h = common.layer_norm(x, bp["ln2"]["w"], bp["ln2"]["b"])
+    return x + jax.nn.gelu(h @ bp["w1"] + bp["b1"]) @ bp["w2"] + bp["b2"]
+
+
+def embed(p: Params, cfg: ViTConfig, images):
+    x = patchify(cfg, images) @ p["patch_embed"]
+    cls = jnp.broadcast_to(p["cls"], (x.shape[0], 1, x.shape[-1]))
+    x = jnp.concatenate([cls, x], axis=1)
+    return x + p["pos"]
+
+
+def forward_blocks(p: Params, cfg: ViTConfig, x, lo: int, hi: int):
+    blocks = jax.tree.map(lambda a: a[lo:hi], p["blocks"])
+
+    def body(h, bp):
+        return _block_forward(bp, cfg, h), None
+
+    x, _ = jax.lax.scan(body, x, blocks)
+    return x
+
+
+def head(p: Params, cfg: ViTConfig, x):
+    h = common.layer_norm(x[:, 0], p["head_norm"]["w"], p["head_norm"]["b"])
+    return h @ p["classifier"]["w"] + p["classifier"]["b"]
+
+
+def apply(p: Params, cfg: ViTConfig, images):
+    x = embed(p, cfg, images)
+    x = forward_blocks(p, cfg, x, 0, cfg.num_layers)
+    return head(p, cfg, x)

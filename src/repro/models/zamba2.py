@@ -1,0 +1,171 @@
+"""Zamba2 hybrid — Mamba2 backbone with one SHARED attention+MLP block
+invoked every ``hybrid_attn_every`` layers (arXiv:2411.15242).
+
+The shared block's parameters exist once; each invocation applies its own
+input norm (cheap per-occurrence specialization, standing in for Zamba2's
+per-invocation LoRA).  FeDepth note (DESIGN.md §4): the shared block is
+trained with the head φ in every depth block, since freezing it inside a
+prefix while a later occurrence trains would violate the frozen-prefix
+invariant.
+
+Depth structure: ``groups`` of (hybrid_attn_every-1 mamba layers + 1
+shared-attn invocation); mamba layers are param-stacked per group and
+scanned; groups are a short Python loop (≈6 for the full config).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import attention, common, mamba2
+
+Params = Dict[str, Any]
+
+
+def group_layout(cfg: ModelConfig) -> Tuple[int, int]:
+    """(num_groups, mamba_per_group).  Layers = groups*(m+1) where the +1
+    is the shared-attention invocation."""
+    every = cfg.hybrid_attn_every
+    n_groups = cfg.num_layers // every
+    return n_groups, every - 1
+
+
+def init(key, cfg: ModelConfig, dtype=common.DEFAULT_DTYPE) -> Params:
+    n_groups, m_per = group_layout(cfg)
+    ks = jax.random.split(key, 6)
+
+    mamba_keys = jax.random.split(ks[0], n_groups * m_per)
+    stacked = [mamba2.init(k, cfg, dtype) for k in mamba_keys]
+    mamba_layers = jax.tree.map(lambda *xs: jnp.stack(xs), *stacked)
+    mamba_layers = jax.tree.map(
+        lambda a: a.reshape((n_groups, m_per) + a.shape[1:]), mamba_layers)
+
+    kss = jax.random.split(ks[1], 3)
+    shared = {
+        "attn": attention.init(kss[0], cfg, dtype),
+        "mlp": {
+            "w_gate": common.dense_init(kss[1], (cfg.d_model, cfg.d_ff), dtype=dtype),
+            "w_up": common.dense_init(jax.random.fold_in(kss[1], 1),
+                                      (cfg.d_model, cfg.d_ff), dtype=dtype),
+            "w_down": common.dense_init(kss[2], (cfg.d_ff, cfg.d_model), dtype=dtype),
+        },
+    }
+    return {
+        "embed": common.embed_init(ks[2], (cfg.vocab_size, cfg.d_model), dtype),
+        "mamba_groups": mamba_layers,   # leaves: (G, M, ...)
+        "shared": shared,
+        "invocation_norms": jnp.ones((n_groups, 2, cfg.d_model), dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": common.dense_init(ks[3], (cfg.d_model, cfg.vocab_size),
+                                     dtype=dtype),
+    }
+
+
+def _shared_block(p: Params, cfg: ModelConfig, x, g: int, positions, *,
+                  cache=None, cache_index=None, kernel_force=None):
+    norms = p["invocation_norms"][g]
+    h = common.rms_norm(x, norms[0], cfg.norm_eps)
+    if cache is None:
+        a = attention.forward(p["shared"]["attn"], cfg, h, positions,
+                              kernel_force=kernel_force)
+        new_kv = None
+    else:
+        k_g, v_g = cache
+        a, nk, nv = attention.decode(p["shared"]["attn"], cfg, h, k_g, v_g,
+                                     cache_index, kernel_force=kernel_force)
+        new_kv = (nk, nv)
+    x = x + a
+    h = common.rms_norm(x, norms[1], cfg.norm_eps)
+    mlp = p["shared"]["mlp"]
+    x = x + common.swiglu(h, mlp["w_gate"], mlp["w_up"], mlp["w_down"])
+    return x, new_kv
+
+
+def apply_group_range(p: Params, cfg: ModelConfig, x, lo: int, hi: int, *,
+                      kernel_force=None, remat: bool = True,
+                      train_shared: bool = True):
+    """Run groups [lo, hi).  Returns (x, aux=0)."""
+    B, T, _ = x.shape
+    positions = common.causal_positions(B, T)
+    shared_p = p if train_shared else jax.tree.map(
+        jax.lax.stop_gradient, {"shared": p["shared"],
+                                "invocation_norms": p["invocation_norms"]})
+
+    for g in range(lo, hi):
+        group = jax.tree.map(lambda a: a[g], p["mamba_groups"])
+
+        def body(h, lp):
+            out, _, _ = mamba2.forward(lp, cfg, h, kernel_force=kernel_force)
+            return h + out, None
+
+        body = common.maybe_checkpoint(body, remat)
+        x, _ = common.scan(body, x, group)
+        sp = p if train_shared else {**p, **shared_p}
+        x, _ = _shared_block(sp, cfg, x, g, positions,
+                             kernel_force=kernel_force)
+    return x, jnp.float32(0.0)
+
+
+def forward_hidden(p: Params, cfg: ModelConfig, tokens, *, kernel_force=None,
+                   lo: int = 0, hi: Optional[int] = None, remat: bool = True,
+                   **_):
+    n_groups, _ = group_layout(cfg)
+    x = p["embed"][tokens]
+    hi = hi if hi is not None else n_groups
+    return apply_group_range(p, cfg, x, lo, hi, kernel_force=kernel_force,
+                             remat=remat)
+
+
+def loss_fn(p: Params, cfg: ModelConfig, batch, *, kernel_force=None):
+    x, _ = forward_hidden(p, cfg, batch["tokens"], kernel_force=kernel_force)
+    x = common.rms_norm(x, p["final_norm"], cfg.norm_eps)
+    ce, n = ops.cross_entropy(x, p["lm_head"], batch["labels"],
+                              force=kernel_force)
+    return ce, {"ce": ce, "aux": jnp.float32(0.0), "n_tokens": n}
+
+
+def prefill(p: Params, cfg: ModelConfig, batch, *, kernel_force=None):
+    x, _ = forward_hidden(p, cfg, batch["tokens"], kernel_force=kernel_force,
+                          remat=False)
+    x = common.rms_norm(x[:, -1:], p["final_norm"], cfg.norm_eps)
+    return x @ p["lm_head"]
+
+
+def decode_step(p: Params, cfg: ModelConfig, tokens, cache, cache_index, *,
+                kernel_force=None, **_):
+    """cache: ssm_state (n_mamba,B,nh,hd,N), conv_state (n_mamba,B,K,din),
+    k/v (n_attn,B,S,Hkv,hd)."""
+    n_groups, m_per = group_layout(cfg)
+    x = p["embed"][tokens]
+    new_ssm, new_conv, new_k, new_v = [], [], [], []
+
+    for g in range(n_groups):
+        for m in range(m_per):
+            li = g * m_per + m
+            lp = jax.tree.map(lambda a: a[g, m], p["mamba_groups"])
+            out, nc, ns = mamba2.forward(
+                lp, cfg, x, kernel_force=kernel_force,
+                conv_state=cache["conv_state"][li],
+                ssm_state=cache["ssm_state"][li])
+            x = x + out
+            new_conv.append(nc)
+            new_ssm.append(ns)
+        x, kv = _shared_block(p, cfg, x, g, None,
+                              cache=(cache["k"][g], cache["v"][g]),
+                              cache_index=cache_index,
+                              kernel_force=kernel_force)
+        new_k.append(kv[0])
+        new_v.append(kv[1])
+
+    x = common.rms_norm(x, p["final_norm"], cfg.norm_eps)
+    logits = x @ p["lm_head"]
+    return logits, {
+        "ssm_state": jnp.stack(new_ssm),
+        "conv_state": jnp.stack(new_conv),
+        "k": jnp.stack(new_k),
+        "v": jnp.stack(new_v),
+    }

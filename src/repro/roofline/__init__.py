@@ -1,0 +1,2 @@
+"""Roofline analysis from compiled dry-run artifacts (TPU v5e model)."""
+from repro.roofline.analysis import Roofline, analyze, collective_bytes  # noqa: F401

@@ -1,0 +1,7 @@
+"""TPU v5e hardware constants (per chip) for the roofline model."""
+
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # bytes/s
+ICI_BW = 50e9                 # bytes/s per link (~ per-chip injection)
+HBM_BYTES = 16 * 2**30        # 16 GiB
+VMEM_BYTES = 128 * 2**20      # ~128 MiB vector memory (v5e)

@@ -1,0 +1,2 @@
+"""Training substrate: optimizers, schedules, checkpointing."""
+from repro.train.optim import adamw, cosine, sgd, wsd  # noqa: F401

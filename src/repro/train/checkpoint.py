@@ -1,0 +1,106 @@
+"""Checkpointing: pytree <-> .npz with structure manifest (no deps).
+
+Handles nested dicts/lists/tuples of arrays; restores exact dtypes/shapes.
+Round-based retention for FL (keep last K rounds).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "::"
+
+
+def _flatten(tree, prefix=""):
+    """npz can't store bfloat16 — save as float32 + dtype tag."""
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}{_SEP}"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}#{i}{_SEP}"))
+    else:
+        arr = np.asarray(tree)
+        key = prefix[:-len(_SEP)]
+        if arr.dtype == jnp.bfloat16:
+            out[key] = arr.astype(np.float32)
+            out[f"__dtype__{_SEP}{key}"] = np.frombuffer(
+                b"bfloat16", dtype=np.uint8)
+        else:
+            out[key] = arr
+    return out
+
+
+def _structure(tree):
+    if isinstance(tree, dict):
+        return {k: _structure(v) for k, v in tree.items()}
+    if isinstance(tree, tuple):
+        return ["__tuple__"] + [_structure(v) for v in tree]
+    if isinstance(tree, list):
+        return ["__list__"] + [_structure(v) for v in tree]
+    return None
+
+
+def save(path: str, tree: Any, metadata: Optional[dict] = None) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat = _flatten(tree)
+    manifest = {"structure": _structure(tree), "metadata": metadata or {}}
+    np.savez(path, __manifest__=np.frombuffer(
+        json.dumps(manifest).encode(), dtype=np.uint8), **flat)
+
+
+def load(path: str):
+    """Returns (tree, metadata)."""
+    data = np.load(path, allow_pickle=False)
+    manifest = json.loads(bytes(data["__manifest__"]).decode())
+    dtags = {k[len(f"__dtype__{_SEP}"):] for k in data.files
+             if k.startswith(f"__dtype__{_SEP}")}
+    flat = {}
+    for k in data.files:
+        if k == "__manifest__" or k.startswith(f"__dtype__{_SEP}"):
+            continue
+        arr = data[k]
+        flat[k] = jnp.asarray(arr, jnp.bfloat16) if k in dtags else arr
+
+    def rebuild(struct, prefix=""):
+        if isinstance(struct, dict):
+            return {k: rebuild(v, f"{prefix}{k}{_SEP}")
+                    for k, v in struct.items()}
+        if isinstance(struct, list):
+            tag, items = struct[0], struct[1:]
+            seq = [rebuild(v, f"{prefix}#{i}{_SEP}")
+                   for i, v in enumerate(items)]
+            return tuple(seq) if tag == "__tuple__" else seq
+        return jnp.asarray(flat[prefix[:-len(_SEP)]])
+
+    return rebuild(manifest["structure"]), manifest["metadata"]
+
+
+def save_round(ckpt_dir: str, round_idx: int, tree: Any,
+               metadata: Optional[dict] = None, keep: int = 3) -> str:
+    path = os.path.join(ckpt_dir, f"round_{round_idx:06d}.npz")
+    save(path, tree, {**(metadata or {}), "round": round_idx})
+    _gc(ckpt_dir, keep)
+    return path
+
+
+def latest(ckpt_dir: str) -> Optional[str]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    rounds = sorted(f for f in os.listdir(ckpt_dir)
+                    if re.fullmatch(r"round_\d+\.npz", f))
+    return os.path.join(ckpt_dir, rounds[-1]) if rounds else None
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    rounds = sorted(f for f in os.listdir(ckpt_dir)
+                    if re.fullmatch(r"round_\d+\.npz", f))
+    for f in rounds[:-keep]:
+        os.remove(os.path.join(ckpt_dir, f))

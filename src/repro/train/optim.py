@@ -1,0 +1,109 @@
+"""Optimizers + LR schedules (pure JAX, no optax).
+
+Functional API: ``opt = sgd(...)``; ``state = opt.init(params)``;
+``params, state = opt.update(params, grads, state, step)``.
+
+Includes the paper's setup (SGD momentum + cosine) and MiniCPM's WSD
+(warmup-stable-decay) schedule for the minicpm-2b assigned arch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]   # (params, grads, state, step) -> (params, state)
+    slots: int                   # optimizer-state multiples of params (memory model)
+
+
+# --------------------------------------------------------------------------
+# schedules
+# --------------------------------------------------------------------------
+def constant(lr: float) -> Callable[[jax.Array], jax.Array]:
+    return lambda step: jnp.float32(lr)
+
+
+def cosine(lr: float, total_steps: int, warmup: int = 0,
+           final_frac: float = 0.0) -> Callable:
+    def sched(step):
+        step = jnp.minimum(step, total_steps)
+        warm = jnp.where(warmup > 0, step / jnp.maximum(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1),
+                     0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * jnp.minimum(warm, 1.0) * cos
+    return sched
+
+
+def wsd(lr: float, total_steps: int, warmup_frac: float = 0.01,
+        stable_frac: float = 0.89, decay_frac: float = 0.10) -> Callable:
+    """MiniCPM warmup-stable-decay [arXiv:2404.06395]."""
+    w = max(1, int(total_steps * warmup_frac))
+    s = int(total_steps * stable_frac)
+    d = max(1, total_steps - w - s)
+
+    def sched(step):
+        step = jnp.minimum(step, total_steps)
+        in_warm = step < w
+        in_stable = (step >= w) & (step < w + s)
+        decay_t = jnp.clip((step - w - s) / d, 0.0, 1.0)
+        return jnp.where(
+            in_warm, lr * step / w,
+            jnp.where(in_stable, lr, lr * 0.5 * (1 + jnp.cos(jnp.pi * decay_t))))
+    return sched
+
+
+# --------------------------------------------------------------------------
+# optimizers
+# --------------------------------------------------------------------------
+def sgd(schedule: Callable, momentum: float = 0.9,
+        weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(params, grads, vel, step):
+        lr = schedule(step)
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p,
+                                 grads, params)
+        vel = jax.tree.map(lambda v, g: momentum * v + g, vel, grads)
+        params = jax.tree.map(lambda p, v: p - lr * v, params, vel)
+        return params, vel
+
+    return Optimizer(init, update, slots=1)
+
+
+def adamw(schedule: Callable, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params),
+                "v": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(params, grads, state, step):
+        lr = schedule(step)
+        t = step + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                         state["v"], grads)
+        mh = jax.tree.map(lambda x: x / (1 - b1 ** t), m)
+        vh = jax.tree.map(lambda x: x / (1 - b2 ** t), v)
+        params = jax.tree.map(
+            lambda p, mh_, vh_: p - lr * (mh_ / (jnp.sqrt(vh_) + eps)
+                                          + weight_decay * p),
+            params, mh, vh)
+        return params, {"m": m, "v": v}
+
+    return Optimizer(init, update, slots=2)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm

@@ -1,0 +1,9 @@
+"""Shared fixtures.  NOTE: tests run on the default single CPU device —
+never import repro.launch.dryrun here (it forces 512 host devices)."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,136 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED
+variant of each family runs one forward/train step and one decode step on
+CPU; output shapes asserted, no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced_config
+from repro.configs.shapes import shape_applicable, SHAPE_BY_NAME
+from repro.launch import steps as step_lib
+from repro.models import build, init_cache
+
+
+def _batch(cfg, key, B=2, T=16):
+    toks = jax.random.randint(key, (B, T), 0, cfg.vocab_size)
+    b = {"tokens": toks, "labels": toks}
+    if cfg.is_encoder_decoder:
+        b["encoder_embeds"] = jax.random.normal(
+            key, (B, cfg.max_source_positions, cfg.d_model)) * 0.1
+    if cfg.family == "vlm":
+        P = cfg.frontend_embed_tokens
+        b["vision_embeds"] = jax.random.normal(key, (B, P, cfg.d_model)) * 0.1
+        b["mrope_positions"] = jnp.broadcast_to(
+            jnp.arange(T, dtype=jnp.int32), (3, B, T))
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_constraints(arch):
+    cfg = get_reduced_config(arch)
+    assert cfg.num_layers <= 4 and cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_train_step(arch):
+    cfg = get_reduced_config(arch)
+    lm = build(cfg)
+    key = jax.random.PRNGKey(0)
+    params = lm.init(key)
+    batch = _batch(cfg, jax.random.fold_in(key, 1))
+
+    loss, metrics = lm.loss_fn(params, batch, kernel_force="ref")
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss))
+
+    step = step_lib.make_train_step(lm, lr=1e-2, kernel_force="ref")
+    opt = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    params2, opt2, m = jax.jit(step)(params, opt, batch)
+    assert bool(jnp.isfinite(m["loss"]))
+    # params actually moved
+    moved = any(
+        float(jnp.abs(a - b).max()) > 0
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert moved
+    # another step reduces loss on the same batch (sanity, not always
+    # monotone — allow small tolerance)
+    loss2, _ = lm.loss_fn(params2, batch, kernel_force="ref")
+    assert float(loss2) < float(loss) + 0.5
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    cfg = get_reduced_config(arch)
+    lm = build(cfg)
+    key = jax.random.PRNGKey(0)
+    params = lm.init(key)
+    B, S = 2, 12
+    cache = init_cache(cfg, B, S)
+    if cfg.is_encoder_decoder:
+        cache["enc_out"] = (jax.random.normal(
+            key, cache["enc_out"].shape) * 0.1).astype(cache["enc_out"].dtype)
+    tok = jax.random.randint(key, (B, 1), 0, cfg.vocab_size)
+    kwargs = {}
+    if cfg.family == "vlm":
+        kwargs["mrope_positions"] = jnp.zeros((3, B, 1), jnp.int32)
+    logits, new_cache = lm.decode_step(params, tok, cache, jnp.int32(0),
+                                       kernel_force="ref", **kwargs)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    # cache structure preserved
+    assert set(new_cache) == set(cache)
+    for k in cache:
+        assert new_cache[k].shape == cache[k].shape
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "h2o-danube-3-4b", "zamba2-1.2b"])
+def test_decode_matches_prefill(arch):
+    """Sequential decode logits == prefill last-token logits."""
+    cfg = get_reduced_config(arch)
+    lm = build(cfg)
+    key = jax.random.PRNGKey(0)
+    params = lm.init(key)
+    B, T = 1, 10
+    toks = jax.random.randint(key, (B, T), 0, cfg.vocab_size)
+    cache = init_cache(cfg, B, T)
+    logits = None
+    for t in range(T):
+        logits, cache = lm.decode_step(params, toks[:, t:t + 1], cache,
+                                       jnp.int32(t), kernel_force="ref")
+    pf = lm.prefill(params, {"tokens": toks}, kernel_force="ref")
+    # bf16 cache states (conv/kv) bound the achievable agreement
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(pf),
+                               atol=3e-2, rtol=5e-2)
+
+
+def test_shape_applicability_policy():
+    long = SHAPE_BY_NAME["long_500k"]
+    dec32 = SHAPE_BY_NAME["decode_32k"]
+    # sub-quadratic archs run long_500k
+    for arch in ("rwkv6-7b", "zamba2-1.2b", "h2o-danube-3-4b"):
+        ok, _ = shape_applicable(get_config(arch), long)
+        assert ok, arch
+    # pure full-attention archs skip it
+    for arch in ("yi-6b", "qwen2-7b", "qwen3-moe-235b-a22b"):
+        ok, why = shape_applicable(get_config(arch), long)
+        assert not ok and "quadratic" in why
+    # whisper decode_32k runs (extended positions); long_500k does not
+    ok, _ = shape_applicable(get_config("whisper-small"), dec32)
+    assert ok
+    ok, why = shape_applicable(get_config("whisper-small"), long)
+    assert not ok
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_matches_init(arch):
+    """Analytic param_count() agrees with actual init on reduced configs."""
+    cfg = get_reduced_config(arch)
+    lm = build(cfg)
+    shapes = jax.eval_shape(lambda: lm.init(jax.random.PRNGKey(0)))
+    actual = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(shapes))
+    analytic = cfg.param_count()
+    # analytic model ignores small extras (norm scales, lora adapters,
+    # positional embeddings): require agreement within 20%
+    assert abs(actual - analytic) / actual < 0.20, (actual, analytic)

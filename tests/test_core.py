@@ -1,0 +1,216 @@
+"""FeDepth core: memory model, decomposition, block training, aggregation,
+partial training, MKD."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.configs.preresnet20 import CONFIG as RN20, reduced as rn_reduced
+from repro.core import aggregation, blockwise, mkd
+from repro.core.decomposition import (Decomposition, decompose,
+                                      width_equivalent_budget)
+from repro.core.memory_model import lm_memory, resnet_memory, vit_memory
+from repro.models import build, resnet
+
+
+# ------------------------------------------------------------- memory model
+def test_table1_depth_monotone():
+    """Paper Table 1: PreResNet block memory decreases with depth."""
+    mem = resnet_memory(RN20, batch=128)
+    costs = [u.train_bytes() for u in mem.units]
+    assert costs == sorted(costs, reverse=True)
+    # stage structure: B1-3 equal, B5-6 equal, B8-9 equal
+    assert costs[0] == costs[1] == costs[2]
+    assert costs[4] == costs[5]
+    assert costs[7] == costs[8]
+
+
+def test_table1_width_vs_depth_relation():
+    """Paper claim: a x1/6-width budget trains the full net depth-wise
+    (with the paper's own ~10% slack)."""
+    mem = resnet_memory(RN20, batch=128)
+    from repro.fl.simulate import BUDGET_SLACK
+    budget = int(width_equivalent_budget(mem, 1 / 6) * BUDGET_SLACK)
+    dec = decompose(mem, budget)
+    assert dec.covers_all(len(mem.units))
+    # and a x1-width budget trains everything in very few blocks
+    dec_full = decompose(mem, width_equivalent_budget(mem, 1.0))
+    assert dec_full.num_blocks <= dec.num_blocks
+
+
+def test_activation_dominance():
+    """Paper Fig.1: activations, not params, dominate training memory."""
+    mem = resnet_memory(RN20, batch=128)
+    act = sum(u.activations for u in mem.units)
+    par = sum(u.params for u in mem.units)
+    assert act > 5 * par
+
+
+def test_lm_memory_moe_pricing():
+    cfg = get_reduced_config("qwen3-moe-235b-a22b")
+    mem = lm_memory(cfg, batch=2, seq=16)
+    assert len(mem.units) == cfg.num_layers
+    assert all(u.train_bytes() > 0 for u in mem.units)
+
+
+# ------------------------------------------------------------ decomposition
+def test_decompose_respects_budget():
+    mem = resnet_memory(RN20, batch=128)
+    for frac in (0.15, 0.3, 0.6, 1.0):
+        budget = int(mem.full_train_bytes() * frac)
+        try:
+            dec = decompose(mem, budget)
+        except MemoryError:
+            continue
+        for lo, hi in dec.blocks:
+            assert mem.block_train_bytes(lo, hi) <= budget
+
+
+def test_partial_training_skips_prefix():
+    mem = resnet_memory(RN20, batch=128)
+    tight = mem.block_train_bytes(5, 6)  # only later blocks fit
+    dec = decompose(mem, tight)
+    assert dec.skipped_prefix > 0
+    assert dec.blocks[0][0] == dec.skipped_prefix
+    with pytest.raises(MemoryError):
+        decompose(mem, mem.units[-1].train_bytes() // 10)
+
+
+def test_no_partial_raises():
+    mem = resnet_memory(RN20, batch=128)
+    tight = mem.block_train_bytes(5, 6)
+    with pytest.raises(MemoryError):
+        decompose(mem, tight, allow_partial=False)
+
+
+# --------------------------------------------------------- block training
+def _tiny_resnet_setup(key):
+    cfg = rn_reduced(num_classes=4, image_size=16)
+    params = resnet.init(key, cfg)
+    imgs = jax.random.normal(jax.random.fold_in(key, 1), (8, 16, 16, 3))
+    lbls = jax.random.randint(jax.random.fold_in(key, 2), (8,), 0, 4)
+    return cfg, params, {"images": imgs, "labels": lbls}
+
+
+def test_blockwise_training_reduces_loss():
+    cfg, params, batch = _tiny_resnet_setup(jax.random.PRNGKey(0))
+    runner = blockwise.resnet_runner(cfg)
+    dec = Decomposition(((0, 1), (1, 2), (2, 3)), 0, 0)
+    l0 = float(blockwise.full_model_loss(runner, params, batch))
+    p2 = blockwise.client_update(runner, params, dec, [batch], lr=0.05,
+                                 local_steps=3)
+    l1 = float(blockwise.full_model_loss(runner, p2, batch))
+    assert l1 < l0
+
+
+def test_blockwise_frozen_prefix_invariant():
+    """Training block j must not change blocks < j (within the subproblem)."""
+    cfg, params, batch = _tiny_resnet_setup(jax.random.PRNGKey(1))
+    runner = blockwise.resnet_runner(cfg)
+    dec = Decomposition(((1, 2),), 0, 0)  # only the middle block trains
+    p2 = blockwise.client_update(runner, params, dec, [batch], lr=0.05)
+    # block 0 and stem untouched
+    for a, b in zip(jax.tree.leaves(params["blocks"][0]),
+                    jax.tree.leaves(p2["blocks"][0])):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(params["stem"], p2["stem"])
+    # block 1 and classifier changed
+    assert any(float(jnp.abs(a - b).max()) > 0 for a, b in zip(
+        jax.tree.leaves(params["blocks"][1]),
+        jax.tree.leaves(p2["blocks"][1])))
+    assert float(jnp.abs(params["classifier"]["w"]
+                         - p2["classifier"]["w"]).max()) > 0
+
+
+def test_blockwise_lm_families():
+    key = jax.random.PRNGKey(2)
+    for arch in ("yi-6b", "rwkv6-7b", "zamba2-1.2b"):
+        cfg = get_reduced_config(arch)
+        lm = build(cfg)
+        params = lm.init(key)
+        toks = jax.random.randint(key, (2, 12), 0, cfg.vocab_size)
+        batch = {"tokens": toks, "labels": toks}
+        runner = blockwise.lm_runner(lm, kernel_force="ref")
+        dec = Decomposition(tuple((i, i + 1) for i in range(runner.n_units)),
+                            0, 0)
+        l0 = float(blockwise.full_model_loss(runner, params, batch))
+        p2 = blockwise.client_update(runner, params, dec, [batch], lr=0.1,
+                                     local_steps=2)
+        l1 = float(blockwise.full_model_loss(runner, p2, batch))
+        assert l1 < l0, arch
+
+
+def test_fedprox_regularizes():
+    cfg, params, batch = _tiny_resnet_setup(jax.random.PRNGKey(3))
+    runner = blockwise.resnet_runner(cfg)
+    dec = Decomposition(((0, 3),), 0, 0)
+    p_free = blockwise.client_update(runner, params, dec, [batch], lr=0.05,
+                                     local_steps=3, prox_mu=0.0)
+    p_prox = blockwise.client_update(runner, params, dec, [batch], lr=0.05,
+                                     local_steps=3, prox_mu=10.0)
+
+    def dist(a, b):
+        return sum(float(jnp.sum((x - y) ** 2)) for x, y in zip(
+            jax.tree.leaves(a), jax.tree.leaves(b)))
+
+    assert dist(p_prox, params) < dist(p_free, params)
+
+
+# ------------------------------------------------------------- aggregation
+def test_fedavg_weighted_mean():
+    t1 = {"w": jnp.ones((3,)), "b": [jnp.zeros((2,))]}
+    t2 = {"w": jnp.full((3,), 3.0), "b": [jnp.full((2,), 2.0)]}
+    avg = aggregation.fedavg([t1, t2], [1.0, 3.0])
+    np.testing.assert_allclose(avg["w"], 2.5)
+    np.testing.assert_allclose(avg["b"][0], 1.5)
+
+
+def test_fedavg_identity():
+    t = {"w": jnp.arange(4.0)}
+    avg = aggregation.fedavg([t, t, t], [1, 2, 3])
+    np.testing.assert_allclose(avg["w"], t["w"], rtol=1e-6)
+
+
+def test_masked_aggregation_partial_clients():
+    g = {"w": jnp.zeros((2,))}
+    c1 = {"w": jnp.ones((2,))}     # trained
+    c2 = {"w": jnp.full((2,), 9.)}  # did NOT train w
+    m1 = {"w": jnp.ones((2,))}
+    m2 = {"w": jnp.zeros((2,))}
+    out = aggregation.aggregate_masked(g, [c1, c2], [1.0, 1.0], [m1, m2])
+    np.testing.assert_allclose(out["w"], 1.0)  # only c1 counts
+
+
+# --------------------------------------------------------------------- MKD
+def test_kl_logits_zero_for_identical():
+    l = jnp.array([[1.0, 2.0, 3.0]])
+    assert float(mkd.kl_logits(l, l)) == pytest.approx(0.0, abs=1e-6)
+    assert float(mkd.kl_logits(l, l + 5.0)) == pytest.approx(0.0, abs=1e-5)
+
+
+def test_mkd_converges_models():
+    """Mutual KD pulls two different models' predictions together."""
+    key = jax.random.PRNGKey(4)
+    cfg = rn_reduced(num_classes=4, image_size=16)
+    p1 = resnet.init(jax.random.fold_in(key, 0), cfg)
+    p2 = resnet.init(jax.random.fold_in(key, 1), cfg)
+    imgs = jax.random.normal(key, (8, 16, 16, 3))
+    lbls = jax.random.randint(key, (8,), 0, 4)
+    batch = {"images": imgs, "labels": lbls}
+
+    def logits_fn(p, b):
+        return resnet.apply(p, cfg, b["images"])
+
+    def task_fn(p, b):
+        lg = logits_fn(p, b)
+        lz = jax.nn.logsumexp(lg, -1)
+        gold = jnp.take_along_axis(lg, b["labels"][:, None], -1)[:, 0]
+        return (lz - gold).mean()
+
+    kl0 = float(mkd.kl_logits(logits_fn(p1, batch), logits_fn(p2, batch)))
+    out = mkd.mkd_local_update(logits_fn, task_fn, [p1, p2], [batch],
+                               lr=0.05, local_steps=5)
+    kl1 = float(mkd.kl_logits(logits_fn(out[0], batch),
+                              logits_fn(out[1], batch)))
+    assert kl1 < kl0

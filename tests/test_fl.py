@@ -1,0 +1,110 @@
+"""FL runtime: data partitions, width slicing, baselines, end-to-end rounds."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.preresnet20 import CONFIG as RN20, reduced as rn_reduced
+from repro.fl import baselines, width as width_util
+from repro.fl.data import build_federated, dirichlet_partition
+from repro.fl.simulate import SimConfig, client_ratios, run_experiment
+from repro.models import resnet
+
+
+@pytest.fixture(scope="module")
+def tiny_data():
+    return build_federated(num_clients=8, partition="dirichlet", alpha=1.0,
+                           n_train=640, n_test=200, image_size=16, seed=0)
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return rn_reduced(num_classes=10, image_size=16)
+
+
+# ---------------------------------------------------------------- width ops
+def test_slice_then_pad_roundtrip():
+    key = jax.random.PRNGKey(0)
+    params = resnet.init(key, RN20)
+    sub, sub_cfg = width_util.slice_resnet(params, RN20, 0.5)
+    padded, mask = width_util.pad_resnet(sub, RN20, sub_cfg)
+    # padded values inside the mask equal the original slice
+    flat_p = width_util._flatten(padded)
+    flat_m = width_util._flatten(mask)
+    flat_g = width_util._flatten(params)
+    for k in flat_p:
+        inside = np.asarray(flat_m[k]) > 0
+        np.testing.assert_allclose(np.asarray(flat_p[k])[inside],
+                                   np.asarray(flat_g[k])[inside], rtol=1e-6)
+        # outside the mask is zero
+        assert np.all(np.asarray(flat_p[k])[~inside] == 0)
+
+
+def test_sliced_subnet_runs():
+    key = jax.random.PRNGKey(1)
+    params = resnet.init(key, RN20)
+    for r in (1 / 8, 1 / 4, 1 / 2):
+        sub, sub_cfg = width_util.slice_resnet(params, RN20, r)
+        out = resnet.apply(sub, sub_cfg, jnp.zeros((2, 32, 32, 3)))
+        assert out.shape == (2, 10)
+
+
+def test_heterofl_aggregate_respects_coverage():
+    g = {"w": jnp.zeros((4,))}
+    p1 = {"w": jnp.array([1.0, 1.0, 0.0, 0.0])}
+    m1 = {"w": jnp.array([1.0, 1.0, 0.0, 0.0])}
+    p2 = {"w": jnp.array([3.0, 3.0, 3.0, 0.0])}
+    m2 = {"w": jnp.array([1.0, 1.0, 1.0, 0.0])}
+    out = baselines.heterofl_aggregate(g, [p1, p2], [m1, m2], [1.0, 1.0])
+    np.testing.assert_allclose(out["w"], [2.0, 2.0, 3.0, 0.0])
+
+
+# ---------------------------------------------------------------- scenarios
+def test_client_ratio_distribution():
+    r = client_ratios(100, "fair")
+    vals, counts = np.unique(np.round(r, 4), return_counts=True)
+    assert len(vals) == 4
+    assert counts.max() - counts.min() <= 1
+
+
+def test_depthfl_budget_to_depth_monotone():
+    cfg = RN20
+    from repro.core.memory_model import resnet_memory
+    mem = resnet_memory(cfg, 128)
+    budgets = [mem.full_train_bytes() * f for f in (0.2, 0.5, 1.0)]
+    depths = [baselines.depthfl_depth_for_budget(cfg, int(b), 128)
+              for b in budgets]
+    assert depths == sorted(depths)
+    assert depths[-1] == cfg.num_blocks
+
+
+# ---------------------------------------------------------------- end-to-end
+@pytest.mark.parametrize("method", ["fedavg", "heterofl", "fedepth"])
+def test_run_experiment_smoke(method, tiny_data, tiny_cfg):
+    sim = SimConfig(rounds=2, participation=0.5, lr=0.05, local_steps=1,
+                    batch_size=32, scenario="fair", seed=0)
+    acc, hist = run_experiment(method, tiny_data, sim, model_cfg=tiny_cfg,
+                               eval_every=2)
+    assert 0.0 <= acc <= 1.0
+    assert len(hist) >= 1
+
+
+def test_fedepth_learns_above_chance(tiny_data, tiny_cfg):
+    sim = SimConfig(rounds=8, participation=0.5, lr=0.08, local_steps=2,
+                    batch_size=64, scenario="fair", seed=0)
+    acc, _ = run_experiment("fedepth", tiny_data, sim, model_cfg=tiny_cfg,
+                            eval_every=8)
+    assert acc > 0.15  # 10 classes -> chance is 0.10
+
+
+def test_fedepth_robust_to_scenarios(tiny_data, tiny_cfg):
+    """FeDepth runs under all three budget scenarios without error
+    (paper: robustness to heterogeneous budgets)."""
+    for scen in ("fair", "lack", "surplus"):
+        sim = SimConfig(rounds=1, participation=0.5, lr=0.05, local_steps=1,
+                        batch_size=32, scenario=scen, seed=0)
+        acc, _ = run_experiment("m-fedepth", tiny_data, sim,
+                                model_cfg=tiny_cfg, eval_every=1)
+        assert 0.0 <= acc <= 1.0

@@ -1,0 +1,194 @@
+"""Per-kernel validation: Pallas (interpret=True) vs the pure-jnp oracle,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.chunked_ce import chunked_cross_entropy
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_jnp import flash_attention_jnp
+from repro.kernels.mamba2_ssd import mamba2_scan
+from repro.kernels.rwkv6_scan import rwkv6_scan
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------- attention
+@pytest.mark.parametrize("B,T,Hq,Hkv,D", [
+    (1, 64, 2, 1, 32),
+    (2, 128, 4, 2, 64),
+    (1, 96, 4, 4, 32),     # MHA, ragged T vs block
+    (2, 256, 8, 2, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 48), (False, 0)])
+def test_flash_attention_vs_ref(B, T, Hq, Hkv, D, dtype, causal, window):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, T, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, T, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, T, Hkv, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, sliding_window=window,
+                          interpret=True, block_q=32, block_k=32)
+    expect = ref.attention(q, k, v, causal=causal, sliding_window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 32), (False, 0)])
+def test_flash_jnp_matches_ref(causal, window):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    B, T, Hq, Hkv, D = 2, 200, 4, 2, 32
+    q = jax.random.normal(ks[0], (B, T, Hq, D))
+    k = jax.random.normal(ks[1], (B, T, Hkv, D))
+    v = jax.random.normal(ks[2], (B, T, Hkv, D))
+    out = flash_attention_jnp(q, k, v, causal, window, 0, None, 64)
+    expect = ref.attention(q, k, v, causal=causal, sliding_window=window)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+    # gradients
+    g1 = jax.grad(lambda *a: flash_attention_jnp(*a, causal, window, 0,
+                                                 None, 64).sum(),
+                  argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(lambda *a: ref.attention(*a, causal=causal,
+                                           sliding_window=window).sum(),
+                  argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, atol=2e-4, rtol=2e-4)
+
+
+def test_attention_decode_offset():
+    """q_offset semantics: decode of position t == row t of full attn."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    B, T, H, D = 1, 32, 2, 16
+    q = jax.random.normal(ks[0], (B, T, H, D))
+    k = jax.random.normal(ks[1], (B, T, H, D))
+    v = jax.random.normal(ks[2], (B, T, H, D))
+    full = ref.attention(q, k, v, causal=True)
+    t = 17
+    one = ref.attention(q[:, t:t + 1], k, v, causal=True, q_offset=t)
+    np.testing.assert_allclose(one[:, 0], full[:, t], atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------- rwkv6
+@pytest.mark.parametrize("B,T,H,D", [(1, 32, 1, 16), (2, 96, 2, 32),
+                                     (1, 100, 3, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwkv6_vs_ref(B, T, H, D, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    r = jax.random.normal(ks[0], (B, T, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, T, H, D), dtype)
+    v = jax.random.normal(ks[2], (B, T, H, D), dtype)
+    w = (jax.random.normal(ks[3], (B, T, H, D)) * 0.5).astype(dtype)
+    u = (jax.random.normal(ks[4], (H, D)) * 0.1).astype(dtype)
+    y, sT = rwkv6_scan(r, k, v, w, u, block_t=32, interpret=True)
+    y_ref, sT_ref = ref.rwkv6_scan(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(sT, sT_ref, atol=1e-2 if dtype == jnp.bfloat16
+                               else 1e-4, rtol=1e-2)
+
+
+def test_rwkv6_state_chaining():
+    """Scanning two halves with carried state == one full scan."""
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    B, T, H, D = 1, 64, 2, 16
+    r, k, v = (jax.random.normal(ks[i], (B, T, H, D)) for i in range(3))
+    w = jax.random.normal(ks[3], (B, T, H, D)) * 0.3
+    u = jax.random.normal(ks[4], (H, D)) * 0.1
+    y_full, s_full = ref.rwkv6_scan(r, k, v, w, u)
+    h = T // 2
+    y1, s1 = ref.rwkv6_scan(r[:, :h], k[:, :h], v[:, :h], w[:, :h], u)
+    y2, s2 = ref.rwkv6_scan(r[:, h:], k[:, h:], v[:, h:], w[:, h:], u, s1)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_full,
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(s2, s_full, atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------- mamba2
+@pytest.mark.parametrize("B,T,H,P,N", [(1, 32, 1, 16, 8), (2, 96, 3, 32, 16),
+                                       (1, 80, 2, 16, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mamba2_vs_ref(B, T, H, P, N, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(5), 6)
+    x = jax.random.normal(ks[0], (B, T, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H))).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, T, N), dtype)
+    Cm = jax.random.normal(ks[4], (B, T, N), dtype)
+    D = jax.random.normal(ks[5], (H,))
+    y, hT = mamba2_scan(x, dt, A, Bm, Cm, D, block_t=32, interpret=True)
+    y_ref, hT_ref = ref.mamba2_scan(x, dt, A, Bm, Cm, D)
+    scale = float(jnp.abs(y_ref.astype(jnp.float32)).max())
+    np.testing.assert_allclose(np.asarray(y, np.float32) / scale,
+                               np.asarray(y_ref, np.float32) / scale,
+                               **_tol(dtype))
+    np.testing.assert_allclose(hT, hT_ref, atol=5e-2 if dtype == jnp.bfloat16
+                               else 1e-4, rtol=1e-2)
+
+
+def test_mamba2_state_chaining():
+    ks = jax.random.split(jax.random.PRNGKey(6), 6)
+    B, T, H, P, N = 1, 64, 2, 16, 8
+    x = jax.random.normal(ks[0], (B, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, T, N))
+    Cm = jax.random.normal(ks[4], (B, T, N))
+    D = jnp.zeros((H,))
+    y_full, h_full = ref.mamba2_scan(x, dt, A, Bm, Cm, D)
+    h = T // 2
+    y1, s1 = ref.mamba2_scan(x[:, :h], dt[:, :h], A, Bm[:, :h], Cm[:, :h], D)
+    y2, s2 = ref.mamba2_scan(x[:, h:], dt[:, h:], A, Bm[:, h:], Cm[:, h:],
+                             D, s1)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_full,
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(s2, h_full, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------- chunked CE
+@pytest.mark.parametrize("B,T,D,V,bt,bv", [
+    (1, 16, 8, 40, 8, 16),
+    (2, 24, 32, 100, 16, 32),
+    (2, 32, 16, 77, 32, 19),   # ragged vocab blocks
+])
+def test_chunked_ce_vs_ref(B, T, D, V, bt, bv):
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    h = jax.random.normal(ks[0], (B, T, D))
+    w = jax.random.normal(ks[1], (D, V)) * 0.1
+    lbl = jax.random.randint(ks[2], (B, T), 0, V)
+    lbl = lbl.at[0, :2].set(-100)
+    loss, n = chunked_cross_entropy(h, w, lbl, block_t=bt, block_v=bv,
+                                    interpret=True)
+    loss_ref, n_ref = ref.cross_entropy_logits(h, w, lbl)
+    assert int(n) == int(n_ref)
+    np.testing.assert_allclose(loss, loss_ref, atol=1e-5, rtol=1e-5)
+
+
+def test_ce_chunked_jnp_grads_match_ref():
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    h = jax.random.normal(ks[0], (2, 16, 16))
+    w = jax.random.normal(ks[1], (16, 50)) * 0.2
+    lbl = jax.random.randint(ks[2], (2, 16), 0, 50)
+
+    def f_chunk(h, w):
+        return ops._ce_chunked_jnp(h, w, lbl, chunk=8)[0]
+
+    def f_ref(h, w):
+        return ref.cross_entropy_logits(h, w, lbl)[0]
+
+    g1 = jax.grad(f_chunk, argnums=(0, 1))(h, w)
+    g2 = jax.grad(f_ref, argnums=(0, 1))(h, w)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------- ops dispatch
+def test_ops_backend_selection():
+    assert ops._backend(None) in ("ref", "pallas")
+    assert ops._backend("ref") == "ref"
+    assert ops._backend("interpret") == "interpret"
+    assert ops._backend("naive") == "naive"

@@ -1,0 +1,149 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation
+from repro.core.decomposition import decompose
+from repro.core.memory_model import ModelMemory, UnitCost
+from repro.fl.data import dirichlet_partition, pathological_partition
+from repro.roofline.analysis import collective_bytes
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------- decompose
+@st.composite
+def memories(draw):
+    n = draw(st.integers(2, 12))
+    units = []
+    for i in range(n):
+        p = draw(st.integers(1_000, 500_000))
+        a = draw(st.integers(1_000, 5_000_000))
+        units.append(UnitCost(f"u{i}", p, a, a // 4))
+    embed = UnitCost("embed", 10_000, 50_000, 50_000)
+    head = UnitCost("head", 20_000, 80_000, 1_000)
+    return ModelMemory(units, embed, head)
+
+
+@given(memories(), st.floats(0.05, 1.5))
+def test_decomposition_invariants(mem, frac):
+    budget = int(mem.full_train_bytes() * frac)
+    try:
+        dec = decompose(mem, budget)
+    except MemoryError:
+        return
+    n = len(mem.units)
+    # blocks are contiguous, ordered, non-overlapping, end at n
+    prev = dec.skipped_prefix
+    for lo, hi in dec.blocks:
+        assert lo == prev and hi > lo
+        prev = hi
+    assert prev == n
+    # every block respects the budget
+    for lo, hi in dec.blocks:
+        assert mem.block_train_bytes(lo, hi) <= budget
+    # maximality: no block could absorb its successor
+    for i in range(len(dec.blocks) - 1):
+        lo, hi = dec.blocks[i]
+        nxt_hi = dec.blocks[i + 1][1]
+        assert mem.block_train_bytes(lo, min(hi + 1, nxt_hi)) > budget or \
+            hi + 1 > n
+
+
+@given(memories())
+def test_bigger_budget_no_more_blocks(mem):
+    b1 = int(mem.full_train_bytes() * 0.3)
+    b2 = int(mem.full_train_bytes() * 0.9)
+    try:
+        d1 = decompose(mem, b1)
+        d2 = decompose(mem, b2)
+    except MemoryError:
+        return
+    assert d2.num_blocks + d2.skipped_prefix <= d1.num_blocks + d1.skipped_prefix + len(mem.units)
+    assert d2.skipped_prefix <= d1.skipped_prefix
+
+
+# ---------------------------------------------------------------- fedavg
+@given(st.integers(2, 5), st.integers(1, 4),
+       st.lists(st.floats(0.1, 10.0), min_size=2, max_size=5))
+def test_fedavg_convexity(n_clients, dim, weights):
+    if len(weights) != n_clients:
+        weights = (weights * n_clients)[:n_clients]
+    rng = np.random.default_rng(0)
+    trees = [{"w": jnp.asarray(rng.normal(size=(dim,)))}
+             for _ in range(n_clients)]
+    avg = aggregation.fedavg(trees, weights)
+    lo = np.min([t["w"] for t in trees], axis=0)
+    hi = np.max([t["w"] for t in trees], axis=0)
+    assert np.all(np.asarray(avg["w"]) >= lo - 1e-5)
+    assert np.all(np.asarray(avg["w"]) <= hi + 1e-5)
+
+
+@given(st.integers(2, 6))
+def test_fedavg_permutation_invariant(n):
+    rng = np.random.default_rng(1)
+    trees = [{"w": jnp.asarray(rng.normal(size=(3,)))} for _ in range(n)]
+    ws = list(rng.uniform(0.5, 2.0, size=n))
+    a = aggregation.fedavg(trees, ws)
+    perm = rng.permutation(n)
+    b = aggregation.fedavg([trees[i] for i in perm], [ws[i] for i in perm])
+    np.testing.assert_allclose(a["w"], b["w"], atol=1e-5)
+
+
+# ---------------------------------------------------------------- partitions
+@given(st.integers(3, 20), st.floats(0.1, 10.0))
+def test_dirichlet_partition_covers(num_clients, alpha):
+    rng = np.random.default_rng(2)
+    y = rng.integers(0, 10, size=500).astype(np.int32)
+    parts = dirichlet_partition(y, num_clients, alpha, balanced=False, seed=3)
+    assert len(parts) == num_clients
+    all_idx = np.concatenate([p for p in parts if len(p)])
+    assert all_idx.max() < len(y) and all_idx.min() >= 0
+    # unbalanced partition never duplicates an index across clients
+    assert len(np.unique(all_idx)) == len(all_idx)
+
+
+@given(st.integers(4, 20))
+def test_balanced_partition_equal_sizes(num_clients):
+    rng = np.random.default_rng(4)
+    y = rng.integers(0, 10, size=1000).astype(np.int32)
+    parts = dirichlet_partition(y, num_clients, 0.5, balanced=True, seed=5)
+    sizes = {len(p) for p in parts}
+    assert len(sizes) == 1
+
+
+@given(st.integers(4, 16), st.integers(2, 5))
+def test_pathological_partition_label_budget(num_clients, labels_per):
+    rng = np.random.default_rng(6)
+    y = rng.integers(0, 10, size=800).astype(np.int32)
+    parts = pathological_partition(y, num_clients, labels_per, seed=7)
+    for p in parts:
+        assert len(np.unique(y[p])) <= labels_per
+
+
+# ---------------------------------------------------------------- HLO parse
+@given(st.integers(1, 4), st.integers(1, 64), st.integers(1, 64))
+def test_collective_bytes_parser(n, a, b):
+    hlo = "\n".join(
+        f"  %ar.{i} = f32[{a},{b}] all-reduce(f32[{a},{b}] %x.{i})"
+        for i in range(n))
+    out = collective_bytes(hlo)
+    assert out.get("all-reduce", 0) == n * a * b * 4
+
+
+def test_collective_bytes_mixed_kinds():
+    hlo = """
+  %ag = bf16[8,128] all-gather(bf16[1,128] %p), dimensions={0}
+  %ar = f32[64] all-reduce(f32[64] %q), to_apply=%add
+  %a2a = f32[4,32] all-to-all(f32[4,32] %r)
+  %cp = u32[16] collective-permute(u32[16] %s)
+  %done = f32[64] all-reduce-done(f32[64] %ar2)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 8 * 128 * 2
+    assert out["all-reduce"] == 64 * 4
+    assert out["all-to-all"] == 4 * 32 * 4
+    assert out["collective-permute"] == 16 * 4
