@@ -63,12 +63,33 @@ def main() -> None:
     print("# CKA by depth (paper Fig.5: early > late)")
     for i, c in enumerate(ckas):
         print(f"  after block {i + 1}: CKA={c:.3f}")
-
     early_ge_late = ckas[0] >= ckas[-1]
+
+    # end-to-end: aggregate clients that SKIP block 0 (partial training)
+    # vs clients that train everything — skipping barely hurts
+    p0 = resnet.init(jax.random.PRNGKey(6), cfg)
+    runner = blockwise.resnet_runner(cfg)
+    full_dec = Decomposition(((0, cfg.num_blocks),), 0, 0)
+    part_dec = Decomposition(((1, cfg.num_blocks),), 1, 0)
+    losses = {}
+    for name, dec in (("full", full_dec), ("partial", part_dec)):
+        locals_ = [blockwise.client_update(runner, p0, dec,
+                                           [data.client_batch(k, 64, rng)],
+                                           lr=0.08, local_steps=2)
+                   for k in (0, 1)]
+        agg = aggregation.fedavg(locals_, [1.0, 1.0])
+        b = {"images": jnp.asarray(data.x_test[:128]),
+             "labels": jnp.asarray(data.y_test[:128])}
+        losses[name] = float(blockwise.full_model_loss(runner, agg, b))
+    print(f"# partial-training end-to-end: full={losses['full']:.3f} "
+          f"skip-1={losses['partial']:.3f}")
+
     us = (time.time() - t0) * 1e6
     print(csv_row("fig5_partial_training", us,
                   f"early_cka={ckas[0]:.3f};late_cka={ckas[-1]:.3f};"
-                  f"early_ge_late={early_ge_late}"))
+                  f"early_ge_late={early_ge_late};"
+                  f"full_loss={losses['full']:.3f};"
+                  f"partial_loss={losses['partial']:.3f}"))
 
 
 if __name__ == "__main__":

@@ -8,7 +8,8 @@ import time
 
 from repro.configs.preresnet20 import reduced as rn_reduced
 from repro.fl.data import build_federated
-from repro.fl.simulate import SimConfig, run_experiment
+from repro.fl.engine import RoundEngine, SimConfig, build_context
+from repro.fl.registry import get_strategy
 
 from benchmarks.bench_lib import csv_row, rounds
 
@@ -24,14 +25,13 @@ def run(scenario: str, partition: str, alpha: float, n_rounds: int,
     cfg = rn_reduced(num_classes=10, image_size=16)
     out = {}
     for m in METHODS:
-        if scenario != "surplus" and m == "m-fedepth":
-            pass
         sim = SimConfig(rounds=n_rounds, participation=0.25, lr=0.08,
                         local_steps=2, batch_size=64, scenario=scenario,
                         seed=seed)
-        acc, _ = run_experiment(m, data, sim, model_cfg=cfg,
-                                eval_every=n_rounds)
-        out[m] = acc
+        engine = RoundEngine(get_strategy(m),
+                             build_context(data, sim, model_cfg=cfg))
+        _, hist = engine.run(eval_every=n_rounds)
+        out[m] = hist[-1].accuracy
     return out
 
 

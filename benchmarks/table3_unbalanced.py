@@ -5,8 +5,7 @@ import time
 import numpy as np
 
 from repro.configs.preresnet20 import reduced as rn_reduced
-from repro.fl.data import build_federated
-from repro.fl.simulate import SimConfig, run_experiment
+from repro.fl import SimConfig, build_federated, run_experiment
 
 from benchmarks.bench_lib import csv_row, rounds
 

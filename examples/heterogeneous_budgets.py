@@ -15,7 +15,8 @@ from repro.core.decomposition import (decompose, schedule_summary,
                                       width_equivalent_budget)
 from repro.core.memory_model import resnet_memory
 from repro.fl.data import build_federated
-from repro.fl.simulate import SCENARIOS, SimConfig, run_experiment
+from repro.fl.engine import SCENARIOS, RoundEngine, SimConfig, build_context
+from repro.fl.registry import get_strategy
 
 
 def main():
@@ -44,9 +45,12 @@ def main():
     for scen in SCENARIOS:
         sim = SimConfig(rounds=4, participation=0.34, lr=0.08,
                         local_steps=2, batch_size=64, scenario=scen, seed=0)
-        acc, _ = run_experiment("m-fedepth", data, sim, model_cfg=cfg,
-                                eval_every=4)
-        print(f"  m-FeDepth under '{scen}': top-1 acc {acc:.3f}")
+        engine = RoundEngine(get_strategy("m-fedepth"),
+                             build_context(data, sim, model_cfg=cfg))
+        _, hist = engine.run(eval_every=4)
+        rec = hist[-1]
+        print(f"  m-FeDepth under '{scen}': top-1 acc {rec.accuracy:.3f} "
+              f"({rec.seconds:.1f}s, {rec.comm_bytes / 2**20:.1f} MiB up)")
 
 
 if __name__ == "__main__":

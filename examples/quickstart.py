@@ -4,6 +4,7 @@
   2. Decompose it for a small budget (memory-adaptive decomposition).
   3. Run one depth-wise sequential client update (Algorithm 1 inner loop).
   4. FedAvg two clients and verify the global model improved.
+  5. Run a whole federated experiment through the strategy registry.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -52,6 +53,20 @@ def main():
     print(f"global loss: {loss0:.4f} -> {loss1:.4f} "
           f"({'improved' if loss1 < loss0 else 'regressed'})")
     assert loss1 < loss0
+
+    # 5. full experiment via the strategy registry + round engine ----------
+    from repro.fl import (RoundEngine, SimConfig, build_context,
+                          build_federated, get_strategy)
+    data = build_federated(num_clients=8, alpha=1.0, n_train=640,
+                           n_test=200, image_size=16, seed=0)
+    sim = SimConfig(rounds=2, participation=0.5, lr=0.05, local_steps=1,
+                    batch_size=32, scenario="fair", seed=0)
+    engine = RoundEngine(get_strategy("fedepth"),
+                         build_context(data, sim, model_cfg=cfg))
+    _, history = engine.run(eval_every=2)
+    rec = history[-1]
+    print(f"fedepth, 2 rounds: acc={rec.accuracy:.3f} "
+          f"({rec.comm_bytes / 2**20:.1f} MiB uploaded)")
 
 
 if __name__ == "__main__":

@@ -11,11 +11,10 @@ import json
 import time
 
 from repro.configs.preresnet20 import ResNetConfig
-from repro.fl.data import build_federated
-from repro.fl.simulate import SimConfig, run_experiment
+from repro.fl import SimConfig, build_federated, run_experiment
+from repro.fl.registry import available
 
-METHODS = ["fedavg", "heterofl", "splitmix", "depthfl", "fedepth",
-           "m-fedepth"]
+METHODS = available()
 
 
 def main():
@@ -38,7 +37,8 @@ def main():
                             seed=seed)
             acc, hist = run_experiment(m, data, sim, model_cfg=cfg,
                                        eval_every=max(args.rounds // 4, 1))
-            out[m] = {"acc": acc, "history": hist,
+            out[m] = {"acc": acc,
+                      "history": [rec._asdict() for rec in hist],
                       "seconds": time.time() - t0}
             print(f"[{tag}] {m:10s} acc={acc:.3f} "
                   f"({time.time() - t0:.0f}s)", flush=True)

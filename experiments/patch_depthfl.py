@@ -5,8 +5,7 @@ import json
 import time
 
 from repro.configs.preresnet20 import ResNetConfig
-from repro.fl.data import build_federated
-from repro.fl.simulate import SimConfig, run_experiment
+from repro.fl import SimConfig, build_federated, run_experiment
 
 
 def data_for(tag, clients):
@@ -42,7 +41,8 @@ def main(rounds=20, clients=40, path="experiments/paper_claims.json"):
             t0 = time.time()
             acc, hist = run_experiment(m, data, sim, model_cfg=cfg,
                                        eval_every=max(rounds // 4, 1))
-            grid[m] = {"acc": acc, "history": hist,
+            grid[m] = {"acc": acc,
+                       "history": [rec._asdict() for rec in hist],
                        "seconds": time.time() - t0, "patched": True}
             print(f"[{tag}] {m}(re-run) acc={acc:.3f}", flush=True)
             with open(path, "w") as f:

@@ -1,7 +1,11 @@
-"""FEDEPTH — Algorithm 1: the full federated round loop.
+"""FEDEPTH — Algorithm 1, engine-backed.
 
-Composes:  memory model -> per-client decomposition -> depth-wise
-sequential ClientUpdate -> FedAvg aggregation.  Variants:
+The round loop that used to live here is gone: ``FedepthServer`` is now a
+thin facade over the shared :class:`repro.fl.engine.RoundEngine` driving
+:class:`repro.fl.strategies.fedepth.FedepthStrategy` with an explicit
+``BlockRunner`` — the same engine and strategy the image-protocol
+``run_experiment`` path uses, so there is exactly ONE implementation of
+cohort sampling, local updates, and aggregation.  Variants:
   * head="skip"  -> FEDEPTH           (skip-connection classifier)
   * head="aux"   -> m-FEDEPTH         (auxiliary classifiers)
   * clients with surplus budget       -> MKD local update (core.mkd)
@@ -13,11 +17,11 @@ local solver is plain SGD-momentum (optionally FedProx via ``prox_mu``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, Optional, Sequence
 
+import jax
 import numpy as np
 
-from repro.core import aggregation, blockwise, mkd
 from repro.core.blockwise import BlockRunner
 from repro.core.decomposition import Decomposition, decompose
 from repro.core.memory_model import ModelMemory
@@ -46,64 +50,54 @@ class FedepthConfig:
 
 
 class FedepthServer:
-    """Server orchestration (Algorithm 1)."""
+    """Server orchestration (Algorithm 1) over the shared round engine."""
 
     def __init__(self, runner: BlockRunner, mem: ModelMemory,
                  clients: Sequence[ClientSpec], cfg: FedepthConfig,
                  *, mkd_fns=None):
+        from repro.fl.engine import RoundEngine, SimConfig
+        from repro.fl.strategy import Context
+        from repro.fl.strategies.fedepth import FedepthStrategy
+
         self.runner = runner
         self.mem = mem
         self.clients = list(clients)
         self.cfg = cfg
-        self.mkd_fns = mkd_fns  # (logits_fn, task_loss_fn) for surplus
-        self.rng = np.random.default_rng(cfg.seed)
         # precompute each client's decomposition (paper: before training)
         self.decomps: Dict[int, Decomposition] = {
             c.client_id: decompose(mem, c.budget_bytes) for c in clients}
 
-    def sample_cohort(self) -> List[ClientSpec]:
-        k = max(1, int(np.ceil(self.cfg.participation * len(self.clients))))
-        idx = self.rng.choice(len(self.clients), size=k, replace=False)
-        return [self.clients[i] for i in idx]
+        strategy = FedepthStrategy(
+            head=cfg.head, runner=runner, mkd_fns=mkd_fns,
+            masked_aggregation=cfg.masked_aggregation, prox_mu=cfg.prox_mu)
+        sim = SimConfig(rounds=cfg.rounds, participation=cfg.participation,
+                        lr=cfg.lr, momentum=cfg.momentum,
+                        local_steps=cfg.local_steps, seed=cfg.seed)
+        surplus = np.array([c.surplus_models for c in self.clients])
+        ctx = Context(
+            sim=sim, num_clients=len(self.clients),
+            sizes=np.array([c.n_samples for c in self.clients], np.float64),
+            rng=np.random.default_rng(cfg.seed),
+            key=jax.random.PRNGKey(cfg.seed), mem=mem,
+            budgets=np.array([c.budget_bytes for c in self.clients]),
+            decomps=[self.decomps[c.client_id] for c in self.clients],
+            surplus=surplus)
+        self.engine = RoundEngine(strategy, ctx)
 
-    def round(self, global_params, client_batches: Callable):
+    def round(self, global_params, client_batches: Callable,
+              round_idx: int = 0):
         """One communication round.  ``client_batches(client_id)`` yields
         that client's local batch list."""
-        cohort = self.sample_cohort()
-        results, weights, masks = [], [], []
-        for c in cohort:
-            dec = self.decomps[c.client_id]
-            batches = client_batches(c.client_id)
-            if c.surplus_models > 1 and self.mkd_fns is not None:
-                logits_fn, task_fn = self.mkd_fns
-                plist = [global_params] * c.surplus_models
-                plist = mkd.mkd_local_update(
-                    logits_fn, task_fn, list(plist), batches,
-                    lr=self.cfg.lr, momentum=self.cfg.momentum,
-                    local_steps=self.cfg.local_steps)
-                local = plist[0]
-            else:
-                local = blockwise.client_update(
-                    self.runner, global_params, dec, batches,
-                    lr=self.cfg.lr, momentum=self.cfg.momentum,
-                    local_steps=self.cfg.local_steps,
-                    prox_mu=self.cfg.prox_mu)
-            results.append(local)
-            weights.append(float(c.n_samples))
-            if self.cfg.masked_aggregation:
-                masks.append(aggregation.trained_mask_for(
-                    global_params, dec, self.runner))
-        if self.cfg.masked_aggregation:
-            return aggregation.aggregate_masked(global_params, results,
-                                                weights, masks)
-        return aggregation.fedavg(results, weights)
+        state, _bytes = self.engine.run_round(
+            global_params, round_idx, self._batch_fn(client_batches))
+        return state
 
     def fit(self, global_params, client_batches: Callable,
             eval_fn: Optional[Callable] = None, log_every: int = 1):
-        history = []
-        for r in range(self.cfg.rounds):
-            global_params = self.round(global_params, client_batches)
-            if eval_fn is not None and (r + 1) % log_every == 0:
-                metric = eval_fn(global_params)
-                history.append((r + 1, metric))
-        return global_params, history
+        return self.engine.run(initial_state=global_params,
+                               batch_fn=self._batch_fn(client_batches),
+                               eval_fn=eval_fn, eval_every=log_every)
+
+    def _batch_fn(self, client_batches: Callable) -> Callable:
+        # positional ids map 1:1 onto ClientSpec.client_id via list order
+        return lambda idx: client_batches(self.clients[idx].client_id)

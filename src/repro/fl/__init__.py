@@ -1,3 +1,8 @@
-"""Federated-learning runtime: data partitions, simulation loop, baselines."""
+"""Federated-learning runtime: data partitions, strategy API, round
+engine, baselines, and the legacy ``run_experiment`` shim."""
 from repro.fl.data import FederatedData, build_federated  # noqa: F401
-from repro.fl.simulate import SimConfig, run_experiment  # noqa: F401
+from repro.fl.engine import (RoundEngine, RoundRecord, SimConfig,  # noqa: F401
+                             build_context)
+from repro.fl.registry import available, get_strategy, register  # noqa: F401
+from repro.fl.strategy import ClientResult, Context, FLStrategy  # noqa: F401
+from repro.fl.simulate import run_experiment  # noqa: F401

@@ -1,0 +1,180 @@
+"""The single FL round engine — shared by ALL methods.
+
+One loop owns what `run_experiment`'s per-method branches and
+``core.fedepth.FedepthServer`` used to duplicate: cohort sampling
+(pluggable, :mod:`repro.fl.sampling`), the paper's budget / decomposition
+assignment, per-experiment jit/step caches, eval cadence, and a
+structured history of ``RoundRecord(round, accuracy, seconds,
+comm_bytes)``.
+
+Methods plug in as :class:`repro.fl.strategy.FLStrategy` instances; the
+engine never branches on the method name.
+
+Budget protocol (paper §Memory budgets): client memory budgets are the
+width-ratio-equivalent training footprints of PreResNet at batch 128,
+r uniformly distributed over the scenario's tuple:
+    Fair    r = {1/6, 1/3, 1/2, 1}
+    Lack    r = {1/8, 1/6, 1/2, 1}     (partial training kicks in)
+    Surplus r = {1/6, 1/3, 1/2, 2}     (MKD clients)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.preresnet20 import ResNetConfig
+from repro.core.decomposition import decompose, width_equivalent_budget
+from repro.core.memory_model import resnet_memory
+from repro.fl.sampling import (CohortSampler, ClientScheduler,
+                               SequentialScheduler, UniformSampler)
+from repro.fl.strategy import ClientResult, Context, FLStrategy, tree_bytes
+
+SCENARIOS: Dict[str, Tuple[float, ...]] = {
+    "fair": (1 / 6, 1 / 3, 1 / 2, 1.0),
+    "lack": (1 / 8, 1 / 6, 1 / 2, 1.0),
+    "surplus": (1 / 6, 1 / 3, 1 / 2, 2.0),
+}
+
+# decomposition slack: the paper's own Table 1 prices x1/6 (19.34) just
+# UNDER B1-3 (20.02) yet trains B1 alone, i.e. its protocol carries
+# implicit headroom; our coarser constants need ~20%.
+BUDGET_SLACK = 1.20
+
+
+@dataclasses.dataclass
+class SimConfig:
+    rounds: int = 20
+    participation: float = 0.1
+    lr: float = 0.05
+    momentum: float = 0.9
+    local_steps: int = 2
+    batch_size: int = 64
+    mem_batch: int = 128          # batch used to price memory (paper: 128)
+    scenario: str = "fair"
+    seed: int = 0
+
+
+class RoundRecord(NamedTuple):
+    """One history entry.  Index-compatible with the legacy ``(round,
+    acc)`` tuples (``rec[0]``/``rec[1]``); ``seconds`` and ``comm_bytes``
+    accumulate wall-clock and client-upload traffic since the previous
+    record."""
+    round: int
+    accuracy: Optional[float]
+    seconds: float
+    comm_bytes: int
+
+
+def client_ratios(num_clients: int, scenario: str,
+                  seed: int = 0) -> np.ndarray:
+    """Uniformly distribute the scenario's ratios over clients."""
+    rs = SCENARIOS[scenario]
+    reps = int(np.ceil(num_clients / len(rs)))
+    arr = np.tile(np.asarray(rs), reps)[:num_clients]
+    return arr
+
+
+def scenario_budgets(mem, ratios) -> np.ndarray:
+    """Width-equivalent byte budgets for the scenario's ratio vector."""
+    # every client can at least train the finest unit + head (the paper's
+    # implicit assumption "all blocks can be trained after decomposition")
+    floor = min(mem.block_train_bytes(i, i + 1)
+                for i in range(len(mem.units)))
+    return np.array([max(width_equivalent_budget(mem, min(r, 1.0))
+                         * BUDGET_SLACK, floor) for r in ratios])
+
+
+def build_context(data, sim: SimConfig, *,
+                  model_cfg: Optional[ResNetConfig] = None) -> Context:
+    """Precompute the per-experiment context for the paper's image
+    protocol: ratios, byte budgets, FeDepth decompositions, MKD flags."""
+    num_clients = len(data.client_indices)
+    cfg = model_cfg or ResNetConfig(num_classes=data.num_classes,
+                                    image_size=data.x.shape[1])
+    ratios = client_ratios(num_clients, sim.scenario, sim.seed)
+    mem = resnet_memory(cfg, sim.mem_batch)
+    budgets = scenario_budgets(mem, ratios)
+    return Context(
+        sim=sim, num_clients=num_clients, sizes=data.client_sizes(),
+        rng=np.random.default_rng(sim.seed),
+        key=jax.random.PRNGKey(sim.seed), model_cfg=cfg, mem=mem,
+        ratios=ratios, budgets=budgets,
+        decomps=[decompose(mem, int(b)) for b in budgets],
+        surplus=np.where(ratios >= 2.0, 2, 1), data=data)
+
+
+class RoundEngine:
+    """Runs communication rounds of ONE strategy over a client
+    population.  Generic over the strategy, the cohort sampler, and the
+    client scheduler — new methods and new scenarios never touch it."""
+
+    def __init__(self, strategy: FLStrategy, ctx: Context, *,
+                 sampler: Optional[CohortSampler] = None,
+                 scheduler: Optional[ClientScheduler] = None):
+        self.strategy = strategy
+        self.ctx = ctx
+        self.sampler = sampler or UniformSampler()
+        self.scheduler = scheduler or SequentialScheduler()
+
+    # ------------------------------------------------------------------
+    def default_batch_fn(self) -> Callable[[int], list]:
+        """The paper's per-round local loader: |D_k|/B fresh batches."""
+        ctx = self.ctx
+        data, sim = ctx.data, ctx.sim
+
+        def batch_fn(k: int) -> list:
+            return [data.client_batch(k, sim.batch_size, ctx.rng)
+                    for _ in range(max(1, len(data.client_indices[k])
+                                       // sim.batch_size))]
+        return batch_fn
+
+    def run_round(self, state, round_idx: int,
+                  batch_fn: Callable[[int], list]):
+        """One communication round: sample -> local updates -> aggregate.
+        Returns (new_state, comm_bytes)."""
+        cohort = self.sampler.sample(self.ctx, round_idx)
+        results = self.scheduler.run(self.ctx, self.strategy, state,
+                                     cohort, batch_fn)
+        comm = sum(r.comm_bytes if r.comm_bytes is not None
+                   else tree_bytes(r.payload) for r in results)
+        return self.strategy.aggregate(self.ctx, state, results), comm
+
+    def run(self, *, initial_state=None,
+            batch_fn: Optional[Callable[[int], list]] = None,
+            eval_fn: Optional[Callable] = None,
+            eval_every: int = 5) -> Tuple[object, List[RoundRecord]]:
+        """Run ``sim.rounds`` rounds.  Evaluates every ``eval_every``
+        rounds and always on the last; ``eval_fn(state)`` overrides the
+        strategy's own eval (the generic-runner path has no test split in
+        the context).  ``initial_state`` (strategy-defined state type)
+        skips ``init_state`` but NOT the strategy's optional ``setup``
+        hook.  Returns (final_state, history)."""
+        ctx = self.ctx
+        setup = getattr(self.strategy, "setup", None)
+        if setup is not None:
+            setup(ctx)
+        state = initial_state if initial_state is not None \
+            else self.strategy.init_state(ctx)
+        batch_fn = batch_fn or self.default_batch_fn()
+        history: List[RoundRecord] = []
+        t_last, bytes_acc = time.perf_counter(), 0
+        for rd in range(ctx.sim.rounds):
+            state, comm = self.run_round(state, rd, batch_fn)
+            bytes_acc += comm
+            if (rd + 1) % eval_every == 0 or rd == ctx.sim.rounds - 1:
+                if eval_fn is not None:
+                    acc = eval_fn(state)
+                elif ctx.data is not None:
+                    acc = self.strategy.eval_model(
+                        ctx, state, ctx.data.x_test, ctx.data.y_test)
+                else:
+                    continue  # nothing to evaluate with
+                now = time.perf_counter()
+                history.append(RoundRecord(rd + 1, acc, now - t_last,
+                                           bytes_acc))
+                t_last, bytes_acc = now, 0
+        return state, history

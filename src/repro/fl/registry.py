@@ -1,0 +1,47 @@
+"""String-keyed strategy registry.
+
+``@register("name")`` maps a method name to a zero-arg strategy factory
+(usually the class itself; use ``functools.partial`` for configured
+variants — that is how ``m-fedepth`` reuses the FeDepth strategy with
+aux-classifier heads).  ``get_strategy(name)`` returns a FRESH instance
+per call so experiments never share per-run state.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+_REGISTRY: Dict[str, Callable] = {}
+
+
+def register(name: str) -> Callable:
+    """Decorator / registrar: ``@register("fedavg")`` on a strategy class,
+    or ``register("m-fedepth")(factory)`` for configured variants."""
+    def deco(factory: Callable) -> Callable:
+        if name in _REGISTRY:
+            raise ValueError(f"strategy {name!r} already registered")
+        _REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def get_strategy(name: str):
+    """Instantiate the strategy registered under ``name``.
+
+    Raises ``KeyError`` listing the known methods for unknown names.
+    """
+    _ensure_builtin()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown FL strategy {name!r}; "
+                       f"available: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def available() -> List[str]:
+    """Names of all registered strategies."""
+    _ensure_builtin()
+    return sorted(_REGISTRY)
+
+
+def _ensure_builtin() -> None:
+    # importing the package triggers each strategy module's @register
+    import repro.fl.strategies  # noqa: F401

@@ -1,0 +1,99 @@
+"""Pluggable cohort samplers and client schedulers for the round engine.
+
+Scenario diversity (client availability traces, stragglers, future
+batched/async execution) lives HERE, decoupled from method code: a new
+deployment scenario swaps a sampler/scheduler, never a strategy.
+
+``UniformSampler`` reproduces the paper's protocol (participation-fraction
+uniform without replacement).  ``AvailabilityTraceSampler`` and
+``StragglerSampler`` are the first scenario extensions: minimal but
+functional implementations with tests, ready to grow into trace-driven
+simulations.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Protocol, Sequence
+
+import numpy as np
+
+from repro.fl.strategy import ClientResult, Context, FLStrategy
+
+
+class CohortSampler(Protocol):
+    def sample(self, ctx: Context, round_idx: int) -> np.ndarray:
+        """Client ids participating in ``round_idx``."""
+        ...
+
+
+def _cohort_size(ctx: Context, population: int) -> int:
+    k = max(1, int(np.ceil(ctx.sim.participation * ctx.num_clients)))
+    return min(k, population)
+
+
+class UniformSampler:
+    """The paper's sampler: ceil(participation * N) uniform w/o
+    replacement, drawn from the shared simulation stream."""
+
+    def sample(self, ctx: Context, round_idx: int) -> np.ndarray:
+        k = _cohort_size(ctx, ctx.num_clients)
+        return ctx.rng.choice(ctx.num_clients, size=k, replace=False)
+
+
+class AvailabilityTraceSampler:
+    """Sample only among clients listed available for the round.
+
+    ``trace`` is a sequence of per-round available-id collections, cycled
+    when rounds outrun the trace (device up/down patterns repeat).  An
+    empty round falls back to the full population rather than stalling.
+    """
+
+    def __init__(self, trace: Sequence[Sequence[int]]):
+        if not len(trace):
+            raise ValueError("availability trace must cover >= 1 round")
+        self.trace = [np.asarray(t, dtype=np.int64) for t in trace]
+
+    def sample(self, ctx: Context, round_idx: int) -> np.ndarray:
+        avail = self.trace[round_idx % len(self.trace)]
+        if avail.size == 0:
+            avail = np.arange(ctx.num_clients)
+        k = _cohort_size(ctx, len(avail))
+        return ctx.rng.choice(avail, size=k, replace=False)
+
+
+class StragglerSampler:
+    """Wrap another sampler and drop each selected client with probability
+    ``drop_prob`` (device went slow/offline after selection), always
+    keeping at least one so the round makes progress."""
+
+    def __init__(self, drop_prob: float = 0.3,
+                 base: Optional[CohortSampler] = None):
+        if not 0.0 <= drop_prob < 1.0:
+            raise ValueError("drop_prob must be in [0, 1)")
+        self.drop_prob = drop_prob
+        self.base = base or UniformSampler()
+
+    def sample(self, ctx: Context, round_idx: int) -> np.ndarray:
+        cohort = np.asarray(self.base.sample(ctx, round_idx))
+        keep = ctx.rng.random(len(cohort)) >= self.drop_prob
+        if not keep.any():
+            keep[int(ctx.rng.integers(len(cohort)))] = True
+        return cohort[keep]
+
+
+class ClientScheduler(Protocol):
+    def run(self, ctx: Context, strategy: FLStrategy, state,
+            cohort: Sequence[int],
+            batch_fn: Callable[[int], list]) -> List[ClientResult]:
+        """Execute the cohort's local updates, in scheduler-defined
+        order/parallelism, returning one ClientResult per client."""
+        ...
+
+
+class SequentialScheduler:
+    """Run clients one after another (today's execution model; the
+    batched/async schedulers on the roadmap implement the same
+    interface)."""
+
+    def run(self, ctx, strategy, state, cohort, batch_fn):
+        return [strategy.client_update(ctx, state, int(k), batch_fn(int(k)))
+                for k in cohort]

@@ -1,316 +1,33 @@
-"""FL experiment runner — reproduces the paper's Table 2/3 protocol.
+"""Back-compat shim over the strategy registry + round engine.
 
-``run_experiment(method, ...)`` runs R communication rounds of one method
-over a common federated dataset and returns (final_accuracy, history).
-
-Budget protocol (paper §Memory budgets): client memory budgets are the
-width-ratio-equivalent training footprints of PreResNet at batch 128,
-r uniformly distributed over the scenario's tuple:
-    Fair    r = {1/6, 1/3, 1/2, 1}
-    Lack    r = {1/8, 1/6, 1/2, 1}     (partial training kicks in)
-    Surplus r = {1/6, 1/3, 1/2, 2}     (MKD clients)
+``run_experiment(method, ...)`` keeps the original contract —
+``(final_accuracy, history)`` for ``method`` in {fedavg, heterofl,
+splitmix, depthfl, fedepth, m-fedepth} — but dispatches through
+``registry.get_strategy(method)`` and a single ``RoundEngine`` instead of
+the former per-method monolith.  New code should use those APIs directly
+(see README "Writing a new FL strategy"); this module re-exports the
+protocol constants (SCENARIOS, BUDGET_SLACK, SimConfig, client_ratios)
+from :mod:`repro.fl.engine` for existing imports and is slated for
+deprecation once callers migrate.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs.preresnet20 import ResNetConfig, scaled
-from repro.core import aggregation, blockwise
-from repro.core.decomposition import decompose, width_equivalent_budget
-from repro.core.memory_model import resnet_memory
-from repro.fl import baselines, width as width_util
+from repro.configs.preresnet20 import ResNetConfig
 from repro.fl.data import FederatedData
-from repro.models import resnet
-
-SCENARIOS: Dict[str, Tuple[float, ...]] = {
-    "fair": (1 / 6, 1 / 3, 1 / 2, 1.0),
-    "lack": (1 / 8, 1 / 6, 1 / 2, 1.0),
-    "surplus": (1 / 6, 1 / 3, 1 / 2, 2.0),
-}
-
-# decomposition slack: the paper's own Table 1 prices x1/6 (19.34) just
-# UNDER B1-3 (20.02) yet trains B1 alone, i.e. its protocol carries
-# implicit headroom; our coarser constants need ~20%.
-BUDGET_SLACK = 1.20
-
-
-@dataclasses.dataclass
-class SimConfig:
-    rounds: int = 20
-    participation: float = 0.1
-    lr: float = 0.05
-    momentum: float = 0.9
-    local_steps: int = 2
-    batch_size: int = 64
-    mem_batch: int = 128          # batch used to price memory (paper: 128)
-    scenario: str = "fair"
-    seed: int = 0
-
-
-import functools
-
-
-@functools.lru_cache(maxsize=64)
-def _apply_jit(cfg: ResNetConfig):
-    return jax.jit(lambda p, x: resnet.apply(p, cfg, x))
-
-
-def accuracy(logits_fn: Callable, x, y, batch: int = 512) -> float:
-    correct = 0
-    for i in range(0, len(x), batch):
-        logits = logits_fn(x[i:i + batch])
-        correct += int((jnp.argmax(logits, -1) == y[i:i + batch]).sum())
-    return correct / len(x)
-
-
-def client_ratios(num_clients: int, scenario: str,
-                  seed: int = 0) -> np.ndarray:
-    """Uniformly distribute the scenario's ratios over clients."""
-    rs = SCENARIOS[scenario]
-    reps = int(np.ceil(num_clients / len(rs)))
-    arr = np.tile(np.asarray(rs), reps)[:num_clients]
-    return arr
-
-
-def _budgets(cfg: ResNetConfig, ratios, mem_batch: int) -> np.ndarray:
-    mem = resnet_memory(cfg, mem_batch)
-    # every client can at least train the finest unit + head (the paper's
-    # implicit assumption "all blocks can be trained after decomposition")
-    floor = min(mem.block_train_bytes(i, i + 1)
-                for i in range(len(mem.units)))
-    return np.array([max(width_equivalent_budget(mem, min(r, 1.0))
-                         * BUDGET_SLACK, floor) for r in ratios])
+from repro.fl.engine import (BUDGET_SLACK, SCENARIOS, RoundEngine,  # noqa: F401
+                             RoundRecord, SimConfig, build_context,
+                             client_ratios)
+from repro.fl.registry import get_strategy
+from repro.fl.strategy import accuracy  # noqa: F401  (legacy re-export)
 
 
 def run_experiment(method: str, data: FederatedData, sim: SimConfig,
                    *, model_cfg: Optional[ResNetConfig] = None,
                    eval_every: int = 5, image_size: Optional[int] = None):
     """method in {fedavg, heterofl, splitmix, depthfl, fedepth, m-fedepth}."""
-    num_clients = len(data.client_indices)
-    cfg = model_cfg or ResNetConfig(num_classes=data.num_classes,
-                                    image_size=data.x.shape[1])
-    rng = np.random.default_rng(sim.seed)
-    key = jax.random.PRNGKey(sim.seed)
-    ratios = client_ratios(num_clients, sim.scenario, sim.seed)
-    budgets = _budgets(cfg, ratios, sim.mem_batch)
-    sizes = data.client_sizes()
-
-    def cohort():
-        k = max(1, int(np.ceil(sim.participation * num_clients)))
-        return rng.choice(num_clients, size=k, replace=False)
-
-    def batches_for(k):
-        return [data.client_batch(k, sim.batch_size, rng)
-                for _ in range(max(1, len(data.client_indices[k])
-                                   // sim.batch_size))]
-
-    history = []
-
-    # ---------------- FedAvg (x min r) ------------------------------------
-    if method == "fedavg":
-        r_min = min(min(SCENARIOS[sim.scenario]), 1.0)
-        sub_cfg = width_util.subnet_config(cfg, r_min)
-        params = resnet.init(key, sub_cfg)
-        for rd in range(sim.rounds):
-            locals_, ws = [], []
-            for k in cohort():
-                locals_.append(baselines.fedavg_local(
-                    sub_cfg, params, batches_for(k), lr=sim.lr,
-                    momentum=sim.momentum, local_steps=sim.local_steps))
-                ws.append(float(sizes[k]))
-            params = aggregation.fedavg(locals_, ws)
-            if (rd + 1) % eval_every == 0 or rd == sim.rounds - 1:
-                ap = _apply_jit(sub_cfg)
-                acc = accuracy(lambda x: ap(params, x),
-                               data.x_test, data.y_test)
-                history.append((rd + 1, acc))
-        return history[-1][1], history
-
-    # ---------------- HeteroFL --------------------------------------------
-    if method == "heterofl":
-        params = resnet.init(key, cfg)
-        for rd in range(sim.rounds):
-            padded, masks, ws = [], [], []
-            for k in cohort():
-                r = min(ratios[k], 1.0)
-                p, m = baselines.heterofl_local(
-                    cfg, params, r, batches_for(k), lr=sim.lr,
-                    momentum=sim.momentum, local_steps=sim.local_steps)
-                padded.append(p)
-                masks.append(m)
-                ws.append(float(sizes[k]))
-            params = baselines.heterofl_aggregate(params, padded, masks, ws)
-            if (rd + 1) % eval_every == 0 or rd == sim.rounds - 1:
-                ap = _apply_jit(cfg)
-                acc = accuracy(lambda x: ap(params, x),
-                               data.x_test, data.y_test)
-                history.append((rd + 1, acc))
-        return history[-1][1], history
-
-    # ---------------- SplitMix --------------------------------------------
-    if method == "splitmix":
-        base_r = min(min(SCENARIOS[sim.scenario]), 1.0)
-        state = baselines.SplitMixState(cfg, base_r, key)
-        for rd in range(sim.rounds):
-            ks = cohort()
-            state = baselines.splitmix_round(
-                state, list(ks), batches_for,
-                [min(ratios[k], 1.0) for k in ks], lr=sim.lr,
-                momentum=sim.momentum, local_steps=sim.local_steps, rng=rng)
-            if (rd + 1) % eval_every == 0 or rd == sim.rounds - 1:
-                acc = accuracy(state.ensemble_logits, data.x_test,
-                               data.y_test)
-                history.append((rd + 1, acc))
-        return history[-1][1], history
-
-    # ---------------- DepthFL ---------------------------------------------
-    if method == "depthfl":
-        params = resnet.init(key, cfg)
-        aux = baselines.depthfl_init_aux(cfg, jax.random.fold_in(key, 7))
-        depths = [baselines.depthfl_depth_for_budget(cfg, b, sim.mem_batch)
-                  for b in budgets]
-        dstep_cache: Dict = {}
-        for rd in range(sim.rounds):
-            locals_, auxs, covs, ws = [], [], [], []
-            for k in cohort():
-                p, a, d = baselines.depthfl_local(
-                    cfg, params, aux, max(depths[k], 2), batches_for(k),
-                    lr=sim.lr, momentum=sim.momentum,
-                    local_steps=sim.local_steps, step_cache=dstep_cache)
-                locals_.append(p)
-                auxs.append(a)
-                covs.append(max(depths[k], 2))
-                ws.append(float(sizes[k]))
-            params = _depth_aggregate(cfg, params, locals_, covs, ws)
-            aux = _aux_aggregate(aux, auxs, covs, ws)
-            if (rd + 1) % eval_every == 0 or rd == sim.rounds - 1:
-                ap = _apply_jit(cfg)
-                acc = accuracy(lambda x: ap(params, x),
-                               data.x_test, data.y_test)
-                history.append((rd + 1, acc))
-        return history[-1][1], history
-
-    # ---------------- FeDepth / m-FeDepth ----------------------------------
-    if method in ("fedepth", "m-fedepth"):
-        head = "skip" if method == "fedepth" else "aux"
-        params = resnet.init(key, cfg)
-        if head == "aux":
-            params["aux_heads"] = _fedepth_aux_heads(cfg, key)
-        runner = blockwise.resnet_runner(cfg, head=head)
-        mem = resnet_memory(cfg, sim.mem_batch)
-        decomps = [decompose(mem, b) for b in budgets]
-        surplus = ratios >= 2.0
-        step_cache: Dict = {}
-        for rd in range(sim.rounds):
-            locals_, ws = [], []
-            for k in cohort():
-                bs = batches_for(k)
-                if surplus[k]:
-                    local = _mkd_local(cfg, params, bs, sim)
-                else:
-                    local = blockwise.client_update(
-                        runner, params, decomps[k], bs, lr=sim.lr,
-                        momentum=sim.momentum, local_steps=sim.local_steps,
-                        step_cache=step_cache)
-                locals_.append(local)
-                ws.append(float(sizes[k]))
-            params = aggregation.fedavg(locals_, ws)
-            if (rd + 1) % eval_every == 0 or rd == sim.rounds - 1:
-                ap = _apply_jit(cfg)
-                acc = accuracy(lambda x: ap(params, x),
-                               data.x_test, data.y_test)
-                history.append((rd + 1, acc))
-        return history[-1][1], history
-
-    raise ValueError(method)
-
-
-def _fedepth_aux_heads(cfg: ResNetConfig, key):
-    from repro.models.resnet import block_channels
-    aux = {}
-    for i, (cin, cout, _) in enumerate(block_channels(cfg)):
-        k = jax.random.fold_in(key, 100 + i)
-        aux[f"b{i}"] = {
-            "w": (jax.random.normal(k, (cout, cfg.num_classes))
-                  / np.sqrt(cout)).astype(jnp.float32),
-            "b": jnp.zeros((cfg.num_classes,), jnp.float32)}
-    return aux
-
-
-@functools.lru_cache(maxsize=16)
-def _mkd_step(cfg: ResNetConfig, M: int, lr: float, momentum: float):
-    from repro.core import mkd
-
-    def logits_fn(p, b):
-        return resnet.apply(p, cfg, b["images"])
-
-    def task_fn(p, b):
-        return baselines._ce(logits_fn(p, b), b["labels"])
-
-    def loss(plist, batch):
-        return mkd.mkd_loss(logits_fn, plist, batch, task_fn)
-
-    @jax.jit
-    def step(plist, vels, batch):
-        grads = jax.grad(loss)(plist, batch)
-        vels = jax.tree.map(lambda v, g: momentum * v + g, vels, grads)
-        plist = jax.tree.map(lambda p, v: p - lr * v, plist, vels)
-        return plist, vels
-
-    return step
-
-
-def _mkd_local(cfg, params, batches, sim: SimConfig, M: int = 2):
-    model_params = {k: v for k, v in params.items() if k != "aux_heads"}
-    step = _mkd_step(cfg, M, sim.lr, sim.momentum)
-    plist = [model_params] * M
-    vels = jax.tree.map(jnp.zeros_like, plist)
-    for _ in range(sim.local_steps):
-        for b in batches:
-            plist, vels = step(plist, vels, b)
-    out = dict(params)
-    out.update(plist[0])
-    return out
-
-
-def _depth_aggregate(cfg, global_params, locals_, coverages, weights):
-    """Per-block aggregation over clients whose depth covers the block."""
-    w = np.asarray(weights, np.float32)
-    out = dict(global_params)
-    # stem/head: everyone trains
-    for key in ("stem", "head_norm", "classifier"):
-        out[key] = jax.tree.map(
-            lambda *xs: sum(wi * x for wi, x in zip(w / w.sum(), xs)),
-            *[lp[key] for lp in locals_])
-    blocks = []
-    for b in range(cfg.num_blocks):
-        covered = [i for i, c in enumerate(coverages) if c > b]
-        if not covered:
-            blocks.append(global_params["blocks"][b])
-            continue
-        ws = w[covered] / w[covered].sum()
-        blocks.append(jax.tree.map(
-            lambda *xs: sum(wi * x for wi, x in zip(ws, xs)),
-            *[locals_[i]["blocks"][b] for i in covered]))
-    out["blocks"] = blocks
-    return out
-
-
-def _aux_aggregate(aux, auxs, coverages, weights):
-    w = np.asarray(weights, np.float32)
-    out = dict(aux)
-    for name in aux:
-        e = int(name.split("_")[1])
-        covered = [i for i, c in enumerate(coverages) if c >= e]
-        if not covered:
-            continue
-        ws = w[covered] / w[covered].sum()
-        out[name] = jax.tree.map(
-            lambda *xs: sum(wi * x for wi, x in zip(ws, xs)),
-            *[auxs[i][name] for i in covered])
-    return out
+    ctx = build_context(data, sim, model_cfg=model_cfg)
+    engine = RoundEngine(get_strategy(method), ctx)
+    _, history = engine.run(eval_every=eval_every)
+    return history[-1].accuracy, history

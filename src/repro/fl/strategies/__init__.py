@@ -1,0 +1,8 @@
+"""Built-in FL strategies, one module per method.
+
+Importing this package registers every built-in with the registry —
+``repro.fl.registry.get_strategy`` does so lazily, so strategy modules
+may freely import the engine without cycles.
+"""
+from repro.fl.strategies import (depthfl, fedavg, fedepth, heterofl,  # noqa: F401
+                                 splitmix)

@@ -1,0 +1,20 @@
+"""Helpers shared by the built-in image-classification strategies."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.configs.preresnet20 import ResNetConfig
+from repro.fl.strategy import accuracy
+from repro.models import resnet
+
+
+@functools.lru_cache(maxsize=64)
+def apply_jit(cfg: ResNetConfig):
+    return jax.jit(lambda p, x: resnet.apply(p, cfg, x))
+
+
+def resnet_accuracy(cfg: ResNetConfig, params, x, y) -> float:
+    ap = apply_jit(cfg)
+    return accuracy(lambda xb: ap(params, xb), x, y)

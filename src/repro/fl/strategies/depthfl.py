@@ -1,0 +1,92 @@
+"""DepthFL (Kim et al. 2023): FIXED-depth prefix sub-models with
+auxiliary classifiers, reproduced to conform to memory budgets as the
+paper did (footnote 2).  Unlike FeDepth the prefix backpropagates as a
+whole, so its memory is the SUM over prefix blocks — the structural
+disadvantage under tight budgets.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.fl.baselines import (depthfl_depth_for_budget, depthfl_init_aux,
+                                depthfl_local)
+from repro.fl.registry import register
+from repro.fl.strategy import ClientResult
+from repro.fl.strategies import common
+from repro.models import resnet
+
+
+@register("depthfl")
+class DepthFLStrategy:
+    def setup(self, ctx):
+        self.depths = [depthfl_depth_for_budget(ctx.model_cfg, int(b),
+                                                ctx.sim.mem_batch)
+                       for b in ctx.budgets]
+
+    def init_state(self, ctx):
+        cfg = ctx.model_cfg
+        params = resnet.init(ctx.key, cfg)
+        aux = depthfl_init_aux(cfg, jax.random.fold_in(ctx.key, 7))
+        return params, aux
+
+    def client_update(self, ctx, state, client_id, batches):
+        params, aux = state
+        depth = max(self.depths[client_id], 2)
+        cache = ctx.caches.setdefault("depthfl_step", {})
+        p, a, _ = depthfl_local(ctx.model_cfg, params, aux, depth, batches,
+                                lr=ctx.sim.lr, momentum=ctx.sim.momentum,
+                                local_steps=ctx.sim.local_steps,
+                                step_cache=cache)
+        return ClientResult((p, a, depth), float(ctx.sizes[client_id]))
+
+    def aggregate(self, ctx, state, results):
+        params, aux = state
+        locals_ = [r.payload[0] for r in results]
+        auxs = [r.payload[1] for r in results]
+        covs = [r.payload[2] for r in results]
+        ws = [r.weight for r in results]
+        params = depth_aggregate(ctx.model_cfg, params, locals_, covs, ws)
+        aux = aux_aggregate(aux, auxs, covs, ws)
+        return params, aux
+
+    def eval_model(self, ctx, state, x, y):
+        return common.resnet_accuracy(ctx.model_cfg, state[0], x, y)
+
+
+def depth_aggregate(cfg, global_params, locals_, coverages, weights):
+    """Per-block aggregation over clients whose depth covers the block."""
+    w = np.asarray(weights, np.float32)
+    out = dict(global_params)
+    # stem/head: everyone trains
+    for key in ("stem", "head_norm", "classifier"):
+        out[key] = jax.tree.map(
+            lambda *xs: sum(wi * x for wi, x in zip(w / w.sum(), xs)),
+            *[lp[key] for lp in locals_])
+    blocks = []
+    for b in range(cfg.num_blocks):
+        covered = [i for i, c in enumerate(coverages) if c > b]
+        if not covered:
+            blocks.append(global_params["blocks"][b])
+            continue
+        ws = w[covered] / w[covered].sum()
+        blocks.append(jax.tree.map(
+            lambda *xs: sum(wi * x for wi, x in zip(ws, xs)),
+            *[locals_[i]["blocks"][b] for i in covered]))
+    out["blocks"] = blocks
+    return out
+
+
+def aux_aggregate(aux, auxs, coverages, weights):
+    w = np.asarray(weights, np.float32)
+    out = dict(aux)
+    for name in aux:
+        e = int(name.split("_")[1])
+        covered = [i for i, c in enumerate(coverages) if c >= e]
+        if not covered:
+            continue
+        ws = w[covered] / w[covered].sum()
+        out[name] = jax.tree.map(
+            lambda *xs: sum(wi * x for wi, x in zip(ws, xs)),
+            *[auxs[i][name] for i in covered])
+    return out

@@ -1,0 +1,37 @@
+"""FedAvg at the cohort's lowest common width (x min r) — the
+lowest-common-denominator baseline (McMahan et al. 2017): every client
+trains the SAME slimmed model, so no heterogeneity machinery at all.
+"""
+from __future__ import annotations
+
+from repro.core import aggregation
+from repro.fl import width as width_util
+from repro.fl.baselines import fedavg_local
+from repro.fl.registry import register
+from repro.fl.strategy import ClientResult
+from repro.fl.strategies import common
+from repro.models import resnet
+
+
+@register("fedavg")
+class FedAvgStrategy:
+    def setup(self, ctx):
+        from repro.fl.engine import SCENARIOS
+        r_min = min(min(SCENARIOS[ctx.sim.scenario]), 1.0)
+        self.sub_cfg = width_util.subnet_config(ctx.model_cfg, r_min)
+
+    def init_state(self, ctx):
+        return resnet.init(ctx.key, self.sub_cfg)
+
+    def client_update(self, ctx, state, client_id, batches):
+        local = fedavg_local(self.sub_cfg, state, batches, lr=ctx.sim.lr,
+                             momentum=ctx.sim.momentum,
+                             local_steps=ctx.sim.local_steps)
+        return ClientResult(local, float(ctx.sizes[client_id]))
+
+    def aggregate(self, ctx, state, results):
+        return aggregation.fedavg([r.payload for r in results],
+                                  [r.weight for r in results])
+
+    def eval_model(self, ctx, state, x, y):
+        return common.resnet_accuracy(self.sub_cfg, state, x, y)

@@ -1,0 +1,149 @@
+"""FeDepth / m-FeDepth (paper Algorithm 1) as an FLStrategy.
+
+Composes: memory model -> per-client decomposition (precomputed in the
+engine context) -> depth-wise sequential ClientUpdate -> plain FedAvg.
+Variants:
+  * ``head="skip"``  -> FeDepth   (skip-connection classifier)
+  * ``head="aux"``   -> m-FeDepth (auxiliary classifiers)
+  * surplus clients (r >= 2)      -> MKD local update (core.mkd)
+  * clients below the finest block -> partial training (skip prefix)
+
+The same class backs BOTH the registered image-protocol strategies and
+``core.fedepth.FedepthServer``'s model-agnostic path: pass an explicit
+``runner`` (any BlockRunner) to bypass the ResNet defaults, optional
+``mkd_fns=(logits_fn, task_loss_fn)`` for surplus clients, and
+``masked_aggregation=True`` for the beyond-paper per-leaf reweighting.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation, blockwise, mkd
+from repro.core.blockwise import BlockRunner
+from repro.fl.baselines import _ce
+from repro.fl.registry import register
+from repro.fl.strategy import ClientResult, tree_bytes
+from repro.fl.strategies import common
+from repro.models import resnet
+
+
+@register("fedepth")
+class FedepthStrategy:
+    def __init__(self, head: str = "skip", *,
+                 runner: Optional[BlockRunner] = None,
+                 mkd_fns: Optional[Tuple[Callable, Callable]] = None,
+                 masked_aggregation: bool = False, prox_mu: float = 0.0):
+        self.head = head
+        self.runner = runner
+        self.mkd_fns = mkd_fns
+        self.masked_aggregation = masked_aggregation
+        self.prox_mu = prox_mu
+
+    def setup(self, ctx):
+        if self.runner is None:
+            self.runner = blockwise.resnet_runner(ctx.model_cfg,
+                                                  head=self.head)
+
+    def init_state(self, ctx):
+        params = resnet.init(ctx.key, ctx.model_cfg)
+        if self.head == "aux":
+            params["aux_heads"] = init_aux_heads(ctx.model_cfg, ctx.key)
+        return params
+
+    def client_update(self, ctx, state, client_id, batches):
+        M = 1 if ctx.surplus is None else int(ctx.surplus[client_id])
+        # a surplus client needs an MKD implementation to exploit M > 1:
+        # explicit mkd_fns (generic runner) or the jitted ResNet path;
+        # with neither it degrades to the plain depth-wise update
+        if M > 1 and (self.mkd_fns is not None
+                      or ctx.model_cfg is not None):
+            local = self._mkd_update(ctx, state, batches, M)
+        else:
+            local = blockwise.client_update(
+                self.runner, state, ctx.decomps[client_id], batches,
+                lr=ctx.sim.lr, momentum=ctx.sim.momentum,
+                local_steps=ctx.sim.local_steps, prox_mu=self.prox_mu,
+                step_cache=ctx.caches.setdefault("fedepth_step", {}))
+        result = ClientResult(local, float(ctx.sizes[client_id]))
+        if self.masked_aggregation:
+            mask = aggregation.trained_mask_for(
+                state, ctx.decomps[client_id], self.runner)
+            # only the trained model crosses the wire; the mask is
+            # derivable server-side from the client's decomposition
+            result.payload = (local, mask)
+            result.comm_bytes = tree_bytes(local)
+        return result
+
+    def aggregate(self, ctx, state, results):
+        ws = [r.weight for r in results]
+        if self.masked_aggregation:
+            return aggregation.aggregate_masked(
+                state, [r.payload[0] for r in results], ws,
+                [r.payload[1] for r in results])
+        return aggregation.fedavg([r.payload for r in results], ws)
+
+    def eval_model(self, ctx, state, x, y):
+        return common.resnet_accuracy(ctx.model_cfg, state, x, y)
+
+    # ---------------------------------------------------------- MKD local
+    def _mkd_update(self, ctx, state, batches, M: int):
+        """Surplus clients train M models with mutual KD and upload one."""
+        if self.mkd_fns is not None:       # model-agnostic (server) path
+            logits_fn, task_fn = self.mkd_fns
+            plist = mkd.mkd_local_update(
+                logits_fn, task_fn, [state] * M, batches, lr=ctx.sim.lr,
+                momentum=ctx.sim.momentum, local_steps=ctx.sim.local_steps)
+            return plist[0]
+        # jitted ResNet path (aux heads ride along untouched)
+        model_params = {k: v for k, v in state.items() if k != "aux_heads"}
+        step = _mkd_step(ctx.model_cfg, M, ctx.sim.lr, ctx.sim.momentum)
+        plist = [model_params] * M
+        vels = jax.tree.map(jnp.zeros_like, plist)
+        for _ in range(ctx.sim.local_steps):
+            for b in batches:
+                plist, vels = step(plist, vels, b)
+        out = dict(state)
+        out.update(plist[0])
+        return out
+
+
+register("m-fedepth")(functools.partial(FedepthStrategy, head="aux"))
+
+
+def init_aux_heads(cfg, key):
+    """m-FeDepth: one tiny linear classifier per block exit."""
+    from repro.models.resnet import block_channels
+    aux = {}
+    for i, (cin, cout, _) in enumerate(block_channels(cfg)):
+        k = jax.random.fold_in(key, 100 + i)
+        aux[f"b{i}"] = {
+            "w": (jax.random.normal(k, (cout, cfg.num_classes))
+                  / np.sqrt(cout)).astype(jnp.float32),
+            "b": jnp.zeros((cfg.num_classes,), jnp.float32)}
+    return aux
+
+
+@functools.lru_cache(maxsize=16)
+def _mkd_step(cfg, M: int, lr: float, momentum: float):
+    def logits_fn(p, b):
+        return resnet.apply(p, cfg, b["images"])
+
+    def task_fn(p, b):
+        return _ce(logits_fn(p, b), b["labels"])
+
+    def loss(plist, batch):
+        return mkd.mkd_loss(logits_fn, plist, batch, task_fn)
+
+    @jax.jit
+    def step(plist, vels, batch):
+        grads = jax.grad(loss)(plist, batch)
+        vels = jax.tree.map(lambda v, g: momentum * v + g, vels, grads)
+        plist = jax.tree.map(lambda p, v: p - lr * v, plist, vels)
+        return plist, vels
+
+    return step

@@ -1,0 +1,42 @@
+"""HeteroFL (Diao et al. 2021): width-slimming with nested prefix-slice
+aggregation.  Each client trains the first round(r*C) channels; the
+server averages each coordinate over the clients whose slice covers it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.fl.baselines import heterofl_aggregate, heterofl_local
+from repro.fl.registry import register
+from repro.fl.strategy import ClientResult
+from repro.fl.strategies import common
+from repro.models import resnet
+
+
+@register("heterofl")
+class HeteroFLStrategy:
+    def init_state(self, ctx):
+        return resnet.init(ctx.key, ctx.model_cfg)
+
+    def client_update(self, ctx, state, client_id, batches):
+        r = min(ctx.ratios[client_id], 1.0)
+        padded, mask = heterofl_local(
+            ctx.model_cfg, state, r, batches, lr=ctx.sim.lr,
+            momentum=ctx.sim.momentum, local_steps=ctx.sim.local_steps)
+        # the wire carries the r-width slice, not the zero-padded tree:
+        # the mask's nonzero count IS the slice's coordinate count
+        wire = sum(int(jnp.sum(m)) * p.dtype.itemsize
+                   for p, m in zip(jax.tree.leaves(padded),
+                                   jax.tree.leaves(mask)))
+        return ClientResult((padded, mask), float(ctx.sizes[client_id]),
+                            comm_bytes=wire)
+
+    def aggregate(self, ctx, state, results):
+        return heterofl_aggregate(state,
+                                  [r.payload[0] for r in results],
+                                  [r.payload[1] for r in results],
+                                  [r.weight for r in results])
+
+    def eval_model(self, ctx, state, x, y):
+        return common.resnet_accuracy(ctx.model_cfg, state, x, y)

@@ -1,0 +1,118 @@
+"""The `FLStrategy` protocol — one pluggable interface for every
+heterogeneous-FL method.
+
+The paper's robustness argument (contribution 3) is that FeDepth composes
+with *plain* FedAvg while width-slimming baselines each need bespoke
+aggregation.  This module makes that comparison structural: every method
+is a strategy with four hooks, and one `RoundEngine`
+(:mod:`repro.fl.engine`) owns everything else — cohort sampling, budget /
+decomposition assignment, eval cadence, structured history.
+
+Adding a method = one file under ``fl/strategies/`` implementing this
+protocol plus an ``@register("name")`` line; the engine is never edited.
+
+    from repro.fl.registry import register
+    from repro.fl.strategy import ClientResult
+
+    @register("my-method")
+    class MyStrategy:
+        def init_state(self, ctx): ...
+        def client_update(self, ctx, state, client_id, batches): ...
+        def aggregate(self, ctx, state, results): ...
+        def eval_model(self, ctx, state, x, y): ...
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import (Any, Callable, Dict, List, Optional, Protocol, Sequence,
+                    runtime_checkable)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class ClientResult:
+    """What one client hands back to the server.
+
+    ``payload`` is strategy-defined (full params for FeDepth/FedAvg,
+    (padded, mask) for HeteroFL, ...); the engine never inspects it beyond
+    sizing the upload for the bytes-communicated history column.
+    """
+    payload: Any
+    weight: float                       # aggregation weight ~ |D_k|
+    comm_bytes: Optional[int] = None    # upload size; None -> engine sizes
+                                        # the payload itself
+
+
+@dataclasses.dataclass
+class Context:
+    """Everything the engine precomputes once per experiment and shares
+    with the strategy on every hook call.
+
+    ``ratios`` / ``budgets`` / ``decomps`` implement the paper's budget
+    protocol (width-ratio-equivalent byte budgets, memory-adaptive
+    decompositions); ``caches`` is a per-experiment dict strategies use to
+    share jitted step functions across clients and rounds.
+    """
+    sim: Any                                 # SimConfig (engine module)
+    num_clients: int
+    sizes: np.ndarray                        # per-client sample counts
+    rng: np.random.Generator                 # shared simulation stream
+    key: jax.Array                           # PRNG key for model init
+    model_cfg: Any = None                    # e.g. ResNetConfig
+    mem: Any = None                          # ModelMemory (budget pricing)
+    ratios: Optional[np.ndarray] = None      # scenario width ratios
+    budgets: Optional[np.ndarray] = None     # bytes per client
+    decomps: Optional[List] = None           # FeDepth Decomposition per client
+    surplus: Optional[np.ndarray] = None     # per-client local model count M
+                                             # (M > 1 -> MKD client)
+    data: Any = None                         # FederatedData (None = generic)
+    caches: Dict = dataclasses.field(default_factory=dict)
+
+
+@runtime_checkable
+class FLStrategy(Protocol):
+    """Protocol every FL method implements (duck-typed; subclassing is
+    unnecessary).
+
+    A strategy may additionally define ``setup(ctx)``: the engine calls
+    it once before the round loop, ALSO when the caller supplies an
+    ``initial_state`` (in which case ``init_state`` is skipped) — put
+    derived per-experiment config there, not in ``init_state``.
+    """
+
+    def init_state(self, ctx: Context) -> Any:
+        """Build the initial server state (params or richer)."""
+        ...
+
+    def client_update(self, ctx: Context, state: Any, client_id: int,
+                      batches: Sequence) -> ClientResult:
+        """Run one client's local work for the current round."""
+        ...
+
+    def aggregate(self, ctx: Context, state: Any,
+                  results: Sequence[ClientResult]) -> Any:
+        """Fold the cohort's results into the next server state."""
+        ...
+
+    def eval_model(self, ctx: Context, state: Any, x, y) -> float:
+        """Top-1 accuracy of the current global model on (x, y)."""
+        ...
+
+
+def tree_bytes(tree) -> int:
+    """Total byte size of all array leaves in a pytree (non-array leaves,
+    e.g. python ints riding along in a payload, are free)."""
+    return sum(int(leaf.nbytes) for leaf in jax.tree.leaves(tree)
+               if hasattr(leaf, "nbytes"))
+
+
+def accuracy(logits_fn: Callable, x, y, batch: int = 512) -> float:
+    """Batched top-1 accuracy for any ``logits_fn(x) -> (B, C)``."""
+    correct = 0
+    for i in range(0, len(x), batch):
+        logits = logits_fn(x[i:i + batch])
+        correct += int((jnp.argmax(logits, -1) == y[i:i + batch]).sum())
+    return correct / len(x)

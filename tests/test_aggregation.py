@@ -1,0 +1,90 @@
+"""Direct unit tests for core/aggregation: masked aggregation semantics
+(skipped-prefix leaves keep global values; weights renormalize over who
+trained) and the trained-mask builder on a real runner/decomposition."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.preresnet20 import reduced as rn_reduced
+from repro.core import aggregation, blockwise
+from repro.core.decomposition import Decomposition
+from repro.models import resnet
+
+
+# ---------------------------------------------------------- aggregate_masked
+def test_masked_untrained_leaf_keeps_global():
+    """A leaf NO client trained must keep the broadcast global value."""
+    g = {"skip": jnp.full((3,), 7.0), "train": jnp.zeros((3,))}
+    c1 = {"skip": jnp.zeros((3,)), "train": jnp.ones((3,))}
+    c2 = {"skip": jnp.zeros((3,)), "train": jnp.full((3,), 3.0)}
+    m0 = {"skip": jnp.zeros((3,)), "train": jnp.ones((3,))}
+    out = aggregation.aggregate_masked(g, [c1, c2], [1.0, 1.0], [m0, m0])
+    np.testing.assert_allclose(out["skip"], 7.0)       # nobody trained
+    np.testing.assert_allclose(out["train"], 2.0)      # plain average
+
+
+def test_masked_weights_renormalize_over_trainers():
+    """Weights renormalize over the clients that trained each leaf: a
+    heavy client that SKIPPED the leaf contributes nothing to it."""
+    g = {"w": jnp.zeros((2,))}
+    trained = {"w": jnp.ones((2,))}
+    skipped = {"w": jnp.full((2,), 100.0)}   # stale values must not leak
+    m_yes, m_no = {"w": jnp.ones((2,))}, {"w": jnp.zeros((2,))}
+    # skipped client has 9x the weight — irrelevant: renormalized out
+    out = aggregation.aggregate_masked(g, [trained, skipped], [1.0, 9.0],
+                                       [m_yes, m_no])
+    np.testing.assert_allclose(out["w"], 1.0)
+
+
+def test_masked_partial_overlap_mixes_correctly():
+    g = {"w": jnp.zeros((2,))}
+    c1 = {"w": jnp.array([1.0, 1.0])}
+    c2 = {"w": jnp.array([3.0, 3.0])}
+    m1 = {"w": jnp.array([1.0, 1.0])}
+    m2 = {"w": jnp.array([1.0, 0.0])}   # c2 trained only coord 0
+    out = aggregation.aggregate_masked(g, [c1, c2], [1.0, 1.0], [m1, m2])
+    np.testing.assert_allclose(out["w"], [2.0, 1.0])
+
+
+def test_masked_matches_fedavg_when_everyone_trains():
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.zeros((4,))}
+    cs = [{"w": jnp.asarray(rng.normal(size=4), jnp.float32)}
+          for _ in range(3)]
+    ms = [{"w": jnp.ones((4,))} for _ in range(3)]
+    w = [1.0, 2.0, 3.0]
+    np.testing.assert_allclose(
+        aggregation.aggregate_masked(g, cs, w, ms)["w"],
+        aggregation.fedavg(cs, w)["w"], rtol=1e-5)
+
+
+# ---------------------------------------------------------- trained_mask_for
+@pytest.fixture(scope="module")
+def tiny_runner():
+    cfg = rn_reduced(num_classes=4, image_size=16)
+    params = resnet.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params, blockwise.resnet_runner(cfg)
+
+
+def test_trained_mask_skipped_prefix_is_zero(tiny_runner):
+    cfg, params, runner = tiny_runner
+    n = cfg.num_blocks
+    dec = Decomposition(tuple((i, i + 1) for i in range(1, n)), 1, 0)
+    mask = aggregation.trained_mask_for(params, dec, runner)
+    # skipped block 0 (and the stem, which trains with block 0) stays 0
+    assert all(float(x.max()) == 0.0
+               for x in jax.tree.leaves(mask["blocks"][0]))
+    assert float(jnp.asarray(mask["stem"]).max()) == 0.0
+    # trained blocks and the always-trained head are 1
+    for b in range(1, n):
+        assert all(float(x.min()) == 1.0
+                   for x in jax.tree.leaves(mask["blocks"][b]))
+    assert float(jnp.asarray(mask["classifier"]["w"]).min()) == 1.0
+
+
+def test_trained_mask_full_coverage_is_all_ones(tiny_runner):
+    cfg, params, runner = tiny_runner
+    dec = Decomposition(((0, cfg.num_blocks),), 0, 0)
+    mask = aggregation.trained_mask_for(params, dec, runner)
+    assert all(float(x.min()) == 1.0 for x in jax.tree.leaves(mask))

@@ -1,0 +1,131 @@
+"""Strategy registry, cohort samplers, and round-engine plumbing."""
+import numpy as np
+import pytest
+
+from repro.fl import registry
+from repro.fl.engine import SimConfig
+from repro.fl.sampling import (AvailabilityTraceSampler, SequentialScheduler,
+                               StragglerSampler, UniformSampler)
+from repro.fl.strategy import ClientResult, Context, FLStrategy, tree_bytes
+
+
+# ------------------------------------------------------------------ registry
+def test_all_six_methods_registered():
+    names = registry.available()
+    for m in ("fedavg", "heterofl", "splitmix", "depthfl", "fedepth",
+              "m-fedepth"):
+        assert m in names
+
+
+def test_unknown_strategy_raises():
+    with pytest.raises(KeyError, match="unknown FL strategy"):
+        registry.get_strategy("not-a-method")
+
+
+def test_get_strategy_returns_fresh_instances():
+    a = registry.get_strategy("fedepth")
+    b = registry.get_strategy("fedepth")
+    assert a is not b
+    assert isinstance(a, FLStrategy)
+
+
+def test_mfedepth_is_aux_variant():
+    assert registry.get_strategy("m-fedepth").head == "aux"
+    assert registry.get_strategy("fedepth").head == "skip"
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+        registry.register("fedavg")(object)
+
+
+# ------------------------------------------------------------------ samplers
+def _ctx(num_clients=20, participation=0.25, seed=0):
+    return Context(sim=SimConfig(participation=participation, seed=seed),
+                   num_clients=num_clients,
+                   sizes=np.ones(num_clients),
+                   rng=np.random.default_rng(seed), key=None)
+
+
+def test_uniform_sampler_size_and_uniqueness():
+    ctx = _ctx()
+    cohort = UniformSampler().sample(ctx, 0)
+    assert len(cohort) == 5                      # ceil(0.25 * 20)
+    assert len(set(cohort.tolist())) == len(cohort)
+    assert all(0 <= c < 20 for c in cohort)
+
+
+def test_uniform_sampler_at_least_one():
+    ctx = _ctx(num_clients=3, participation=0.01)
+    assert len(UniformSampler().sample(ctx, 0)) == 1
+
+
+def test_availability_trace_restricts_cohort():
+    ctx = _ctx()
+    trace = [[0, 1, 2], [10, 11]]
+    s = AvailabilityTraceSampler(trace)
+    assert set(s.sample(ctx, 0)).issubset({0, 1, 2})
+    assert set(s.sample(ctx, 1)).issubset({10, 11})
+    assert set(s.sample(ctx, 2)).issubset({0, 1, 2})   # trace cycles
+
+
+def test_availability_trace_empty_round_falls_back():
+    ctx = _ctx()
+    s = AvailabilityTraceSampler([[]])
+    assert len(s.sample(ctx, 0)) == 5
+
+
+def test_straggler_sampler_subset_of_base_never_empty():
+    ctx = _ctx(participation=0.5)
+    base = UniformSampler()
+    s = StragglerSampler(drop_prob=0.9, base=base)
+    for rnd in range(10):
+        cohort = s.sample(ctx, rnd)
+        assert len(cohort) >= 1
+        assert len(cohort) <= 10
+    with pytest.raises(ValueError):
+        StragglerSampler(drop_prob=1.0)
+
+
+# ----------------------------------------------------------------- scheduler
+def test_sequential_scheduler_order_and_results():
+    calls = []
+
+    class Echo:
+        def client_update(self, ctx, state, client_id, batches):
+            calls.append(client_id)
+            return ClientResult(payload=batches, weight=1.0)
+
+    out = SequentialScheduler().run(_ctx(), Echo(), None, [3, 1, 2],
+                                    lambda k: [f"batch{k}"])
+    assert calls == [3, 1, 2]
+    assert [r.payload for r in out] == [["batch3"], ["batch1"], ["batch2"]]
+
+
+def test_tree_bytes_counts_arrays_only():
+    tree = {"a": np.zeros((4,), np.float32), "b": [np.zeros((2,), np.int8),
+                                                   7, "meta"]}
+    assert tree_bytes(tree) == 16 + 2
+
+
+def test_engine_initial_state_still_runs_setup():
+    """run(initial_state=...) must skip init_state but NOT the strategy's
+    setup hook (derived config like fedavg's sub_cfg lives there)."""
+    from repro.configs.preresnet20 import reduced as rn_reduced
+    from repro.fl.data import build_federated
+    from repro.fl.engine import RoundEngine, build_context
+    from repro.models import resnet
+
+    data = build_federated(num_clients=4, alpha=1.0, n_train=160,
+                           n_test=80, image_size=16, seed=0)
+    cfg = rn_reduced(num_classes=10, image_size=16)
+    sim = SimConfig(rounds=1, participation=0.5, lr=0.05, local_steps=1,
+                    batch_size=32, scenario="fair", seed=0)
+    strat = registry.get_strategy("fedavg")
+    ctx = build_context(data, sim, model_cfg=cfg)
+    strat.setup(ctx)
+    warm = resnet.init(ctx.key, strat.sub_cfg)
+    engine = RoundEngine(registry.get_strategy("fedavg"),
+                         build_context(data, sim, model_cfg=cfg))
+    state, hist = engine.run(initial_state=warm, eval_every=1)
+    assert hist and 0.0 <= hist[-1].accuracy <= 1.0

@@ -92,11 +92,20 @@ def test_run_experiment_smoke(method, tiny_data, tiny_cfg):
 
 
 def test_fedepth_learns_above_chance(tiny_data, tiny_cfg):
-    sim = SimConfig(rounds=8, participation=0.5, lr=0.08, local_steps=2,
+    # Investigated flake: the skip-head path does NOT under-train — the
+    # global model learns, but single-round accuracy oscillates hard on
+    # this tiny config (4/8 non-IID clients per cohort at the paper's
+    # lr=0.08; rounds 7..12 read 0.225, 0.14, 0.205, 0.265, 0.14, 0.285
+    # on seed 0), so the old single-snapshot assert (round 8 = 0.14 vs a
+    # 0.15 threshold) was a coin flip on cohort composition.  Assert the
+    # actual claim — learning above chance — on the mean of the last
+    # three evals (rounds 8/10/12 -> 0.23), well clear of chance 0.10.
+    sim = SimConfig(rounds=12, participation=0.5, lr=0.08, local_steps=2,
                     batch_size=64, scenario="fair", seed=0)
-    acc, _ = run_experiment("fedepth", tiny_data, sim, model_cfg=tiny_cfg,
-                            eval_every=8)
-    assert acc > 0.15  # 10 classes -> chance is 0.10
+    _, hist = run_experiment("fedepth", tiny_data, sim, model_cfg=tiny_cfg,
+                             eval_every=2)
+    tail = [rec.accuracy for rec in hist[-3:]]
+    assert sum(tail) / len(tail) > 0.15  # 10 classes -> chance is 0.10
 
 
 def test_fedepth_robust_to_scenarios(tiny_data, tiny_cfg):
