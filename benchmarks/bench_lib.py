@@ -1,4 +1,5 @@
 """Shared helpers for the benchmark harness."""
+import json
 import os
 import time
 
@@ -8,6 +9,18 @@ def rounds(default: int) -> int:
     scale = os.environ.get("REPRO_BENCH_SCALE", "quick")
     return {"quick": default, "med": default * 3, "full": default * 10}.get(
         scale, default)
+
+
+def write_json(name: str, payload: dict) -> str:
+    """Emit a machine-readable benchmark report as ``BENCH_<name>.json``
+    (cwd, or $REPRO_BENCH_DIR) — the repo's perf trajectory artifacts; CI
+    uploads them per run."""
+    out_dir = os.environ.get("REPRO_BENCH_DIR", ".")
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"wrote {path}")
+    return path
 
 
 class timer:

@@ -1,0 +1,195 @@
+"""Round-engine throughput: sequential vs vectorized cohort execution.
+
+Two workloads, both driven through ``RoundEngine`` with each scheduler:
+
+* ``table2``       — the repo's reduced table2 budget-scenario config
+  (20 clients, fair scenario, reduced PreResNet, dirichlet alpha=1.0)
+  for fedavg / heterofl / fedepth.  On XLA:CPU the conv methods are
+  bounded here: vmap over per-client conv WEIGHTS lowers to grouped
+  convolutions, which the CPU backend executes far less efficiently than
+  dense convs, so gains come from dispatch amortization only (expect
+  ~1-2x; on GPU/TPU the same path hyper-batches like FedJAX).
+* ``cross_device_vit`` — the paper's Figure 7 depth-wise ViT fine-tune
+  scaled to the ROADMAP's cross-device regime: 400 clients,
+  participation 0.25 (cohort 100), one shared decomposition, small local
+  batches.  ViT blocks are matmul-dominated, so the stacked update is a
+  batched GEMM and the vectorized scheduler clears >=3x.
+
+Methodology: for each (workload, scheduler) the SAME round sequence runs
+twice — the first pass warms every jit specialization (the cohort/batch
+rng stream is reset between passes, so every group-signature x
+group-size combination the timed pass sees is already compiled) — and
+only the second pass is timed, with the final state blocked until ready.
+Eval is excluded (it is scheduler-independent).  The two schedulers'
+final aggregated params are compared (must agree to float tolerance).
+
+Emits ``BENCH_round_engine.json`` via :func:`bench_lib.write_json` — the
+repo's machine-readable perf trajectory; CI uploads it as an artifact.
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.preresnet20 import reduced as rn_reduced
+from repro.configs.vit_t16 import reduced as vit_reduced
+from repro.core import blockwise
+from repro.core.decomposition import decompose
+from repro.core.memory_model import vit_memory
+from repro.fl.data import build_federated
+from repro.fl.engine import RoundEngine, SimConfig, build_context
+from repro.fl.registry import get_strategy
+from repro.fl.strategies.fedepth import FedepthStrategy
+from repro.fl.strategy import Context
+from repro.models import vit
+
+from benchmarks.bench_lib import csv_row, rounds, write_json
+
+SCHEDS = ("sequential", "vectorized")
+
+
+def _timed_pass(engine, state0, batch_fn, n_rounds: int, seed: int):
+    """Run rounds [0, n) from ``state0`` over the seed's cohort/batch
+    stream; returns (final_state, per-round seconds)."""
+    engine.ctx.rng = np.random.default_rng(seed)
+    state, ts = state0, []
+    for rd in range(n_rounds):
+        t0 = time.perf_counter()
+        state, _ = engine.run_round(state, rd, batch_fn)
+        jax.block_until_ready(state)
+        ts.append(time.perf_counter() - t0)
+    return state, ts
+
+
+def _compare(engines_out, cohort: int, n_rounds: int):
+    """Schedulers' stats + final-state agreement."""
+    report, finals = {}, {}
+    for sched, (final, ts) in engines_out.items():
+        sec = float(np.median(ts)) * n_rounds
+        report[sched] = {
+            "seconds": sec,
+            "rounds_per_sec": n_rounds / sec,
+            "clients_per_sec": cohort * n_rounds / sec,
+        }
+        finals[sched] = final
+    report["speedup"] = (report["vectorized"]["rounds_per_sec"]
+                         / report["sequential"]["rounds_per_sec"])
+    diff = max(float(np.abs(np.asarray(a) - np.asarray(b)).max())
+               for a, b in zip(jax.tree.leaves(finals["sequential"]),
+                               jax.tree.leaves(finals["vectorized"])))
+    report["max_abs_param_diff"] = diff
+    # schedulers must agree: anything beyond float-associativity drift of
+    # a few training rounds means the batched path diverged
+    if diff > 1e-2:
+        raise AssertionError(
+            f"sequential/vectorized aggregated params diverged: {diff:.3e}")
+    return report
+
+
+def _run_both(make_engine, n_rounds: int, cohort: int, seed: int = 0):
+    out = {}
+    for sched in SCHEDS:
+        engine, state0, batch_fn = make_engine(sched)
+        _timed_pass(engine, state0, batch_fn, n_rounds, seed)     # warm jit
+        final, ts = _timed_pass(engine, state0, batch_fn, n_rounds, seed)
+        out[sched] = (final, ts)
+    return _compare(out, cohort, n_rounds)
+
+
+# ---------------------------------------------------------------- table2
+def bench_table2(n_rounds: int, seed: int = 0):
+    clients, participation = 20, 0.25
+    data = build_federated(num_clients=clients, alpha=1.0, n_train=4000,
+                           n_test=800, image_size=16, seed=seed)
+    cfg = rn_reduced(num_classes=10, image_size=16)
+
+    def make_engine(method):
+        def make(sched):
+            sim = SimConfig(rounds=n_rounds, participation=participation,
+                            lr=0.08, local_steps=2, batch_size=64,
+                            scenario="fair", seed=seed)
+            engine = RoundEngine(get_strategy(method),
+                                 build_context(data, sim, model_cfg=cfg),
+                                 scheduler=sched)
+            setup = getattr(engine.strategy, "setup", None)
+            if setup is not None:
+                setup(engine.ctx)
+            return (engine, engine.strategy.init_state(engine.ctx),
+                    engine.default_batch_fn())
+        return make
+
+    cohort = int(np.ceil(participation * clients))
+    out = {"config": {"clients": clients, "participation": participation,
+                      "rounds": n_rounds, "scenario": "fair",
+                      "model": cfg.name, "batch_size": 64,
+                      "local_steps": 2},
+           "methods": {}}
+    for m in ("fedavg", "heterofl", "fedepth"):
+        out["methods"][m] = _run_both(make_engine(m), n_rounds, cohort, seed)
+        r = out["methods"][m]
+        print(f"  [table2/{m}] seq={r['sequential']['rounds_per_sec']:.2f} "
+              f"rd/s  vec={r['vectorized']['rounds_per_sec']:.2f} rd/s  "
+              f"speedup={r['speedup']:.2f}x  "
+              f"diff={r['max_abs_param_diff']:.1e}")
+    return out
+
+
+# ------------------------------------------------- cross-device ViT (fig7)
+def bench_cross_device_vit(n_rounds: int, seed: int = 0):
+    clients, participation, batch = 400, 0.25, 8
+    cfg = vit_reduced(num_classes=10)
+    data = build_federated(num_clients=clients, alpha=1.0,
+                           n_train=clients * batch, n_test=400,
+                           image_size=cfg.image_size, seed=seed)
+    mem = vit_memory(cfg, batch=batch)
+    dec = decompose(mem, mem.block_train_bytes(0, max(1,
+                                                      len(mem.units) // 3)))
+    runner = blockwise.vit_runner(cfg)
+
+    def make(sched):
+        sim = SimConfig(rounds=n_rounds, participation=participation,
+                        lr=0.05, local_steps=2, batch_size=batch, seed=seed)
+        ctx = Context(sim=sim, num_clients=clients,
+                      sizes=data.client_sizes(),
+                      rng=np.random.default_rng(seed),
+                      key=jax.random.PRNGKey(seed), mem=mem,
+                      decomps=[dec] * clients, data=data)
+        engine = RoundEngine(FedepthStrategy(runner=runner), ctx,
+                             scheduler=sched)
+        state0 = vit.init(ctx.key, cfg)
+        return engine, state0, engine.default_batch_fn()
+
+    cohort = int(np.ceil(participation * clients))
+    r = _run_both(make, n_rounds, cohort, seed)
+    print(f"  [cross_device_vit] seq={r['sequential']['rounds_per_sec']:.2f}"
+          f" rd/s  vec={r['vectorized']['rounds_per_sec']:.2f} rd/s  "
+          f"speedup={r['speedup']:.2f}x  "
+          f"diff={r['max_abs_param_diff']:.1e}")
+    return {"config": {"clients": clients, "participation": participation,
+                       "rounds": n_rounds, "model": cfg.name,
+                       "batch_size": batch, "local_steps": 2,
+                       "method": "fedepth"},
+            "methods": {"fedepth": r}}
+
+
+def main() -> None:
+    t0 = time.time()
+    n_rounds = rounds(3)
+    print(f"# round-engine throughput ({n_rounds} timed rounds/workload)")
+    payload = {
+        "table2": bench_table2(n_rounds),
+        "cross_device_vit": bench_cross_device_vit(n_rounds),
+    }
+    write_json("round_engine", payload)
+    t2 = payload["table2"]["methods"]
+    xd = payload["cross_device_vit"]["methods"]["fedepth"]
+    us = (time.time() - t0) * 1e6
+    print(csv_row(
+        "round_engine", us,
+        ";".join([f"table2_{m}_speedup={t2[m]['speedup']:.2f}"
+                  for m in t2]
+                 + [f"cross_device_vit_speedup={xd['speedup']:.2f}"])))
+
+
+if __name__ == "__main__":
+    main()

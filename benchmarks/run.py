@@ -9,8 +9,9 @@ import sys
 import traceback
 
 from benchmarks import (fig5_partial_training, fig7_vit_finetune,
-                        kernel_microbench, roofline_report, table1_memory,
-                        table2_budget_scenarios, table3_unbalanced)
+                        kernel_microbench, roofline_report, round_engine,
+                        table1_memory, table2_budget_scenarios,
+                        table3_unbalanced)
 
 BENCHES = {
     "table1_memory": table1_memory.main,
@@ -20,6 +21,7 @@ BENCHES = {
     "fig7_vit_finetune": fig7_vit_finetune.main,
     "kernel_microbench": kernel_microbench.main,
     "roofline_report": roofline_report.main,
+    "round_engine": round_engine.main,
 }
 
 

@@ -5,7 +5,8 @@ import time
 import numpy as np
 
 from repro.configs.preresnet20 import reduced as rn_reduced
-from repro.fl import SimConfig, build_federated, run_experiment
+from repro.fl import (RoundEngine, SimConfig, build_context,
+                      build_federated, get_strategy)
 
 from benchmarks.bench_lib import csv_row, rounds
 
@@ -25,8 +26,10 @@ def main() -> None:
         sim = SimConfig(rounds=n_rounds, participation=0.25, lr=0.08,
                         local_steps=2, batch_size=64, scenario="fair",
                         seed=2)
-        accs[m], _ = run_experiment(m, data, sim, model_cfg=cfg,
-                                    eval_every=n_rounds)
+        engine = RoundEngine(get_strategy(m),
+                             build_context(data, sim, model_cfg=cfg))
+        _, hist = engine.run(eval_every=n_rounds)
+        accs[m] = hist[-1].accuracy
     print("  " + "  ".join(f"{m}={a:.3f}" for m, a in accs.items()))
     us = (time.time() - t0) * 1e6
     print(csv_row("table3_unbalanced", us,

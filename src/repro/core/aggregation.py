@@ -19,15 +19,23 @@ import jax
 import jax.numpy as jnp
 
 
-def fedavg(client_params: Sequence, weights: Sequence[float]):
-    """Weighted average of client pytrees.  weights ~ p_k, renormalized
-    over the sampled cohort."""
-    w = jnp.asarray(weights, jnp.float32)
+@jax.jit
+def _fedavg_jit(trees, w):
+    # jit's own cache keys on the pytree structure (cohort size included),
+    # so varying cohorts re-specialize without evicting older compiles
     w = w / w.sum()
     return jax.tree.map(
         lambda *xs: sum(wi * x.astype(jnp.float32)
                         for wi, x in zip(w, xs)).astype(xs[0].dtype),
-        *client_params)
+        *trees)
+
+
+def fedavg(client_params: Sequence, weights: Sequence[float]):
+    """Weighted average of client pytrees.  weights ~ p_k, renormalized
+    over the sampled cohort.  Jitted: the whole tree-wide weighted sum is
+    one dispatch, not one per (leaf, client)."""
+    return _fedavg_jit(tuple(client_params),
+                       jnp.asarray(weights, jnp.float32))
 
 
 def fedavg_delta(global_params, client_params: Sequence,
@@ -42,6 +50,25 @@ def fedavg_delta(global_params, client_params: Sequence,
         global_params, avg)
 
 
+@jax.jit
+def _masked_jit(global_params, trees, masks, w):
+    n = len(trees)                      # static at trace time
+
+    def combine(g, *pairs):
+        xs = pairs[:n]
+        ms = pairs[n:]
+        num = sum(wi * mi * x.astype(jnp.float32)
+                  for wi, x, mi in zip(w, xs, ms))
+        den = sum(wi * mi for wi, mi in zip(w, ms))
+        den = jnp.maximum(den, 1e-12)
+        out = num / den
+        any_trained = sum(ms) > 0
+        return jnp.where(any_trained, out,
+                         g.astype(jnp.float32)).astype(g.dtype)
+
+    return jax.tree.map(combine, global_params, *trees, *masks)
+
+
 def aggregate_masked(global_params, client_params: Sequence,
                      weights: Sequence[float],
                      trained_masks: Sequence) -> object:
@@ -49,23 +76,12 @@ def aggregate_masked(global_params, client_params: Sequence,
 
     ``trained_masks[k]`` is a pytree of {0,1} scalars (or arrays) marking
     which leaves client k trained (partial-training clients skip a
-    prefix).  Leaves nobody trained keep the global value.
+    prefix).  Leaves nobody trained keep the global value.  Jitted (one
+    dispatch per round).
     """
-    w = jnp.asarray(weights, jnp.float32)
-
-    def combine(g, *pairs):
-        xs = pairs[:len(client_params)]
-        ms = pairs[len(client_params):]
-        num = sum(wi * mi * x.astype(jnp.float32)
-                  for wi, x, mi in zip(w, xs, ms))
-        den = sum(wi * mi for wi, mi in zip(w, ms))
-        den = jnp.maximum(den, 1e-12)
-        out = num / den
-        any_trained = sum(ms) > 0
-        return jnp.where(any_trained, out, g.astype(jnp.float32)).astype(g.dtype)
-
-    return jax.tree.map(combine, global_params, *client_params,
-                        *trained_masks)
+    return _masked_jit(global_params, tuple(client_params),
+                       tuple(trained_masks),
+                       jnp.asarray(weights, jnp.float32))
 
 
 def trained_mask_for(params, dec, runner) -> object:

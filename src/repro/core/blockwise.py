@@ -384,3 +384,147 @@ def full_model_loss(runner: BlockRunner, params, batch):
     z = runner.embed(params, batch)
     z = runner.apply_units(params, z, 0, runner.n_units)
     return runner.head_loss(params, z, batch, runner.n_units - 1)
+
+
+# --------------------------------------------------------------------------
+# stacked (vmap-over-clients) execution — substrate of VectorizedScheduler
+# --------------------------------------------------------------------------
+def broadcast_tree(tree, group: int):
+    """Stack ``tree`` along a new leading client axis of size ``group``
+    (broadcast views: no copy until XLA materializes them)."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(jnp.asarray(x),
+                                   (group,) + jnp.shape(x)), tree)
+
+
+def unstack_tree(tree, group: int):
+    """Split a leading client axis back into per-client pytrees."""
+    return [jax.tree.map(lambda x: x[i], tree) for i in range(group)]
+
+
+def batch_signature(batches) -> tuple:
+    """Shape/dtype signature of one client's batch list; two clients are
+    stackable iff their signatures are equal."""
+    return tuple(
+        tuple((tuple(jnp.shape(leaf)), str(getattr(leaf, "dtype", None)))
+              for leaf in jax.tree.leaves(b)) for b in batches)
+
+
+def stackable(batches_per_client) -> bool:
+    """True when every client's batch list can be stacked into one
+    ``(clients, steps, ...)`` array pytree (same count, shapes, dtypes)."""
+    return len({batch_signature(b) for b in batches_per_client}) == 1
+
+
+def stack_batches(batches_per_client):
+    """Stack per-client batch lists into a ``(clients, batches, ...)``
+    pytree: client order is preserved on axis 0, the per-round batch list
+    on axis 1 (the local-epoch repetition is unrolled INSIDE the compiled
+    update via ``step % n_batches`` indexing, so repeated epochs slice the
+    same data and XLA CSE can buffer the frozen-prefix forward)."""
+    per_client = [jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
+                  for batches in batches_per_client]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per_client)
+
+
+# full unroll bound: beyond this many SGD steps per block, compile size
+# would grow without runtime benefit and the loop falls back to a
+# partially-unrolled scan (XLA:CPU runs convs inside rolled loops ~4x
+# slower than unrolled — layouts can't specialize — hence unroll at all)
+MAX_UNROLL_STEPS = 32
+SCAN_UNROLL = 8
+
+
+def run_local_steps(step, carry, batches, local_steps: int):
+    """Run ``local_steps`` epochs of ``step(carry, batch) -> carry`` over
+    a stacked batch axis, inside a trace.  Short step counts fully unroll
+    with static ``s % n_batches`` slices — epoch repeats become the SAME
+    subgraph, so XLA CSE dedupes anything that only depends on the batch
+    (e.g. the frozen-prefix forward, the paper's buffered z_{lo-1}); long
+    ones use a partially-unrolled scan to bound compile size."""
+    n_batches = jax.tree.leaves(batches)[0].shape[0]
+    n_steps = local_steps * n_batches
+    if n_steps <= MAX_UNROLL_STEPS:
+        for s in range(n_steps):
+            batch = jax.tree.map(lambda x, i=s % n_batches: x[i], batches)
+            carry = step(carry, batch)
+        return carry
+    steps = jax.tree.map(lambda x: jnp.concatenate([x] * local_steps),
+                         batches)
+    carry, _ = jax.lax.scan(lambda c, b: (step(c, b), None), carry, steps,
+                            unroll=SCAN_UNROLL)
+    return carry
+
+
+def make_group_update(runner: BlockRunner, blocks, *, lr: float,
+                      momentum: float, local_steps: int = 1,
+                      prox_mu: float = 0.0):
+    """Jitted group update: ``jax.vmap`` over the client axis of an
+    entire depth-wise local update (all blocks, all SGD steps).  One
+    dispatch covers the whole group's round — vs. clients x blocks x
+    steps dispatches on the sequential path.
+
+    ``blocks`` is the shared ``Decomposition.blocks`` tuple; momentum and
+    the FedProx anchor reset per block, like :func:`client_update`, and
+    steps visit ``local_steps`` repetitions of the batch axis in the same
+    order as the sequential ``for local_steps: for batch`` loop.
+    """
+
+    def sgd_step(params, train, vel, anchor, batch, lo, hi, j):
+        def loss(tp):
+            z_in = runner.embed(params, batch)
+            if lo > 0:
+                z_in = runner.apply_units(params, z_in, 0, lo)
+            l = block_loss_fn(runner, params, tp, z_in, batch, lo, hi, j)
+            if prox_mu > 0:
+                sq = sum(jnp.sum((a - b) ** 2) for a, b in zip(
+                    jax.tree.leaves(tp), jax.tree.leaves(anchor)))
+                l = l + 0.5 * prox_mu * sq
+            return l
+
+        g = jax.grad(loss)(train)
+        vel = jax.tree.map(lambda v, gi: momentum * v + gi, vel, g)
+        train = jax.tree.map(lambda t, v: t - lr * v, train, vel)
+        return train, vel
+
+    def one_client(params, batches):
+        for j, (lo, hi) in enumerate(blocks):
+            train = runner.split(params, lo, hi)
+            anchor = train
+            vel = jax.tree.map(jnp.zeros_like, train)
+            train, vel = run_local_steps(
+                lambda c, b, lo=lo, hi=hi, j=j, a=anchor: sgd_step(
+                    params, c[0], c[1], a, b, lo, hi, j),
+                (train, vel), batches, local_steps)
+            params = runner.merge(params, train, lo=lo, hi=hi)
+        return params
+
+    return jax.jit(jax.vmap(one_client))
+
+
+def client_update_batched(runner: BlockRunner, params, dec: Decomposition,
+                          batches_per_client, *, lr: float = 0.1,
+                          momentum: float = 0.9, local_steps: int = 1,
+                          prox_mu: float = 0.0,
+                          step_cache: Optional[dict] = None):
+    """Depth-wise local updates for a GROUP of clients sharing one
+    decomposition, as a single stacked computation.
+
+    Same contract as calling :func:`client_update` once per client (the
+    broadcast global ``params`` is the start point for everyone; only the
+    data differs), modulo float associativity of the batched convolutions.
+    Returns a list of per-client updated full param trees, in the order of
+    ``batches_per_client``.  Pass a shared ``step_cache`` so one compiled
+    group update serves every round (jit re-specializes per group size).
+    """
+    step_cache = step_cache if step_cache is not None else {}
+    key = (dec.blocks, lr, momentum, local_steps, prox_mu)
+    if key not in step_cache:
+        step_cache[key] = make_group_update(runner, dec.blocks, lr=lr,
+                                            momentum=momentum,
+                                            local_steps=local_steps,
+                                            prox_mu=prox_mu)
+    group = len(batches_per_client)
+    out = step_cache[key](broadcast_tree(params, group),
+                          stack_batches(batches_per_client))
+    return unstack_tree(out, group)

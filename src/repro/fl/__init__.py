@@ -1,8 +1,12 @@
 """Federated-learning runtime: data partitions, strategy API, round
-engine, baselines, and the legacy ``run_experiment`` shim."""
+engine, samplers/schedulers, baselines, and the legacy
+``run_experiment`` shim."""
 from repro.fl.data import FederatedData, build_federated  # noqa: F401
 from repro.fl.engine import (RoundEngine, RoundRecord, SimConfig,  # noqa: F401
                              build_context)
 from repro.fl.registry import available, get_strategy, register  # noqa: F401
-from repro.fl.strategy import ClientResult, Context, FLStrategy  # noqa: F401
+from repro.fl.sampling import (SequentialScheduler,  # noqa: F401
+                               VectorizedScheduler, make_scheduler)
+from repro.fl.strategy import (BatchableFLStrategy, ClientResult,  # noqa: F401
+                               Context, FLStrategy)
 from repro.fl.simulate import run_experiment  # noqa: F401

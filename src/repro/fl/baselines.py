@@ -76,6 +76,47 @@ def fedavg_local(cfg: ResNetConfig, params, batches, *, lr=0.1,
                      local_steps=local_steps, step_fn=step)
 
 
+@functools.lru_cache(maxsize=64)
+def fedavg_group_update(cfg: ResNetConfig, lr: float, momentum: float,
+                        local_steps: int):
+    """Jitted vmap-over-clients full-model SGD: the whole group's local
+    epochs run in one dispatch (unroll-vs-scan policy shared with the
+    depth-wise group update via ``blockwise.run_local_steps``)."""
+    from repro.core.blockwise import run_local_steps
+
+    def loss(p, b):
+        return _ce(resnet.apply(p, cfg, b["images"]), b["labels"])
+
+    def step(carry, batch):
+        p, v = carry
+        g = jax.grad(loss)(p, batch)
+        v = jax.tree.map(lambda vi, gi: momentum * vi + gi, v, g)
+        p = jax.tree.map(lambda pi, vi: pi - lr * vi, p, v)
+        return p, v
+
+    def one_client(params, batches):
+        vel = jax.tree.map(jnp.zeros_like, params)
+        params, _ = run_local_steps(step, (params, vel), batches,
+                                    local_steps)
+        return params
+
+    return jax.jit(jax.vmap(one_client))
+
+
+def fedavg_local_batched(cfg: ResNetConfig, params, batches_per_client, *,
+                         lr=0.1, momentum=0.9, local_steps=1):
+    """Group counterpart of :func:`fedavg_local`: every client starts from
+    the broadcast ``params`` and trains on its own stacked batch axis.
+    Returns per-client param trees in input order."""
+    from repro.core.blockwise import (broadcast_tree, stack_batches,
+                                      unstack_tree)
+    group = len(batches_per_client)
+    update = fedavg_group_update(cfg, lr, momentum, local_steps)
+    out = update(broadcast_tree(params, group),
+                 stack_batches(batches_per_client))
+    return unstack_tree(out, group)
+
+
 # --------------------------------------------------------------------------
 # HeteroFL
 # --------------------------------------------------------------------------
@@ -88,22 +129,30 @@ def heterofl_local(cfg_full: ResNetConfig, global_params, ratio: float,
     return width_util.pad_resnet(sub, cfg_full, sub_cfg)
 
 
-def heterofl_aggregate(global_params, padded_list: Sequence,
-                       mask_list: Sequence, weights: Sequence[float]):
-    """Nested aggregation: each coordinate averages over the clients whose
-    slice covers it; uncovered coordinates keep the global value."""
-    w = jnp.asarray(weights, jnp.float32)
+@jax.jit
+def _heterofl_agg_jit(global_params, padded, masks, w):
+    n = len(padded)                     # static at trace time
 
     def combine(g, *rest):
-        ps = rest[:len(padded_list)]
-        ms = rest[len(padded_list):]
+        ps = rest[:n]
+        ms = rest[n:]
         num = sum(wi * m * p.astype(jnp.float32)
                   for wi, p, m in zip(w, ps, ms))
         den = sum(wi * m for wi, m in zip(w, ms))
         out = num / jnp.maximum(den, 1e-12)
         return jnp.where(den > 0, out, g.astype(jnp.float32)).astype(g.dtype)
 
-    return jax.tree.map(combine, global_params, *padded_list, *mask_list)
+    return jax.tree.map(combine, global_params, *padded, *masks)
+
+
+def heterofl_aggregate(global_params, padded_list: Sequence,
+                       mask_list: Sequence, weights: Sequence[float]):
+    """Nested aggregation: each coordinate averages over the clients whose
+    slice covers it; uncovered coordinates keep the global value.  Jitted
+    (one dispatch per round)."""
+    return _heterofl_agg_jit(global_params, tuple(padded_list),
+                             tuple(mask_list),
+                             jnp.asarray(weights, jnp.float32))
 
 
 # --------------------------------------------------------------------------

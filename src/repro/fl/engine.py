@@ -16,12 +16,16 @@ r uniformly distributed over the scenario's tuple:
     Fair    r = {1/6, 1/3, 1/2, 1}
     Lack    r = {1/8, 1/6, 1/2, 1}     (partial training kicks in)
     Surplus r = {1/6, 1/3, 1/2, 2}     (MKD clients)
+The full protocol — where ``SCENARIOS`` / ``BUDGET_SLACK`` /
+``width_equivalent_budget`` / the decomposition floor come from and how
+they map onto the paper's Table 1 — is specified in
+``docs/budget_protocol.md``.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, NamedTuple, Optional, Tuple
+from typing import Callable, Dict, List, NamedTuple, Optional, Tuple, Union
 
 import jax
 import numpy as np
@@ -30,7 +34,8 @@ from repro.configs.preresnet20 import ResNetConfig
 from repro.core.decomposition import decompose, width_equivalent_budget
 from repro.core.memory_model import resnet_memory
 from repro.fl.sampling import (CohortSampler, ClientScheduler,
-                               SequentialScheduler, UniformSampler)
+                               SequentialScheduler, UniformSampler,
+                               VectorizedScheduler, make_scheduler)
 from repro.fl.strategy import ClientResult, Context, FLStrategy, tree_bytes
 
 SCENARIOS: Dict[str, Tuple[float, ...]] = {
@@ -114,11 +119,17 @@ class RoundEngine:
 
     def __init__(self, strategy: FLStrategy, ctx: Context, *,
                  sampler: Optional[CohortSampler] = None,
-                 scheduler: Optional[ClientScheduler] = None):
+                 scheduler: Union[ClientScheduler, str, None] = None):
+        """``scheduler`` is an instance or a name from
+        ``repro.fl.sampling.SCHEDULERS`` ("sequential" — the default — or
+        "vectorized").  The vectorized scheduler stacks clients that share
+        an execution signature into single vmap dispatches; its per-group
+        compiled updates live in ``ctx.caches`` so they are shared across
+        rounds (see README "Choosing a scheduler")."""
         self.strategy = strategy
         self.ctx = ctx
         self.sampler = sampler or UniformSampler()
-        self.scheduler = scheduler or SequentialScheduler()
+        self.scheduler = make_scheduler(scheduler)
 
     # ------------------------------------------------------------------
     def default_batch_fn(self) -> Callable[[int], list]:
@@ -152,7 +163,15 @@ class RoundEngine:
         strategy's own eval (the generic-runner path has no test split in
         the context).  ``initial_state`` (strategy-defined state type)
         skips ``init_state`` but NOT the strategy's optional ``setup``
-        hook.  Returns (final_state, history)."""
+        hook.  Returns (final_state, history).
+
+        History contract: one :class:`RoundRecord` per eval checkpoint
+        (every ``eval_every`` rounds plus the final round), NEVER fewer —
+        when no eval is possible (``ctx.data is None`` and no ``eval_fn``)
+        the record is still appended with ``accuracy=None``, so
+        ``seconds`` / ``comm_bytes`` accounting is complete and
+        ``history[-1]`` always covers round ``sim.rounds``.  ``seconds``
+        and ``comm_bytes`` accumulate since the previous record."""
         ctx = self.ctx
         setup = getattr(self.strategy, "setup", None)
         if setup is not None:
@@ -172,7 +191,7 @@ class RoundEngine:
                     acc = self.strategy.eval_model(
                         ctx, state, ctx.data.x_test, ctx.data.y_test)
                 else:
-                    continue  # nothing to evaluate with
+                    acc = None   # no eval source: keep the record anyway
                 now = time.perf_counter()
                 history.append(RoundRecord(rd + 1, acc, now - t_last,
                                            bytes_acc))

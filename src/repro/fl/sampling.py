@@ -90,10 +90,84 @@ class ClientScheduler(Protocol):
 
 
 class SequentialScheduler:
-    """Run clients one after another (today's execution model; the
-    batched/async schedulers on the roadmap implement the same
-    interface)."""
+    """Run clients one after another: one ``client_update`` (and thus one
+    chain of jit dispatches) per client.  The reference execution model —
+    always correct, never fast."""
 
     def run(self, ctx, strategy, state, cohort, batch_fn):
         return [strategy.client_update(ctx, state, int(k), batch_fn(int(k)))
                 for k in cohort]
+
+
+class VectorizedScheduler:
+    """Stack clients that run the SAME computation and execute each group
+    as one vmap-over-clients update (see ``docs/architecture.md``).
+
+    Grouping key = the strategy's ``client_group_key`` (e.g. FeDepth's
+    decomposition signature + surplus/MKD flag).  A group goes through the
+    strategy's ``client_update_batched`` when it has at least ``min_group``
+    clients, a non-``None`` key, and stackable batch lists (equal count /
+    shapes / dtypes); otherwise those clients fall back to the sequential
+    per-client path.  Strategies without the
+    :class:`repro.fl.strategy.BatchableFLStrategy` hooks are delegated to
+    :class:`SequentialScheduler` wholesale, preserving their exact
+    rng-draw interleaving (splitmix draws from ``ctx.rng`` inside
+    ``client_update``).
+
+    Determinism contract: every client's batches are drawn up-front in
+    cohort order, so the shared simulation stream advances exactly as
+    under the sequential scheduler and results are returned in cohort
+    order — scheduler choice changes wall-clock, not the experiment.
+    """
+
+    def __init__(self, min_group: int = 2):
+        self.min_group = max(1, int(min_group))
+        self.fallback = SequentialScheduler()
+
+    def run(self, ctx, strategy, state, cohort, batch_fn):
+        update_batched = getattr(strategy, "client_update_batched", None)
+        group_key = getattr(strategy, "client_group_key", None)
+        if update_batched is None or group_key is None:
+            return self.fallback.run(ctx, strategy, state, cohort, batch_fn)
+
+        from repro.core.blockwise import stackable
+
+        ids = [int(k) for k in cohort]
+        batches = [batch_fn(k) for k in ids]       # cohort-order rng draws
+        groups: dict = {}
+        for pos, cid in enumerate(ids):
+            groups.setdefault(group_key(ctx, cid), []).append(pos)
+
+        results: List[Optional[ClientResult]] = [None] * len(ids)
+        for key, positions in groups.items():
+            group_batches = [batches[p] for p in positions]
+            if (key is None or len(positions) < self.min_group
+                    or not stackable(group_batches)):
+                for p in positions:
+                    results[p] = strategy.client_update(
+                        ctx, state, ids[p], batches[p])
+                continue
+            outs = update_batched(ctx, state, [ids[p] for p in positions],
+                                  group_batches)
+            for p, res in zip(positions, outs):
+                results[p] = res
+        return results
+
+
+SCHEDULERS = {
+    "sequential": SequentialScheduler,
+    "vectorized": VectorizedScheduler,
+}
+
+
+def make_scheduler(spec=None) -> ClientScheduler:
+    """Resolve a scheduler spec: ``None`` -> sequential default, a name
+    from ``SCHEDULERS``, or a ready instance passed through."""
+    if spec is None:
+        return SequentialScheduler()
+    if isinstance(spec, str):
+        if spec not in SCHEDULERS:
+            raise ValueError(f"unknown scheduler {spec!r}; "
+                             f"available: {sorted(SCHEDULERS)}")
+        return SCHEDULERS[spec]()
+    return spec

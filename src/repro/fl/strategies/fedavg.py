@@ -1,12 +1,14 @@
 """FedAvg at the cohort's lowest common width (x min r) — the
 lowest-common-denominator baseline (McMahan et al. 2017): every client
 trains the SAME slimmed model, so no heterogeneity machinery at all.
+That homogeneity makes it trivially batchable: the whole cohort is one
+vectorization group.
 """
 from __future__ import annotations
 
 from repro.core import aggregation
 from repro.fl import width as width_util
-from repro.fl.baselines import fedavg_local
+from repro.fl.baselines import fedavg_local, fedavg_local_batched
 from repro.fl.registry import register
 from repro.fl.strategy import ClientResult
 from repro.fl.strategies import common
@@ -28,6 +30,18 @@ class FedAvgStrategy:
                              momentum=ctx.sim.momentum,
                              local_steps=ctx.sim.local_steps)
         return ClientResult(local, float(ctx.sizes[client_id]))
+
+    # ---------------------------------------------- batched capability
+    def client_group_key(self, ctx, client_id):
+        return "fedavg"        # every client runs the identical subnet
+
+    def client_update_batched(self, ctx, state, client_ids,
+                              batches_per_client):
+        locals_ = fedavg_local_batched(
+            self.sub_cfg, state, batches_per_client, lr=ctx.sim.lr,
+            momentum=ctx.sim.momentum, local_steps=ctx.sim.local_steps)
+        return [ClientResult(local, float(ctx.sizes[cid]))
+                for cid, local in zip(client_ids, locals_)]
 
     def aggregate(self, ctx, state, results):
         return aggregation.fedavg([r.payload for r in results],

@@ -79,6 +79,40 @@ class FedepthStrategy:
             result.comm_bytes = tree_bytes(local)
         return result
 
+    # ---------------------------------------------- batched capability
+    def client_group_key(self, ctx, client_id):
+        """Clients sharing a decomposition run the same depth-wise
+        computation and stack; MKD surplus clients (M > 1 with an MKD
+        implementation available) keep the sequential path."""
+        M = 1 if ctx.surplus is None else int(ctx.surplus[client_id])
+        if M > 1 and (self.mkd_fns is not None
+                      or ctx.model_cfg is not None):
+            return None
+        dec = ctx.decomps[client_id]
+        return (dec.blocks, dec.skipped_prefix)
+
+    def client_update_batched(self, ctx, state, client_ids,
+                              batches_per_client):
+        """One vmap+scan dispatch for the whole group (partial-training
+        prefix skips and aux heads ride along: both live in the shared
+        decomposition / param tree, not in per-client control flow)."""
+        dec = ctx.decomps[client_ids[0]]
+        locals_ = blockwise.client_update_batched(
+            self.runner, state, dec, batches_per_client, lr=ctx.sim.lr,
+            momentum=ctx.sim.momentum, local_steps=ctx.sim.local_steps,
+            prox_mu=self.prox_mu,
+            step_cache=ctx.caches.setdefault("fedepth_group_step", {}))
+        mask = aggregation.trained_mask_for(state, dec, self.runner) \
+            if self.masked_aggregation else None
+        results = []
+        for cid, local in zip(client_ids, locals_):
+            res = ClientResult(local, float(ctx.sizes[cid]))
+            if self.masked_aggregation:
+                res.payload = (local, mask)
+                res.comm_bytes = tree_bytes(local)
+            results.append(res)
+        return results
+
     def aggregate(self, ctx, state, results):
         ws = [r.weight for r in results]
         if self.masked_aggregation:

@@ -1,17 +1,29 @@
 """HeteroFL (Diao et al. 2021): width-slimming with nested prefix-slice
 aggregation.  Each client trains the first round(r*C) channels; the
 server averages each coordinate over the clients whose slice covers it.
+Clients sharing a width ratio train the identical subnet, so they batch
+as one vectorization group (slice once, vmap the local SGD, pad each).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.fl.baselines import heterofl_aggregate, heterofl_local
+from repro.fl import width as width_util
+from repro.fl.baselines import (fedavg_local_batched, heterofl_aggregate,
+                                heterofl_local)
 from repro.fl.registry import register
 from repro.fl.strategy import ClientResult
 from repro.fl.strategies import common
 from repro.models import resnet
+
+
+def _wire_bytes(padded, mask) -> int:
+    # the wire carries the r-width slice, not the zero-padded tree:
+    # the mask's nonzero count IS the slice's coordinate count
+    return sum(int(jnp.sum(m)) * p.dtype.itemsize
+               for p, m in zip(jax.tree.leaves(padded),
+                               jax.tree.leaves(mask)))
 
 
 @register("heterofl")
@@ -19,18 +31,42 @@ class HeteroFLStrategy:
     def init_state(self, ctx):
         return resnet.init(ctx.key, ctx.model_cfg)
 
+    @staticmethod
+    def _wire_for(ctx, ratio: float, padded, mask) -> int:
+        # upload size is fixed per (experiment, ratio); cache lives in the
+        # per-experiment context, not on the (reusable) strategy instance
+        cache = ctx.caches.setdefault("heterofl_wire", {})
+        if ratio not in cache:
+            cache[ratio] = _wire_bytes(padded, mask)
+        return cache[ratio]
+
     def client_update(self, ctx, state, client_id, batches):
         r = min(ctx.ratios[client_id], 1.0)
         padded, mask = heterofl_local(
             ctx.model_cfg, state, r, batches, lr=ctx.sim.lr,
             momentum=ctx.sim.momentum, local_steps=ctx.sim.local_steps)
-        # the wire carries the r-width slice, not the zero-padded tree:
-        # the mask's nonzero count IS the slice's coordinate count
-        wire = sum(int(jnp.sum(m)) * p.dtype.itemsize
-                   for p, m in zip(jax.tree.leaves(padded),
-                                   jax.tree.leaves(mask)))
         return ClientResult((padded, mask), float(ctx.sizes[client_id]),
-                            comm_bytes=wire)
+                            comm_bytes=self._wire_for(ctx, r, padded, mask))
+
+    # ---------------------------------------------- batched capability
+    def client_group_key(self, ctx, client_id):
+        return float(min(ctx.ratios[client_id], 1.0))
+
+    def client_update_batched(self, ctx, state, client_ids,
+                              batches_per_client):
+        r = min(ctx.ratios[client_ids[0]], 1.0)
+        sub, sub_cfg = width_util.slice_resnet(state, ctx.model_cfg, r)
+        locals_ = fedavg_local_batched(
+            sub_cfg, sub, batches_per_client, lr=ctx.sim.lr,
+            momentum=ctx.sim.momentum, local_steps=ctx.sim.local_steps)
+        results = []
+        for cid, local in zip(client_ids, locals_):
+            padded, mask = width_util.pad_resnet(local, ctx.model_cfg,
+                                                 sub_cfg)
+            results.append(ClientResult(
+                (padded, mask), float(ctx.sizes[cid]),
+                comm_bytes=self._wire_for(ctx, r, padded, mask)))
+        return results
 
     def aggregate(self, ctx, state, results):
         return heterofl_aggregate(state,

@@ -102,6 +102,36 @@ class FLStrategy(Protocol):
         ...
 
 
+@runtime_checkable
+class BatchableFLStrategy(FLStrategy, Protocol):
+    """Optional capability: cohort-vectorized local updates.
+
+    A strategy that also implements these two hooks can be driven by
+    :class:`repro.fl.sampling.VectorizedScheduler`, which groups the
+    cohort by ``client_group_key`` and runs each group's local work as ONE
+    stacked (vmap-over-clients) computation via ``client_update_batched``.
+    Strategies without them (or returning ``None`` keys) silently fall
+    back to per-client :meth:`FLStrategy.client_update` — batching is an
+    optimization, never a requirement.
+    """
+
+    def client_group_key(self, ctx: Context, client_id: int):
+        """Hashable execution signature: clients with equal keys run the
+        SAME computation (e.g. FeDepth decomposition blocks + MKD flag)
+        and may be stacked.  ``None`` opts this client out of batching."""
+        ...
+
+    def client_update_batched(self, ctx: Context, state: Any,
+                              client_ids: Sequence[int],
+                              batches_per_client: Sequence[Sequence]
+                              ) -> List["ClientResult"]:
+        """Local updates for a group sharing one ``client_group_key``.
+        Must be equivalent to calling ``client_update`` per client (modulo
+        float associativity), returning results in ``client_ids`` order —
+        the equivalence is asserted by ``tests/test_vectorized.py``."""
+        ...
+
+
 def tree_bytes(tree) -> int:
     """Total byte size of all array leaves in a pytree (non-array leaves,
     e.g. python ints riding along in a payload, are free)."""

@@ -1,0 +1,16 @@
+"""Docs stay navigable: no dead relative links in README.md / docs/."""
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_no_dead_relative_links():
+    sys.path.insert(0, str(REPO / "tools"))
+    try:
+        import check_links
+    finally:
+        sys.path.pop(0)
+    files = [REPO / "README.md"] + sorted((REPO / "docs").rglob("*.md"))
+    errors = [e for f in files for e in check_links.check_file(f)]
+    assert not errors, "\n".join(errors)

@@ -1,0 +1,232 @@
+"""VectorizedScheduler: grouping, fallback, and scheduler-equivalence.
+
+The contract under test (see docs/architecture.md "Vectorized cohort
+execution"): scheduler choice changes wall-clock, never the experiment —
+same batches drawn from the shared stream, numerically matching
+aggregated params (up to float associativity of the stacked ops), and
+identical comm-bytes accounting.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.preresnet20 import reduced as rn_reduced
+from repro.core.blockwise import (broadcast_tree, stack_batches, stackable,
+                                  unstack_tree)
+from repro.fl.data import build_federated
+from repro.fl.engine import RoundEngine, RoundRecord, SimConfig, build_context
+from repro.fl.registry import get_strategy
+from repro.fl.sampling import (SequentialScheduler, VectorizedScheduler,
+                               make_scheduler)
+from repro.fl.strategy import ClientResult, Context
+
+
+# ------------------------------------------------------------------ helpers
+def _tiny_data(num_clients=6, seed=0):
+    return build_federated(num_clients=num_clients, alpha=1.0, n_train=240,
+                           n_test=80, image_size=16, seed=seed)
+
+
+def _run(method, data, scheduler, *, scenario="fair", rounds=2, seed=0):
+    cfg = rn_reduced(num_classes=10, image_size=16)
+    sim = SimConfig(rounds=rounds, participation=0.5, lr=0.05,
+                    local_steps=2, batch_size=32, scenario=scenario,
+                    seed=seed)
+    engine = RoundEngine(get_strategy(method),
+                         build_context(data, sim, model_cfg=cfg),
+                         scheduler=scheduler)
+    return engine.run(eval_every=rounds)
+
+
+def _assert_equivalent(method, scenario):
+    data = _tiny_data()
+    state_seq, hist_seq = _run(method, data, "sequential",
+                               scenario=scenario)
+    # min_group=1 routes every client through the batched path, so the
+    # equivalence claim is exercised even for singleton groups
+    state_vec, hist_vec = _run(method, data, VectorizedScheduler(min_group=1),
+                               scenario=scenario)
+    for a, b in zip(jax.tree.leaves(state_seq), jax.tree.leaves(state_vec)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+    assert [r.comm_bytes for r in hist_seq] == \
+        [r.comm_bytes for r in hist_vec]
+    assert [r.round for r in hist_seq] == [r.round for r in hist_vec]
+
+
+# -------------------------------------------------------------- equivalence
+def test_fedavg_scheduler_equivalence():
+    _assert_equivalent("fedavg", "fair")
+
+
+def test_fedepth_scheduler_equivalence_partial_training():
+    # "lack" puts the poorest clients below the finest block: the batched
+    # path must reproduce the prefix-skipping decompositions exactly
+    _assert_equivalent("fedepth", "lack")
+
+
+def test_heterofl_scheduler_equivalence():
+    # exercises the slice-once + vmap + pad batched path and the cached
+    # per-ratio wire bytes (comm accounting must match exactly)
+    _assert_equivalent("heterofl", "fair")
+
+
+# -------------------------------------------------- grouping and fallbacks
+class _Recorder:
+    """Batchable stub: group key = client id parity, payload = marker."""
+
+    def __init__(self, key_fn=None):
+        self.sequential_calls = []
+        self.batched_calls = []
+        self.key_fn = key_fn or (lambda cid: cid % 2)
+
+    def client_group_key(self, ctx, client_id):
+        return self.key_fn(client_id)
+
+    def client_update(self, ctx, state, client_id, batches):
+        self.sequential_calls.append(client_id)
+        return ClientResult(np.zeros(1), 1.0, comm_bytes=0)
+
+    def client_update_batched(self, ctx, state, client_ids, batches):
+        self.batched_calls.append(tuple(client_ids))
+        return [ClientResult(np.zeros(1), 1.0, comm_bytes=0)
+                for _ in client_ids]
+
+
+def _stub_ctx(num_clients=8):
+    return Context(sim=SimConfig(participation=0.5), num_clients=num_clients,
+                   sizes=np.ones(num_clients),
+                   rng=np.random.default_rng(0), key=None)
+
+
+def _batch_fn(k):
+    return [{"x": np.zeros((4, 2), np.float32)}]
+
+
+def test_vectorized_groups_by_key():
+    strat = _Recorder()
+    out = VectorizedScheduler().run(_stub_ctx(), strat, None,
+                                    [0, 1, 2, 3, 4], _batch_fn)
+    assert len(out) == 5
+    assert sorted(strat.batched_calls) == [(0, 2, 4), (1, 3)]
+    assert strat.sequential_calls == []
+
+
+def test_vectorized_min_group_falls_back():
+    strat = _Recorder()
+    VectorizedScheduler(min_group=3).run(_stub_ctx(), strat, None,
+                                         [0, 1, 2, 3, 4], _batch_fn)
+    assert strat.batched_calls == [(0, 2, 4)]    # evens reach min_group
+    assert strat.sequential_calls == [1, 3]
+
+
+def test_vectorized_none_key_falls_back():
+    strat = _Recorder(key_fn=lambda cid: None if cid == 2 else "g")
+    VectorizedScheduler().run(_stub_ctx(), strat, None, [0, 1, 2, 3],
+                              _batch_fn)
+    assert strat.batched_calls == [(0, 1, 3)]
+    assert strat.sequential_calls == [2]
+
+
+def test_vectorized_ragged_batches_fall_back():
+    strat = _Recorder(key_fn=lambda cid: "g")
+
+    def ragged(k):   # client 1's batch shape differs -> not stackable
+        n = 8 if k == 1 else 4
+        return [{"x": np.zeros((n, 2), np.float32)}]
+
+    VectorizedScheduler().run(_stub_ctx(), strat, None, [0, 1, 2], ragged)
+    assert strat.batched_calls == []
+    assert sorted(strat.sequential_calls) == [0, 1, 2]
+
+
+def test_vectorized_delegates_plain_strategies_wholesale():
+    calls = []
+
+    class Plain:
+        def client_update(self, ctx, state, client_id, batches):
+            calls.append(client_id)
+            return ClientResult(np.zeros(1), 1.0, comm_bytes=0)
+
+    out = VectorizedScheduler().run(_stub_ctx(), Plain(), None, [3, 1, 2],
+                                    _batch_fn)
+    assert calls == [3, 1, 2]          # sequential order preserved
+    assert len(out) == 3
+
+
+def test_results_in_cohort_order():
+    class Tagger(_Recorder):
+        def client_update_batched(self, ctx, state, client_ids, batches):
+            return [ClientResult(np.full(1, cid), 1.0, comm_bytes=0)
+                    for cid in client_ids]
+
+    out = VectorizedScheduler().run(_stub_ctx(), Tagger(), None,
+                                    [4, 1, 2, 3], _batch_fn)
+    assert [int(r.payload[0]) for r in out] == [4, 1, 2, 3]
+
+
+# ------------------------------------------------------------- plumbing
+def test_make_scheduler_resolution():
+    assert isinstance(make_scheduler(None), SequentialScheduler)
+    assert isinstance(make_scheduler("sequential"), SequentialScheduler)
+    assert isinstance(make_scheduler("vectorized"), VectorizedScheduler)
+    inst = VectorizedScheduler(min_group=3)
+    assert make_scheduler(inst) is inst
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        make_scheduler("async")
+
+
+def test_engine_accepts_scheduler_name():
+    engine = RoundEngine(get_strategy("fedavg"), _stub_ctx(),
+                         scheduler="vectorized")
+    assert isinstance(engine.scheduler, VectorizedScheduler)
+
+
+# ------------------------------------------------------- stacking helpers
+def test_stack_helpers_round_trip():
+    batches = [[{"x": np.arange(6, dtype=np.float32).reshape(2, 3) + k}]
+               for k in range(3)]
+    assert stackable(batches)
+    stacked = stack_batches(batches)
+    assert stacked["x"].shape == (3, 1, 2, 3)   # (clients, batches, ...)
+    tree = {"w": np.ones((2, 2), np.float32)}
+    parts = unstack_tree(broadcast_tree(tree, 4), 4)
+    assert len(parts) == 4
+    np.testing.assert_array_equal(np.asarray(parts[2]["w"]), tree["w"])
+
+
+def test_stackable_rejects_mismatched_shapes_and_counts():
+    a = [{"x": np.zeros((2, 3), np.float32)}]
+    b = [{"x": np.zeros((2, 4), np.float32)}]
+    assert not stackable([a, b])
+    assert not stackable([a, a + a])
+
+
+# --------------------------------------- engine history contract (bugfix)
+def test_history_records_kept_without_eval_source():
+    """No eval_fn and ctx.data None used to silently drop records (and
+    their seconds/comm_bytes); now they appear with accuracy=None."""
+
+    class Null:
+        def init_state(self, ctx):
+            return np.zeros(2, np.float32)
+
+        def client_update(self, ctx, state, client_id, batches):
+            return ClientResult(np.ones(2, np.float32), 1.0)
+
+        def aggregate(self, ctx, state, results):
+            return results[0].payload
+
+        def eval_model(self, ctx, state, x, y):  # pragma: no cover
+            raise AssertionError("must not be called without data")
+
+    ctx = _stub_ctx()
+    ctx.sim.rounds = 4
+    engine = RoundEngine(Null(), ctx)
+    _, hist = engine.run(batch_fn=lambda k: [None], eval_every=2)
+    assert [r.round for r in hist] == [2, 4]
+    assert all(isinstance(r, RoundRecord) for r in hist)
+    assert all(r.accuracy is None for r in hist)
+    # cohort of ceil(0.5 * 8) = 4 clients x 8-byte payload x 2 rounds
+    assert all(r.comm_bytes == 2 * 4 * 8 for r in hist)
+    assert all(r.seconds >= 0 for r in hist)

@@ -1,0 +1,69 @@
+#!/usr/bin/env python
+"""Dead-link checker for markdown docs (CI: fails on broken RELATIVE
+links).
+
+Scans the given markdown files/directories for ``[text](target)`` links,
+skips absolute URLs / anchors / mailto, resolves each relative target
+against the containing file, and exits 1 listing any target that does
+not exist.  Heading anchors (``path.md#section``) are checked against
+the target file's headings.
+
+    python tools/check_links.py README.md docs
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def _headings(md_path: pathlib.Path) -> set:
+    """GitHub-style anchor slugs for a markdown file's headings."""
+    slugs = set()
+    for line in md_path.read_text(encoding="utf-8").splitlines():
+        m = re.match(r"#+\s+(.*)", line)
+        if m:
+            slug = re.sub(r"[^\w\- ]", "", m.group(1).lower()).strip()
+            slugs.add(slug.replace(" ", "-"))
+    return slugs
+
+
+def check_file(md_path: pathlib.Path) -> list:
+    errors = []
+    text = md_path.read_text(encoding="utf-8")
+    for target in LINK_RE.findall(text):
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        path_part, _, anchor = target.partition("#")
+        resolved = (md_path.parent / path_part).resolve()
+        if not resolved.exists():
+            errors.append(f"{md_path}: dead link -> {target}")
+        elif anchor and resolved.suffix == ".md" \
+                and anchor not in _headings(resolved):
+            errors.append(f"{md_path}: missing anchor -> {target}")
+    return errors
+
+
+def main(argv) -> int:
+    roots = [pathlib.Path(a) for a in (argv or ["README.md", "docs"])]
+    files = []
+    for root in roots:
+        if root.is_dir():
+            files.extend(sorted(root.rglob("*.md")))
+        elif root.exists():
+            files.append(root)
+        else:
+            print(f"warning: {root} not found", file=sys.stderr)
+    errors = [e for f in files for e in check_file(f)]
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} files: "
+          f"{'FAIL' if errors else 'OK'} ({len(errors)} dead links)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
