@@ -1,0 +1,127 @@
+"""Simulated time-to-accuracy: synchronous barriers vs buffered async.
+
+The systime subsystem's headline question — does asynchronous,
+staleness-weighted aggregation beat barrier rounds on *wall-clock as the
+devices experience it*?  Both modes run through ``AsyncEngine`` over the
+same population, budget scenario (fair / lack / surplus), and device mix;
+the virtual clock prices every client-round from the device profiles and
+the analytic FLOP/memory model, so the comparison is about scheduling,
+not hardware luck.
+
+* ``uniform_edge``      — homogeneous mid-tier fleet: the sync barrier
+  loses little (everyone finishes together), async's advantage is small.
+* ``straggler_heavy``   — 3/4 workstations + 1/4 IoT crawlers: every
+  sync round waits out the slowest sampled device, while async keeps the
+  fast clients busy and discounts the stragglers' stale returns.
+
+Per cell we report the final accuracy, total simulated seconds, and
+``sim_s_to_target`` — the virtual time of the first eval checkpoint at or
+above the shared target (0.9x the worse mode's final accuracy, so the
+target is reachable by construction in both modes).
+
+Emits ``BENCH_async_sim.json`` (via :func:`bench_lib.write_json`); CI
+runs it as a smoke and uploads the report next to
+``BENCH_round_engine.json``.
+"""
+import time
+
+import numpy as np
+
+from repro.configs.preresnet20 import reduced as rn_reduced
+from repro.fl.data import build_federated
+from repro.fl.engine import SimConfig, build_context
+from repro.fl.registry import get_strategy
+from repro.fl.systime import (DEVICE_TIERS, AsyncEngine, SystemModel,
+                              mixed_profiles, uniform_profiles)
+
+from benchmarks.bench_lib import csv_row, rounds, write_json
+
+CLIENTS, PARTICIPATION, BATCH = 20, 0.25, 32
+MIXES = {
+    "uniform_edge": lambda n, seed: uniform_profiles(
+        n, DEVICE_TIERS["edge"]),
+    "straggler_heavy": lambda n, seed: mixed_profiles(
+        n, {"workstation": 0.75, "iot": 0.25}, seed=seed),
+}
+
+
+def _run(method: str, scenario: str, mix: str, mode: str, n_rounds: int,
+         seed: int = 0):
+    data = build_federated(num_clients=CLIENTS, alpha=1.0, n_train=2000,
+                           n_test=600, image_size=16, seed=seed)
+    cfg = rn_reduced(num_classes=10, image_size=16)
+    sim = SimConfig(rounds=n_rounds, participation=PARTICIPATION, lr=0.08,
+                    local_steps=1, batch_size=BATCH, scenario=scenario,
+                    seed=seed)
+    ctx = build_context(data, sim, model_cfg=cfg)
+    system = SystemModel(MIXES[mix](CLIENTS, seed))
+    cohort = int(np.ceil(PARTICIPATION * CLIENTS))
+    async_kw = dict(concurrency=cohort, buffer_size=max(1, cohort // 2)) \
+        if mode == "async" else {}
+    eng = AsyncEngine(get_strategy(method), ctx, system=system, mode=mode,
+                      **async_kw)
+    _, hist = eng.run(eval_every=2)
+    return hist
+
+
+def _sim_s_to_target(curve, target: float):
+    """First eval checkpoint's virtual time at/above target accuracy."""
+    for _, acc, sim_s in curve:
+        if acc is not None and acc >= target:
+            return sim_s
+    return None
+
+
+def bench_cell(method: str, scenario: str, mix: str, n_rounds: int):
+    out = {}
+    for mode in ("sync", "async"):
+        hist = _run(method, scenario, mix, mode, n_rounds)
+        out[mode] = {
+            "final_accuracy": hist[-1].accuracy,
+            "sim_seconds_total": hist[-1].sim_seconds,
+            "curve": [(r.round, r.accuracy, r.sim_seconds) for r in hist],
+        }
+    target = 0.9 * min(out["sync"]["final_accuracy"],
+                       out["async"]["final_accuracy"])
+    out["target_accuracy"] = target
+    for mode in ("sync", "async"):
+        out[mode]["sim_s_to_target"] = _sim_s_to_target(out[mode]["curve"],
+                                                        target)
+    ts, ta = out["sync"]["sim_s_to_target"], out["async"]["sim_s_to_target"]
+    out["async_speedup_to_target"] = (ts / ta) if ts and ta else None
+    return out
+
+
+def main() -> None:
+    t0 = time.time()
+    n_rounds = rounds(6)
+    print(f"# async vs sync simulated time-to-accuracy "
+          f"({n_rounds} server updates per mode)")
+    payload = {"config": {"clients": CLIENTS,
+                          "participation": PARTICIPATION,
+                          "rounds": n_rounds, "batch_size": BATCH,
+                          "buffer_size": "cohort//2"},
+               "cells": {}}
+    grid = [("fedepth", sc, mix) for sc in ("fair", "lack", "surplus")
+            for mix in MIXES] + [("fedavg", "fair", mix) for mix in MIXES]
+    derived = []
+    for method, scenario, mix in grid:
+        cell = bench_cell(method, scenario, mix, n_rounds)
+        payload["cells"][f"{method}/{scenario}/{mix}"] = cell
+        sp = cell["async_speedup_to_target"]
+        print(f"  [{method}/{scenario}/{mix}] "
+              f"sync {cell['sync']['sim_seconds_total']:.3g}s "
+              f"(acc {cell['sync']['final_accuracy']:.3f})  "
+              f"async {cell['async']['sim_seconds_total']:.3g}s "
+              f"(acc {cell['async']['final_accuracy']:.3f})  "
+              f"to-target speedup "
+              f"{'n/a' if sp is None else f'{sp:.1f}x'}")
+        if mix == "straggler_heavy" and sp is not None:
+            derived.append(f"{method}_{scenario}_straggler_speedup={sp:.1f}")
+    write_json("async_sim", payload)
+    us = (time.time() - t0) * 1e6
+    print(csv_row("async_sim", us, ";".join(derived) or "no_targets_hit"))
+
+
+if __name__ == "__main__":
+    main()

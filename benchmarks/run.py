@@ -8,7 +8,7 @@ import argparse
 import sys
 import traceback
 
-from benchmarks import (fig5_partial_training, fig7_vit_finetune,
+from benchmarks import (async_sim, fig5_partial_training, fig7_vit_finetune,
                         kernel_microbench, roofline_report, round_engine,
                         table1_memory, table2_budget_scenarios,
                         table3_unbalanced)
@@ -22,6 +22,7 @@ BENCHES = {
     "kernel_microbench": kernel_microbench.main,
     "roofline_report": roofline_report.main,
     "round_engine": round_engine.main,
+    "async_sim": async_sim.main,
 }
 
 

@@ -30,6 +30,8 @@ class UnitCost:
     activations: int    # forward activations that must be held for backward
     output: int         # size of the unit's output z_j (the buffer FeDepth
                         # keeps when training unit j+1)
+    flops: int = 0      # PER-SAMPLE forward FLOPs (multiply-add = 2); the
+                        # systime latency model prices backward as 2x
 
     def train_bytes(self, optimizer_slots: int = 2) -> int:
         """Bytes to TRAIN this unit alone: params + grads + optimizer
@@ -43,6 +45,8 @@ class ModelMemory:
     units: List[UnitCost]          # depth units (finest decomposition)
     embed: UnitCost                # input side (embed/stem) — trained with unit 0
     head: UnitCost                 # classifier φ — trained with EVERY block
+    batch: int = 1                 # batch size the activation bytes were
+                                   # priced at (latency models rescale)
 
     def block_train_bytes(self, lo: int, hi: int, *,
                           optimizer_slots: int = 2,
@@ -101,6 +105,15 @@ def lm_memory(cfg: ModelConfig, batch: int, seq: int, *,
     kinds = cfg.layer_kinds()
     out_bytes = act_bytes * B * T * D
 
+    def unit_flops(p_bytes: int, seq: int, n_attn: int = 1,
+                   kv_seq: int = None) -> int:
+        # dense-equivalent forward: 2 FLOPs per weight per processed
+        # token, plus one score/value quadratic per ATTENTION layer in
+        # the unit (flash changes memory, not FLOPs; recurrent kinds —
+        # rwkv/mamba — have no quadratic)
+        return (2 * (p_bytes // param_bytes) * seq
+                + n_attn * 4 * seq * (kv_seq or seq) * D)
+
     units = []
     if cfg.family == "hybrid":
         every = cfg.hybrid_attn_every
@@ -110,40 +123,55 @@ def lm_memory(cfg: ModelConfig, batch: int, seq: int, *,
         mamba_p = cfg._layer_params("mamba") * param_bytes
         act = _lm_unit_act(cfg, B, T, act_bytes, "mamba") * (every - 1) \
             + _lm_unit_act(cfg, B, T, act_bytes, "attn")
+        # each group runs (every-1) mamba layers (no quadratic) plus the
+        # shared attention layer's compute (its params are priced into
+        # the head, its FLOPs happen here)
+        group_fl = unit_flops(mamba_p * (every - 1), T, n_attn=0) \
+            + unit_flops(cfg._attn_params() * param_bytes, T, n_attn=1)
         for g in range(n_groups):
             units.append(UnitCost(f"group_{g}", mamba_p * (every - 1),
-                                  act, out_bytes))
+                                  act, out_bytes, flops=group_fl))
         head_p = (cfg._attn_params() + 3 * D * cfg.d_ff + D * V
                   + 3 * D) * param_bytes
     elif cfg.is_encoder_decoder:
+        S = cfg.max_source_positions
         for i in range(cfg.encoder_layers):
             p = (cfg._attn_params() + 2 * D * cfg.d_ff + 4 * D) * param_bytes
-            act = act_bytes * B * cfg.max_source_positions * (2 * D + 2 * cfg.d_ff)
+            act = act_bytes * B * S * (2 * D + 2 * cfg.d_ff)
             units.append(UnitCost(f"enc_{i}", p, act,
-                                  act_bytes * B * cfg.max_source_positions * D))
+                                  act_bytes * B * S * D,
+                                  flops=unit_flops(p, S)))
         for i in range(cfg.num_layers):
             p = (2 * cfg._attn_params() + 2 * D * cfg.d_ff + 6 * D) * param_bytes
             act = _lm_unit_act(cfg, B, T, act_bytes, "dense") \
                 + act_bytes * B * T * D  # cross-attn
-            units.append(UnitCost(f"dec_{i}", p, act, out_bytes))
+            # self-attention T x T plus cross-attention T x S quadratics
+            fl = unit_flops(p, T, n_attn=1) \
+                + unit_flops(0, T, n_attn=1, kv_seq=S)
+            units.append(UnitCost(f"dec_{i}", p, act, out_bytes, flops=fl))
         head_p = D * V * param_bytes if not cfg.tie_embeddings else D * param_bytes
     else:
         m = cfg.moe_every
         for u in range(cfg.num_layers // m):
-            p = sum(cfg._layer_params(kinds[u * m + i]) for i in range(m))
-            act = sum(_lm_unit_act(cfg, B, T, act_bytes, kinds[u * m + i])
-                      for i in range(m))
+            ks = [kinds[u * m + i] for i in range(m)]
+            p = sum(cfg._layer_params(k) for k in ks)
+            act = sum(_lm_unit_act(cfg, B, T, act_bytes, k) for k in ks)
+            n_attn = sum(k not in ("rwkv", "mamba") for k in ks)
             units.append(UnitCost(f"unit_{u}", p * param_bytes, act,
-                                  out_bytes))
+                                  out_bytes,
+                                  flops=unit_flops(p * param_bytes, T,
+                                                   n_attn=n_attn)))
         head_p = (D + (0 if cfg.tie_embeddings else D * V)) * param_bytes
 
     embed_p = V * D * param_bytes
-    embed = UnitCost("embed", embed_p, out_bytes, out_bytes)
+    embed = UnitCost("embed", embed_p, out_bytes, out_bytes,
+                     flops=2 * T * D)    # lookup + scale, matmul-free
     # head activations: chunked-CE regime — logits never materialized;
     # live set is one (chunk, V) tile (counted as 1/16 of full logits)
     head_act = act_bytes * B * T * D + 4 * B * T * V // 16
-    head = UnitCost("head", head_p, head_act, 4 * B * T)
-    return ModelMemory(units, embed, head)
+    head = UnitCost("head", head_p, head_act, 4 * B * T,
+                    flops=2 * T * D * V)
+    return ModelMemory(units, embed, head, batch=batch)
 
 
 # --------------------------------------------------------------------------
@@ -166,17 +194,24 @@ def resnet_memory(cfg: ResNetConfig, batch: int, *,
         # ResNet: norm/relu outputs recomputed from the stored input)
         act = act_bytes * batch * (in_size * cin + 2 * size * cout)
         out = act_bytes * batch * size * cout
-        units.append(UnitCost(f"B{i + 1}", p * param_bytes, act, out))
+        # two 3x3 convs at the output resolution (+ the 1x1 shortcut)
+        fl = 2 * size * (9 * cin * cout + 9 * cout * cout
+                         + (cin * cout if (stride != 1 or cin != cout)
+                            else 0))
+        units.append(UnitCost(f"B{i + 1}", p * param_bytes, act, out,
+                              flops=fl))
     w0, w_last = cfg.widths()[0], cfg.widths()[-1]
     # stem holds only the input image; its OUTPUT is priced as B1's input
     embed = UnitCost("stem", 9 * cfg.in_channels * w0 * param_bytes,
                      act_bytes * batch * H * W * cfg.in_channels,
-                     act_bytes * batch * H * W * w0)
+                     act_bytes * batch * H * W * w0,
+                     flops=2 * H * W * 9 * cfg.in_channels * w0)
     head = UnitCost("head", (w_last * cfg.num_classes + cfg.num_classes
                              + 2 * w_last) * param_bytes,
                     act_bytes * batch * (w_last + cfg.num_classes),
-                    act_bytes * batch * cfg.num_classes)
-    return ModelMemory(units, embed, head)
+                    act_bytes * batch * cfg.num_classes,
+                    flops=2 * w_last * cfg.num_classes)
+    return ModelMemory(units, embed, head, batch=batch)
 
 
 # --------------------------------------------------------------------------
@@ -192,15 +227,19 @@ def vit_memory(cfg: ViTConfig, batch: int, *, param_bytes: int = 4,
         p = (4 * d * d + 2 * d * dff + dff + 5 * d) * param_bytes
         act = act_bytes * batch * N * (4 * d + 2 * dff) \
             + act_bytes * batch * cfg.num_heads * N * N  # vit uses naive attn
-        units.append(UnitCost(f"block_{i}", p, act, act_bytes * batch * N * d))
+        fl = 2 * N * (4 * d * d + 2 * d * dff) + 4 * N * N * d
+        units.append(UnitCost(f"block_{i}", p, act, act_bytes * batch * N * d,
+                              flops=fl))
     patch_dim = cfg.patch_size ** 2 * cfg.in_channels
     embed = UnitCost("patch_embed", (patch_dim * d + (N + 1) * d) * param_bytes,
-                     act_bytes * batch * N * d, act_bytes * batch * N * d)
+                     act_bytes * batch * N * d, act_bytes * batch * N * d,
+                     flops=2 * N * patch_dim * d)
     head = UnitCost("head", (d * cfg.num_classes + cfg.num_classes + 2 * d)
                     * param_bytes,
                     act_bytes * batch * (d + cfg.num_classes),
-                    act_bytes * batch * cfg.num_classes)
-    return ModelMemory(units, embed, head)
+                    act_bytes * batch * cfg.num_classes,
+                    flops=2 * d * cfg.num_classes)
+    return ModelMemory(units, embed, head, batch=batch)
 
 
 def model_memory(cfg: Union[ModelConfig, ResNetConfig, ViTConfig],

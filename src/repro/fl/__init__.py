@@ -1,12 +1,14 @@
 """Federated-learning runtime: data partitions, strategy API, round
-engine, samplers/schedulers, baselines, and the legacy
-``run_experiment`` shim."""
+engine, samplers/schedulers, baselines, the system-time simulation
+subsystem (``repro.fl.systime``), and the legacy ``run_experiment``
+shim."""
 from repro.fl.data import FederatedData, build_federated  # noqa: F401
 from repro.fl.engine import (RoundEngine, RoundRecord, SimConfig,  # noqa: F401
                              build_context)
 from repro.fl.registry import available, get_strategy, register  # noqa: F401
 from repro.fl.sampling import (SequentialScheduler,  # noqa: F401
                                VectorizedScheduler, make_scheduler)
-from repro.fl.strategy import (BatchableFLStrategy, ClientResult,  # noqa: F401
+from repro.fl.strategy import (AsyncFLStrategy,  # noqa: F401
+                               BatchableFLStrategy, ClientResult,
                                Context, FLStrategy)
 from repro.fl.simulate import run_experiment  # noqa: F401

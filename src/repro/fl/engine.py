@@ -67,19 +67,26 @@ class RoundRecord(NamedTuple):
     """One history entry.  Index-compatible with the legacy ``(round,
     acc)`` tuples (``rec[0]``/``rec[1]``); ``seconds`` and ``comm_bytes``
     accumulate wall-clock and client-upload traffic since the previous
-    record."""
+    record.  ``sim_seconds`` is the ABSOLUTE simulated time of the record
+    under a system-time engine (:mod:`repro.fl.systime`); the wall-clock
+    ``RoundEngine`` has no virtual clock and stamps 0.0."""
     round: int
     accuracy: Optional[float]
     seconds: float
     comm_bytes: int
+    sim_seconds: float = 0.0
 
 
 def client_ratios(num_clients: int, scenario: str,
                   seed: int = 0) -> np.ndarray:
-    """Uniformly distribute the scenario's ratios over clients."""
+    """Distribute the scenario's ratios over clients: uniform multiset
+    (counts differ by at most one), assignment seeded-shuffled so client
+    id never correlates with memory tier (client 0 is not always the
+    poorest device across every experiment)."""
     rs = SCENARIOS[scenario]
     reps = int(np.ceil(num_clients / len(rs)))
     arr = np.tile(np.asarray(rs), reps)[:num_clients]
+    np.random.default_rng(seed).shuffle(arr)
     return arr
 
 
@@ -112,6 +119,32 @@ def build_context(data, sim: SimConfig, *,
         surplus=np.where(ratios >= 2.0, 2, 1), data=data)
 
 
+def default_batch_fn(ctx: Context) -> Callable[[int], list]:
+    """The paper's per-round local loader: |D_k|/B fresh batches, drawn
+    from the shared simulation stream.  ONE definition for every engine
+    (RoundEngine and the systime engines) — the loader formula is part of
+    the cross-engine equivalence contract."""
+    data, sim = ctx.data, ctx.sim
+
+    def batch_fn(k: int) -> list:
+        return [data.client_batch(k, sim.batch_size, ctx.rng)
+                for _ in range(max(1, len(data.client_indices[k])
+                                   // sim.batch_size))]
+    return batch_fn
+
+
+def eval_state(strategy: FLStrategy, ctx: Context, state,
+               eval_fn: Optional[Callable]) -> Optional[float]:
+    """Shared eval fallback chain: explicit ``eval_fn`` > the strategy's
+    own eval on the context's test split > ``None`` (no eval source)."""
+    if eval_fn is not None:
+        return eval_fn(state)
+    if ctx.data is not None:
+        return strategy.eval_model(ctx, state, ctx.data.x_test,
+                                   ctx.data.y_test)
+    return None
+
+
 class RoundEngine:
     """Runs communication rounds of ONE strategy over a client
     population.  Generic over the strategy, the cohort sampler, and the
@@ -133,15 +166,9 @@ class RoundEngine:
 
     # ------------------------------------------------------------------
     def default_batch_fn(self) -> Callable[[int], list]:
-        """The paper's per-round local loader: |D_k|/B fresh batches."""
-        ctx = self.ctx
-        data, sim = ctx.data, ctx.sim
-
-        def batch_fn(k: int) -> list:
-            return [data.client_batch(k, sim.batch_size, ctx.rng)
-                    for _ in range(max(1, len(data.client_indices[k])
-                                       // sim.batch_size))]
-        return batch_fn
+        """The paper's per-round local loader (module-level
+        :func:`default_batch_fn` bound to this engine's context)."""
+        return default_batch_fn(self.ctx)
 
     def run_round(self, state, round_idx: int,
                   batch_fn: Callable[[int], list]):
@@ -185,13 +212,8 @@ class RoundEngine:
             state, comm = self.run_round(state, rd, batch_fn)
             bytes_acc += comm
             if (rd + 1) % eval_every == 0 or rd == ctx.sim.rounds - 1:
-                if eval_fn is not None:
-                    acc = eval_fn(state)
-                elif ctx.data is not None:
-                    acc = self.strategy.eval_model(
-                        ctx, state, ctx.data.x_test, ctx.data.y_test)
-                else:
-                    acc = None   # no eval source: keep the record anyway
+                # eval_state keeps the record even with no eval source
+                acc = eval_state(self.strategy, ctx, state, eval_fn)
                 now = time.perf_counter()
                 history.append(RoundRecord(rd + 1, acc, now - t_last,
                                            bytes_acc))

@@ -12,6 +12,7 @@ deprecation once callers migrate.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 from repro.configs.preresnet20 import ResNetConfig
@@ -27,6 +28,10 @@ def run_experiment(method: str, data: FederatedData, sim: SimConfig,
                    *, model_cfg: Optional[ResNetConfig] = None,
                    eval_every: int = 5, image_size: Optional[int] = None):
     """method in {fedavg, heterofl, splitmix, depthfl, fedepth, m-fedepth}."""
+    warnings.warn(
+        "run_experiment is deprecated; build a RoundEngine directly: "
+        "RoundEngine(get_strategy(method), build_context(data, sim)).run()",
+        DeprecationWarning, stacklevel=2)
     ctx = build_context(data, sim, model_cfg=model_cfg)
     engine = RoundEngine(get_strategy(method), ctx)
     _, history = engine.run(eval_every=eval_every)

@@ -30,6 +30,13 @@ class DepthFLStrategy:
         aux = depthfl_init_aux(cfg, jax.random.fold_in(ctx.key, 7))
         return params, aux
 
+    def client_work(self, ctx, client_id):
+        """Systime pricing: one end-to-end prefix of ``depth`` blocks —
+        exactly a single-block FeDepth schedule [0, depth)."""
+        from repro.core.decomposition import Decomposition
+        depth = max(self.depths[client_id], 2)
+        return Decomposition(((0, depth),), 0, 0)
+
     def client_update(self, ctx, state, client_id, batches):
         params, aux = state
         depth = max(self.depths[client_id], 2)

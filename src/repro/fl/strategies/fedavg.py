@@ -19,8 +19,13 @@ from repro.models import resnet
 class FedAvgStrategy:
     def setup(self, ctx):
         from repro.fl.engine import SCENARIOS
-        r_min = min(min(SCENARIOS[ctx.sim.scenario]), 1.0)
-        self.sub_cfg = width_util.subnet_config(ctx.model_cfg, r_min)
+        self.r_min = min(min(SCENARIOS[ctx.sim.scenario]), 1.0)
+        self.sub_cfg = width_util.subnet_config(ctx.model_cfg, self.r_min)
+
+    def client_work(self, ctx, client_id):
+        """Systime pricing: EVERY client trains the x min r subnet, not
+        its own budget's decomposition."""
+        return self.r_min
 
     def init_state(self, ctx):
         return resnet.init(ctx.key, self.sub_cfg)
@@ -46,6 +51,23 @@ class FedAvgStrategy:
     def aggregate(self, ctx, state, results):
         return aggregation.fedavg([r.payload for r in results],
                                   [r.weight for r in results])
+
+    def aggregate_async(self, ctx, state, results, stalenesses, *,
+                        alpha=0.5):
+        """Anchored staleness discount: the weight mass a stale result
+        loses, ``w_k * (1 - s(tau_k))``, goes to the CURRENT global
+        params instead of silently renormalizing over the cohort — stale
+        mass reverts to the server, fresh mass moves it.  All-zero
+        staleness makes the anchor weight 0 and this IS ``aggregate``."""
+        from repro.fl.systime.staleness import polynomial_discount
+        disc = [polynomial_discount(t, alpha) for t in stalenesses]
+        payloads = [r.payload for r in results]
+        weights = [r.weight * s for r, s in zip(results, disc)]
+        anchor = sum(r.weight * (1.0 - s) for r, s in zip(results, disc))
+        if anchor > 0.0:
+            payloads.append(state)
+            weights.append(anchor)
+        return aggregation.fedavg(payloads, weights)
 
     def eval_model(self, ctx, state, x, y):
         return common.resnet_accuracy(self.sub_cfg, state, x, y)

@@ -121,6 +121,51 @@ class FedepthStrategy:
                 [r.payload[1] for r in results])
         return aggregation.fedavg([r.payload for r in results], ws)
 
+    def aggregate_async(self, ctx, state, results, stalenesses, *,
+                        alpha=0.5):
+        """PER-BLOCK staleness merge: a FeDepth payload is a full model,
+        but only the leaves inside the client's trained blocks carry
+        fresh gradient information — the rest is the stale broadcast copy
+        riding along.  Discount the two differently via soft masks:
+        trained leaves by ``s(tau_k)``, carried leaves by ``s(2 tau_k)``
+        (the raw copy is charged double — it IS the stale params, not an
+        update computed on them; under ``masked_aggregation`` carried
+        leaves are excluded outright, matching the sync path).  The lost
+        weight mass anchors on the current global params.  All-zero
+        staleness reduces every factor to 1 (or the binary mask) and the
+        anchor to 0 — i.e. exactly ``aggregate``, to float tolerance.
+
+        Falls back to the weight-discount default when results carry no
+        ``client_id`` / the context has no decompositions."""
+        from repro.fl.systime.staleness import (default_aggregate_async,
+                                                polynomial_discount)
+        if ctx.decomps is None or any(r.client_id is None for r in results):
+            return default_aggregate_async(self, ctx, state, results,
+                                           stalenesses, alpha=alpha)
+        locals_, masks, weights = [], [], []
+        anchor = 0.0
+        for r, tau in zip(results, stalenesses):
+            s = polynomial_discount(tau, alpha)
+            if self.masked_aggregation:
+                local, tm = r.payload
+                soft = jax.tree.map(lambda m, _s=s: m * _s, tm)
+            else:
+                local = r.payload
+                tm = aggregation.trained_mask_for(
+                    state, ctx.decomps[r.client_id], self.runner)
+                s2 = polynomial_discount(2 * tau, alpha)
+                soft = jax.tree.map(
+                    lambda m, _s=s, _s2=s2: m * _s + (1.0 - m) * _s2, tm)
+            locals_.append(local)
+            masks.append(soft)
+            weights.append(r.weight)
+            anchor += r.weight * (1.0 - s)
+        if anchor > 0.0:
+            locals_.append(state)
+            masks.append(jax.tree.map(jnp.ones_like, state))
+            weights.append(anchor)
+        return aggregation.aggregate_masked(state, locals_, weights, masks)
+
     def eval_model(self, ctx, state, x, y):
         return common.resnet_accuracy(ctx.model_cfg, state, x, y)
 

@@ -40,6 +40,10 @@ class HeteroFLStrategy:
             cache[ratio] = _wire_bytes(padded, mask)
         return cache[ratio]
 
+    def client_work(self, ctx, client_id):
+        """Systime pricing: a width slice, never the FeDepth blocks."""
+        return float(min(ctx.ratios[client_id], 1.0))
+
     def client_update(self, ctx, state, client_id, batches):
         r = min(ctx.ratios[client_id], 1.0)
         padded, mask = heterofl_local(
@@ -73,6 +77,26 @@ class HeteroFLStrategy:
                                   [r.payload[0] for r in results],
                                   [r.payload[1] for r in results],
                                   [r.weight for r in results])
+
+    def aggregate_async(self, ctx, state, results, stalenesses, *,
+                        alpha=0.5):
+        """Coverage-aware staleness discount: each client's nested-slice
+        weight is scaled by ``s(tau_k)`` inside the per-coordinate
+        average, and the lost mass joins as a full-coverage anchor on the
+        current global params — so coordinates covered only by stale
+        slices drift server-ward instead of snapping to stale values.
+        Zero staleness => anchor 0 => exactly ``aggregate``."""
+        from repro.fl.systime.staleness import polynomial_discount
+        disc = [polynomial_discount(t, alpha) for t in stalenesses]
+        padded = [r.payload[0] for r in results]
+        masks = [r.payload[1] for r in results]
+        weights = [r.weight * s for r, s in zip(results, disc)]
+        anchor = sum(r.weight * (1.0 - s) for r, s in zip(results, disc))
+        if anchor > 0.0:
+            padded.append(state)
+            masks.append(jax.tree.map(jnp.ones_like, state))
+            weights.append(anchor)
+        return heterofl_aggregate(state, padded, masks, weights)
 
     def eval_model(self, ctx, state, x, y):
         return common.resnet_accuracy(ctx.model_cfg, state, x, y)

@@ -25,6 +25,15 @@ class SplitMixStrategy:
         base_r = min(min(SCENARIOS[ctx.sim.scenario]), 1.0)
         return SplitMixState(ctx.model_cfg, base_r, ctx.key)
 
+    def client_work(self, ctx, client_id):
+        """Systime pricing, first-order: cap ~ r/base_r base nets of
+        width base_r cost ~ cap * base_r^2 = r * base_r in FLOPs, i.e. a
+        width-equivalent ratio of sqrt(r * base_r)."""
+        from repro.fl.engine import SCENARIOS
+        base_r = min(min(SCENARIOS[ctx.sim.scenario]), 1.0)
+        r = float(min(ctx.ratios[client_id], 1.0))
+        return (r * base_r) ** 0.5
+
     def client_update(self, ctx, state, client_id, batches):
         cap = state.capacity(min(ctx.ratios[client_id], 1.0))
         chosen = ctx.rng.choice(state.k, size=cap, replace=False)

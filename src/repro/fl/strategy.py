@@ -44,6 +44,9 @@ class ClientResult:
     weight: float                       # aggregation weight ~ |D_k|
     comm_bytes: Optional[int] = None    # upload size; None -> engine sizes
                                         # the payload itself
+    client_id: Optional[int] = None     # stamped by the systime engines so
+                                        # async aggregation can look up the
+                                        # sender's decomposition/ratio
 
 
 @dataclasses.dataclass
@@ -129,6 +132,32 @@ class BatchableFLStrategy(FLStrategy, Protocol):
         Must be equivalent to calling ``client_update`` per client (modulo
         float associativity), returning results in ``client_ids`` order —
         the equivalence is asserted by ``tests/test_vectorized.py``."""
+        ...
+
+
+@runtime_checkable
+class AsyncFLStrategy(FLStrategy, Protocol):
+    """Optional capability: staleness-aware asynchronous aggregation.
+
+    :class:`repro.fl.systime.AsyncEngine` buffers results as client-finish
+    events fire and, once the buffer fills, merges them with this hook —
+    each result carries its *staleness*, the number of server versions
+    applied since the snapshot it trained on (FedBuff's measure).
+    Strategies without the hook get
+    :func:`repro.fl.systime.staleness.default_aggregate_async`: weights
+    discounted by the polynomial rule, then the strategy's own synchronous
+    ``aggregate`` — overriding is an optimization for methods whose
+    payload structure supports something sharper (FeDepth merges
+    per-block, HeteroFL per-coordinate-coverage).
+    """
+
+    def aggregate_async(self, ctx: Context, state: Any,
+                        results: Sequence["ClientResult"],
+                        stalenesses: Sequence[int], *,
+                        alpha: float = 0.5) -> Any:
+        """Fold one buffered batch of (result, staleness) into the next
+        server state.  MUST equal ``aggregate`` when every staleness is 0
+        and every ``alpha`` discount is therefore 1."""
         ...
 
 

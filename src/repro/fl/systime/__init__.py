@@ -1,0 +1,19 @@
+"""System-time simulation: device profiles, an event-driven virtual
+clock, and asynchronous/staleness-aware FL.
+
+See ``docs/system_model.md`` for the device catalog, latency formulas,
+and the staleness rule.
+"""
+from repro.fl.systime.availability import (AlwaysAvailable,  # noqa: F401
+                                           AvailabilityModel,
+                                           DutyCycleAvailability,
+                                           WindowedAvailability)
+from repro.fl.systime.clock import Event, EventLoop  # noqa: F401
+from repro.fl.systime.engine import AsyncEngine  # noqa: F401
+from repro.fl.systime.profiles import (DEVICE_TIERS, ZERO_LATENCY,  # noqa: F401
+                                       DeviceProfile, Latency, SystemModel,
+                                       mixed_profiles, profiles_for_ratios,
+                                       uniform_profiles, zero_latency_system)
+from repro.fl.systime.staleness import (default_aggregate_async,  # noqa: F401
+                                        discount_results,
+                                        polynomial_discount)

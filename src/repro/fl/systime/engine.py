@@ -1,0 +1,298 @@
+"""`AsyncEngine` — system-time simulation over the strategy protocol.
+
+Two execution semantics over one virtual clock
+(:class:`repro.fl.systime.clock.EventLoop`):
+
+* ``mode="sync"`` — barrier rounds like :class:`repro.fl.engine
+  .RoundEngine`, but every client-round is priced by the
+  :class:`~repro.fl.systime.profiles.SystemModel` and the round advances
+  the clock by the slowest participant.  With ``deadline_s`` set, a
+  client whose download+compute+upload exceeds the deadline MISSES the
+  round (its update is discarded, its bytes never count) — the
+  deadline-based replacement for ``StragglerSampler``'s coin flip.  With
+  a zero-latency system and no deadline this path reproduces
+  ``RoundEngine`` exactly: same samplers, same scheduler, same rng
+  stream, same aggregation (asserted in tests/test_systime.py).
+
+* ``mode="async"`` — FedBuff-style buffered asynchrony: up to
+  ``concurrency`` clients train concurrently, each on a snapshot of the
+  server state; finish events pop in virtual-time order; once
+  ``buffer_size`` results accumulate the server merges them via the
+  strategy's ``aggregate_async`` (staleness-weighted; see
+  :mod:`repro.fl.systime.staleness`) and bumps its version.  ``round`` in
+  the history = server version; ``sim.rounds`` = number of server
+  updates.
+
+Every record carries ``sim_seconds`` (absolute virtual time); the engine
+also keeps a structured ``trace`` of (kind, time, client, version,
+staleness) tuples — byte-identical across runs with the same seed.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.fl.engine import RoundRecord, default_batch_fn, eval_state
+from repro.fl.sampling import (ClientScheduler, CohortSampler,
+                               UniformSampler, make_scheduler)
+from repro.fl.strategy import ClientResult, Context, FLStrategy, tree_bytes
+from repro.fl.systime.availability import AvailabilityModel
+from repro.fl.systime.clock import EventLoop
+from repro.fl.systime.profiles import SystemModel, zero_latency_system
+from repro.fl.systime.staleness import default_aggregate_async
+
+
+class AsyncEngine:
+    """Event-driven FL engine: a strict superset of ``RoundEngine``
+    (sync mode + zero latency degenerates to it)."""
+
+    def __init__(self, strategy: FLStrategy, ctx: Context, *,
+                 system: Optional[SystemModel] = None,
+                 sampler: Optional[CohortSampler] = None,
+                 scheduler: Union[ClientScheduler, str, None] = None,
+                 availability: Optional[AvailabilityModel] = None,
+                 mode: str = "async",
+                 concurrency: Optional[int] = None,
+                 buffer_size: Optional[int] = None,
+                 staleness_alpha: float = 0.5,
+                 deadline_s: Optional[float] = None):
+        if mode not in ("sync", "async"):
+            raise ValueError(f"mode must be 'sync' or 'async', got {mode!r}")
+        self.strategy = strategy
+        self.ctx = ctx
+        self.system = system or zero_latency_system(ctx.num_clients)
+        if len(self.system.profiles) != ctx.num_clients:
+            raise ValueError(
+                f"system has {len(self.system.profiles)} profiles for "
+                f"{ctx.num_clients} clients")
+        self.sampler = sampler or UniformSampler()
+        self.scheduler = make_scheduler(scheduler)
+        self.availability = availability
+        self.mode = mode
+        if mode == "async" and deadline_s is not None:
+            raise ValueError("deadline_s is a sync-mode knob (async has no "
+                             "barrier to miss); drop it or use mode='sync'")
+        if sampler is not None and (mode == "async"
+                                    or availability is not None):
+            raise ValueError(
+                "a cohort sampler only applies to mode='sync' without an "
+                "availability model (async dispatches one client at a time "
+                "from the available pool; availability replaces the "
+                "sampler's population)")
+        if mode == "sync" and (concurrency is not None
+                               or buffer_size is not None):
+            raise ValueError("concurrency/buffer_size only apply to "
+                             "mode='async'; sync rounds use the sampler's "
+                             "cohort size")
+        cohort = max(1, int(np.ceil(ctx.sim.participation
+                                    * ctx.num_clients)))
+        self.concurrency = concurrency or cohort
+        self.buffer_size = buffer_size or max(1, self.concurrency // 2)
+        self.staleness_alpha = float(staleness_alpha)
+        self.deadline_s = deadline_s
+        self.clock = EventLoop()
+        self.trace: List[tuple] = []
+
+    # ------------------------------------------------------------- helpers
+    def default_batch_fn(self) -> Callable[[int], list]:
+        """The SAME per-round local loader as ``RoundEngine`` (shared
+        module-level helper — part of the equivalence contract)."""
+        return default_batch_fn(self.ctx)
+
+    def _latency(self, client_id: int, result: ClientResult,
+                 n_batches: int, download_bytes: int):
+        up = result.comm_bytes if result.comm_bytes is not None \
+            else tree_bytes(result.payload)
+        # strategies that don't train the client's FeDepth decomposition
+        # (fedavg's x min r subnet, heterofl's width slice, ...) declare
+        # their actual compute via the optional client_work hook
+        client_work = getattr(self.strategy, "client_work", None)
+        work = client_work(self.ctx, client_id) if client_work else None
+        return self.system.latency(self.ctx, client_id, upload_bytes=up,
+                                   download_bytes=download_bytes,
+                                   n_batches=n_batches, work=work), up
+
+    def _eval(self, state, eval_fn):
+        return eval_state(self.strategy, self.ctx, state, eval_fn)
+
+    def _apply_async(self, state, buffered):
+        results = [r for r, _ in buffered]
+        stale = [s for _, s in buffered]
+        agg = getattr(self.strategy, "aggregate_async", None)
+        if agg is not None:
+            return agg(self.ctx, state, results, stale,
+                       alpha=self.staleness_alpha)
+        return default_aggregate_async(self.strategy, self.ctx, state,
+                                       results, stale,
+                                       alpha=self.staleness_alpha)
+
+    # ------------------------------------------------------------------ run
+    def run(self, *, initial_state=None,
+            batch_fn: Optional[Callable[[int], list]] = None,
+            eval_fn: Optional[Callable] = None,
+            eval_every: int = 5) -> Tuple[object, List[RoundRecord]]:
+        """History contract matches ``RoundEngine.run`` (one record per
+        eval checkpoint, never fewer), with ``sim_seconds`` stamped from
+        the virtual clock."""
+        ctx = self.ctx
+        setup = getattr(self.strategy, "setup", None)
+        if setup is not None:
+            setup(ctx)
+        state = initial_state if initial_state is not None \
+            else self.strategy.init_state(ctx)
+        batch_fn = batch_fn or self.default_batch_fn()
+        if self.mode == "sync":
+            return self._run_sync(state, batch_fn, eval_fn, eval_every)
+        return self._run_async(state, batch_fn, eval_fn, eval_every)
+
+    # ------------------------------------------------------------- sync mode
+    def _sample_cohort(self, round_idx: int) -> np.ndarray:
+        if self.availability is None:
+            return self.sampler.sample(self.ctx, round_idx)
+        avail = np.asarray(self.availability.available(self.ctx,
+                                                       self.clock.now))
+        k = max(1, int(np.ceil(self.ctx.sim.participation
+                               * self.ctx.num_clients)))
+        k = min(k, len(avail))
+        return self.ctx.rng.choice(avail, size=k, replace=False)
+
+    def _run_sync(self, state, batch_fn, eval_fn, eval_every):
+        ctx = self.ctx
+        history: List[RoundRecord] = []
+        t_last, bytes_acc = time.perf_counter(), 0
+        for rd in range(ctx.sim.rounds):
+            cohort = [int(k) for k in self._sample_cohort(rd)]
+            down = tree_bytes(state)
+            # count what the loader ACTUALLY produced per client (a
+            # custom batch_fn need not follow the |D_k|/B formula)
+            n_drawn: dict = {}
+
+            def counting_batch_fn(k, _fn=batch_fn, _n=n_drawn):
+                batches = _fn(k)
+                _n[k] = len(batches)
+                return batches
+            results = self.scheduler.run(ctx, self.strategy, state, cohort,
+                                         counting_batch_fn)
+            kept, totals = [], []
+            for k, res in zip(cohort, results):
+                res.client_id = k
+                lat, up = self._latency(k, res, n_drawn.get(k, 1), down)
+                if self.deadline_s is not None \
+                        and lat.total > self.deadline_s:
+                    # the miss is observed when the server gives up
+                    self.trace.append(("miss",
+                                       float(self.clock.now
+                                             + self.deadline_s), k, rd,
+                                       round(float(lat.total), 9)))
+                    continue
+                kept.append(res)
+                totals.append(lat.total)
+                bytes_acc += up
+                # stamp the client's virtual COMPLETION time, matching
+                # async-mode finish semantics
+                self.trace.append(("finish",
+                                   float(self.clock.now + lat.total), k,
+                                   rd, round(float(lat.total), 9)))
+            round_time = max(totals) if totals else 0.0
+            if self.deadline_s is not None and len(kept) < len(cohort):
+                round_time = self.deadline_s   # server waits out the deadline
+            self.clock.advance(round_time)
+            if kept:
+                state = self.strategy.aggregate(ctx, state, kept)
+            self.trace.append(("aggregate", float(self.clock.now), -1, rd,
+                               len(kept)))
+            if (rd + 1) % eval_every == 0 or rd == ctx.sim.rounds - 1:
+                acc = self._eval(state, eval_fn)
+                now = time.perf_counter()
+                history.append(RoundRecord(rd + 1, acc, now - t_last,
+                                           bytes_acc, self.clock.now))
+                t_last, bytes_acc = now, 0
+        return state, history
+
+    # ------------------------------------------------------------ async mode
+    def _free_clients(self, running, *, ignore_availability=False):
+        if self.availability is None or ignore_availability:
+            avail = np.arange(self.ctx.num_clients)
+        else:
+            avail = np.asarray(self.availability.available(self.ctx,
+                                                           self.clock.now))
+        return np.setdiff1d(avail, np.asarray(sorted(running), np.int64))
+
+    def _dispatch(self, state, version, running, batch_fn, *,
+                  force: bool = False) -> bool:
+        """Start one idle AVAILABLE client.  With nobody available the
+        dispatch is skipped (in-flight work will advance the clock and
+        availability with it) — unless ``force``, the deadlock escape the
+        run loop uses when NOTHING is in flight and time can no longer
+        advance on its own; forced dispatches are marked in the trace."""
+        free = self._free_clients(running)
+        forced = False
+        if free.size == 0:
+            if not force:
+                return False
+            free = self._free_clients(running, ignore_availability=True)
+            forced = True
+            if free.size == 0:
+                return False
+        k = int(self.ctx.rng.choice(free))
+        batches = batch_fn(k)
+        # the client trains on the CURRENT state — an eager snapshot; the
+        # result just doesn't merge until its finish event fires
+        res = self.strategy.client_update(self.ctx, state, k, batches)
+        res.client_id = k
+        lat, up = self._latency(k, res, len(batches), tree_bytes(state))
+        running.add(k)
+        self.clock.schedule(lat.total, "finish", client=k,
+                            payload=(res, version, up))
+        self.trace.append(("dispatch_forced" if forced else "dispatch",
+                           float(self.clock.now), k, version,
+                           round(float(lat.total), 9)))
+        return True
+
+    def _run_async(self, state, batch_fn, eval_fn, eval_every):
+        ctx = self.ctx
+        history: List[RoundRecord] = []
+        version = 0
+        running: set = set()
+        buffered: List[tuple] = []
+        t_last, bytes_acc = time.perf_counter(), 0
+        for _ in range(self.concurrency):
+            self._dispatch(state, version, running, batch_fn)
+        if not running:   # nobody reachable at t=0: force one start
+            self._dispatch(state, version, running, batch_fn, force=True)
+        while version < ctx.sim.rounds and len(self.clock):
+            ev = self.clock.pop()
+            res, v0, up = ev.payload
+            running.discard(ev.client)
+            staleness = version - v0
+            buffered.append((res, staleness))
+            bytes_acc += up
+            self.trace.append(("finish", float(self.clock.now), ev.client, version,
+                               staleness))
+            if len(buffered) >= self.buffer_size:
+                state = self._apply_async(state, buffered)
+                version += 1
+                self.trace.append(("aggregate", float(self.clock.now), -1, version,
+                                   len(buffered)))
+                buffered = []
+                if version % eval_every == 0 or version == ctx.sim.rounds:
+                    acc = self._eval(state, eval_fn)
+                    now = time.perf_counter()
+                    history.append(RoundRecord(version, acc, now - t_last,
+                                               bytes_acc, self.clock.now))
+                    t_last, bytes_acc = now, 0
+            if version < ctx.sim.rounds:
+                self._dispatch(state, version, running, batch_fn)
+                if not running and not len(self.clock):
+                    # nothing in flight and no pending events: the clock
+                    # can only advance through work — force a dispatch
+                    self._dispatch(state, version, running, batch_fn,
+                                   force=True)
+        if not history or history[-1].round != version:
+            acc = self._eval(state, eval_fn)
+            now = time.perf_counter()
+            history.append(RoundRecord(version, acc, now - t_last,
+                                       bytes_acc, self.clock.now))
+        return state, history

@@ -21,6 +21,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+# jax >= 0.7 exposes shard_map at the top level; the pinned 0.4.x line
+# only has the experimental module — resolve whichever exists.
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 from repro.configs.base import ModelConfig
 from repro.models import common
 
@@ -101,11 +108,14 @@ def forward_ep(p, cfg: ModelConfig, x, mesh, *,
     data_axes = tuple(a for a in mesh.axis_names if a != "model")
     xspec = P(data_axes if len(data_axes) > 1 else
               (data_axes[0] if data_axes else None), None, None)
-    out = jax.shard_map(
-        fn, mesh=mesh,
+    specs = dict(
+        mesh=mesh,
         in_specs=(xspec, P(), P("model", None, None),
                   P("model", None, None), P("model", None, None)),
-        out_specs=(xspec, P()),
-        check_vma=False,
-    )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+        out_specs=(xspec, P()))
+    try:   # replication checking: spelled check_vma since jax 0.7,
+        mapped = _shard_map(fn, check_vma=False, **specs)
+    except TypeError:   # check_rep on the 0.4.x experimental API
+        mapped = _shard_map(fn, check_rep=False, **specs)
+    out = mapped(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
     return out

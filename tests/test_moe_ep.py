@@ -41,6 +41,10 @@ def test_moe_ep_matches_dense_dispatch():
     out = subprocess.run([sys.executable, "-c", _SCRIPT],
                          capture_output=True, text=True, timeout=560,
                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"}, cwd="/root/repo")
+                              "HOME": "/root",
+                              # the 8-device mesh is a CPU host-platform
+                              # trick; never let a libtpu install hijack
+                              # the stripped subprocess env
+                              "JAX_PLATFORMS": "cpu"}, cwd="/root/repo")
     assert out.returncode == 0, out.stderr[-2000:]
     assert "EP_OK" in out.stdout

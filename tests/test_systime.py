@@ -1,0 +1,431 @@
+"""System-time subsystem: profiles/latency pricing, the event loop,
+staleness rules, sync-equivalence vs RoundEngine, deadline stragglers,
+determinism, and the deprecation satellite."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.configs.preresnet20 import reduced as rn_reduced
+from repro.core.memory_model import resnet_memory
+from repro.fl.data import build_federated
+from repro.fl.engine import (RoundEngine, RoundRecord, SimConfig,
+                             build_context, client_ratios)
+from repro.fl.registry import get_strategy
+from repro.fl.sampling import StragglerSampler
+from repro.fl.systime import (DEVICE_TIERS, ZERO_LATENCY, AsyncEngine,
+                              DeviceProfile, DutyCycleAvailability,
+                              EventLoop, SystemModel, WindowedAvailability,
+                              mixed_profiles, polynomial_discount,
+                              profiles_for_ratios, uniform_profiles,
+                              zero_latency_system)
+
+
+def _data(n=8, seed=0):
+    return build_federated(num_clients=n, alpha=1.0, n_train=40 * n,
+                           n_test=160, image_size=16, seed=seed)
+
+
+def _sim(**kw):
+    base = dict(rounds=4, participation=0.5, lr=0.05, local_steps=1,
+                batch_size=32, scenario="fair", seed=0)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+CFG = rn_reduced(num_classes=10, image_size=16)
+
+
+def _ctx(data=None, sim=None):
+    return build_context(data or _data(), sim or _sim(), model_cfg=CFG)
+
+
+# ------------------------------------------------------------------ clock
+def test_event_loop_orders_by_time_then_seq():
+    loop = EventLoop()
+    loop.schedule(2.0, "b")
+    loop.schedule(1.0, "a")
+    loop.schedule(1.0, "c")
+    kinds = [loop.pop().kind for _ in range(3)]
+    assert kinds == ["a", "c", "b"]          # time order, FIFO on ties
+    assert loop.now == 2.0
+    with pytest.raises(IndexError):
+        loop.pop()
+    with pytest.raises(ValueError):
+        loop.schedule(-1.0, "x")
+
+
+# ---------------------------------------------------------------- profiles
+def test_latency_monotone_across_tiers():
+    """A strictly faster device finishes the same work sooner."""
+    data, sim = _data(), _sim()
+    ctx = _ctx(data, sim)
+    totals = []
+    for tier in ("iot", "phone", "edge", "workstation"):
+        sysm = SystemModel(uniform_profiles(ctx.num_clients,
+                                            DEVICE_TIERS[tier]))
+        lat = sysm.latency(ctx, 0, upload_bytes=10**6,
+                           download_bytes=10**6, n_batches=2)
+        assert lat.compute > 0 and lat.upload > 0 and lat.download > 0
+        totals.append(lat.total)
+    assert totals == sorted(totals, reverse=True)
+
+
+def test_zero_latency_profile_prices_zero():
+    ctx = _ctx()
+    lat = zero_latency_system(ctx.num_clients).latency(
+        ctx, 0, upload_bytes=10**9, download_bytes=10**9, n_batches=8)
+    assert lat.total == 0.0
+
+
+def test_bigger_decomposition_costs_more_compute():
+    """A client training more blocks (bigger budget) pays more FLOP time
+    than one that skips a prefix — the systime view of Figure 3."""
+    ctx = _ctx()
+    poorest = int(np.argmin(ctx.budgets))
+    richest = int(np.argmax(ctx.budgets))
+    sysm = SystemModel(uniform_profiles(ctx.num_clients,
+                                        DEVICE_TIERS["phone"]))
+    kw = dict(upload_bytes=0, download_bytes=0, n_batches=2)
+    assert sysm.latency(ctx, richest, **kw).compute \
+        >= sysm.latency(ctx, poorest, **kw).compute
+
+
+def test_profiles_for_ratios_maps_poorest_to_slowest():
+    ratios = client_ratios(12, "fair", seed=0)
+    profs = profiles_for_ratios(ratios)
+    by_ratio = {float(r): p for r, p in zip(ratios, profs)}
+    assert by_ratio[min(by_ratio)].flops == min(p.flops for p in profs)
+    assert by_ratio[max(by_ratio)].flops == max(p.flops for p in profs)
+
+
+def test_mixed_profiles_deterministic_and_counted():
+    a = mixed_profiles(10, {"iot": 0.3, "workstation": 0.7}, seed=3)
+    b = mixed_profiles(10, {"iot": 0.3, "workstation": 0.7}, seed=3)
+    assert [p.name for p in a] == [p.name for p in b]
+    assert sum(p.name == "iot" for p in a) == 3
+
+
+def test_flop_counts_populated():
+    mem = resnet_memory(CFG, 32)
+    assert all(u.flops > 0 for u in mem.units)
+    assert mem.embed.flops > 0 and mem.head.flops > 0
+
+
+def test_strategy_client_work_steers_pricing():
+    """fedavg prices the x min r subnet (width work), NOT the client's
+    FeDepth decomposition, and comes out cheaper than fedepth's
+    depth-wise schedule for the same client."""
+    data, sim = _data(), _sim()
+    ctx = _ctx(data, sim)
+    sysm = SystemModel(uniform_profiles(ctx.num_clients,
+                                        DEVICE_TIERS["iot"]))
+    k = int(np.argmax(ctx.budgets))       # richest: biggest decomposition
+    fedavg = get_strategy("fedavg")
+    fedavg.setup(ctx)
+    kw = dict(upload_bytes=0, download_bytes=0, n_batches=2)
+    slice_lat = sysm.latency(ctx, k, work=fedavg.client_work(ctx, k), **kw)
+    depth_lat = sysm.latency(ctx, k, **kw)     # fallback: decomposition
+    assert slice_lat.compute < depth_lat.compute
+
+
+def test_mode_knob_validation():
+    ctx = _ctx()
+    with pytest.raises(ValueError, match="sync-mode knob"):
+        AsyncEngine(get_strategy("fedavg"), ctx, mode="async",
+                    deadline_s=5.0)
+    with pytest.raises(ValueError, match="mode='async'"):
+        AsyncEngine(get_strategy("fedavg"), ctx, mode="sync",
+                    buffer_size=3)
+    with pytest.raises(ValueError, match="mode must be"):
+        AsyncEngine(get_strategy("fedavg"), ctx, mode="semi")
+    from repro.fl.sampling import UniformSampler
+    with pytest.raises(ValueError, match="sampler"):
+        AsyncEngine(get_strategy("fedavg"), ctx, mode="async",
+                    sampler=UniformSampler())
+    with pytest.raises(ValueError, match="sampler"):
+        AsyncEngine(get_strategy("fedavg"), ctx, mode="sync",
+                    sampler=UniformSampler(),
+                    availability=DutyCycleAvailability(10.0, 0.5))
+
+
+def test_async_dispatch_respects_availability():
+    """With only client 0 ever available, async mode dispatches ONLY
+    client 0 (skipping dispatches instead of drafting unavailable
+    clients) yet still completes every server update."""
+    data, sim = _data(), _sim(rounds=3)
+    eng = AsyncEngine(get_strategy("fedavg"),
+                      build_context(data, sim, model_cfg=CFG),
+                      system=SystemModel(uniform_profiles(
+                          8, DEVICE_TIERS["workstation"])),
+                      availability=WindowedAvailability([(0.0, 1e9, [0])]),
+                      mode="async", concurrency=3, buffer_size=1)
+    _, hist = eng.run(eval_every=3)
+    assert hist[-1].round == 3
+    dispatched = {t[2] for t in eng.trace if t[0] == "dispatch"}
+    assert dispatched == {0}
+    assert not any(t[0] == "dispatch_forced" for t in eng.trace)
+
+
+def test_sync_prices_actual_batch_count():
+    """A custom loader's real batch count drives sync-mode latency: more
+    batches => more simulated time."""
+    def run_with(n_batches):
+        data, sim = _data(), _sim(rounds=1, participation=1.0)
+        ctx = build_context(data, sim, model_cfg=CFG)
+        eng = AsyncEngine(get_strategy("fedavg"), ctx,
+                          system=SystemModel(uniform_profiles(
+                              8, DEVICE_TIERS["iot"])), mode="sync")
+        rng = np.random.default_rng(0)
+        _, hist = eng.run(eval_every=1, batch_fn=lambda k: [
+            data.client_batch(k, 32, rng) for _ in range(n_batches)])
+        return hist[-1].sim_seconds
+    assert run_with(4) > run_with(1)
+
+
+# --------------------------------------------------------------- staleness
+def test_polynomial_discount_properties():
+    assert polynomial_discount(0, alpha=0.5) == 1.0
+    assert polynomial_discount(0, alpha=2.0) == 1.0
+    d = [polynomial_discount(t, alpha=0.5) for t in range(5)]
+    assert d == sorted(d, reverse=True)          # monotone decreasing
+    assert polynomial_discount(3, alpha=0.0) == 1.0   # alpha=0 disables
+    with pytest.raises(ValueError):
+        polynomial_discount(-1)
+    with pytest.raises(ValueError):
+        polynomial_discount(1, alpha=-0.5)
+
+
+@pytest.mark.parametrize("method", ["fedavg", "heterofl", "fedepth"])
+def test_aggregate_async_zero_staleness_matches_sync(method):
+    """The protocol contract: aggregate_async with all-zero staleness ==
+    aggregate, to float tolerance."""
+    data, sim = _data(), _sim()
+    ctx = _ctx(data, sim)
+    strat = get_strategy(method)
+    setup = getattr(strat, "setup", None)
+    if setup:
+        setup(ctx)
+    state = strat.init_state(ctx)
+    batches = [data.client_batch(k, 32, ctx.rng) for k in range(3)]
+    results = []
+    for k in range(3):
+        r = strat.client_update(ctx, state, k, [batches[k]])
+        r.client_id = k
+        results.append(r)
+    ref = strat.aggregate(ctx, state, results)
+    out = strat.aggregate_async(ctx, state, results, [0, 0, 0], alpha=0.5)
+    import jax
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(out)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_fedavg_staleness_anchors_toward_server():
+    """A fully-stale cohort moves the server LESS than a fresh one."""
+    import jax
+    data, sim = _data(), _sim()
+    ctx = _ctx(data, sim)
+    strat = get_strategy("fedavg")
+    strat.setup(ctx)
+    state = strat.init_state(ctx)
+    r = strat.client_update(ctx, state, 0, [data.client_batch(0, 32,
+                                                              ctx.rng)])
+    fresh = strat.aggregate_async(ctx, state, [r], [0], alpha=0.5)
+    stale = strat.aggregate_async(ctx, state, [r], [8], alpha=0.5)
+
+    def dist(a, b):
+        return sum(float(np.abs(np.asarray(x) - np.asarray(y)).sum())
+                   for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+    assert dist(stale, state) < dist(fresh, state)
+
+
+def test_fedepth_per_block_staleness_protects_untrained_prefix():
+    """For a stale partial-training client, coordinates OUTSIDE its
+    trained blocks (the carried stale copy) stay closer to the server
+    than under the uniform weight discount."""
+    import jax
+    data = _data()
+    sim = _sim(scenario="lack")          # lack => some clients skip prefix
+    ctx = build_context(data, sim, model_cfg=CFG)
+    skippers = [k for k, d in enumerate(ctx.decomps) if d.skipped_prefix]
+    assert skippers, "lack scenario should produce partial clients"
+    k = skippers[0]
+    strat = get_strategy("fedepth")
+    strat.setup(ctx)
+    state = strat.init_state(ctx)
+    # a synthetic stale payload: the client's copy of the world, shifted
+    stale_payload = jax.tree.map(lambda x: x + 1.0, state)
+    from repro.fl.strategy import ClientResult
+    res = ClientResult(stale_payload, 1.0, client_id=k)
+    out = strat.aggregate_async(ctx, state, [res], [4], alpha=0.5)
+    from repro.core import aggregation
+    tm = aggregation.trained_mask_for(state, ctx.decomps[k], strat.runner)
+    moved = jax.tree.map(lambda o, s: np.abs(np.asarray(o - s)).mean(),
+                         out, state)
+    trained_moved = [float(m.mean()) for m, t in
+                     zip(jax.tree.leaves(moved), jax.tree.leaves(tm))
+                     if float(np.asarray(t).max()) == 1.0]
+    frozen_moved = [float(m.mean()) for m, t in
+                    zip(jax.tree.leaves(moved), jax.tree.leaves(tm))
+                    if float(np.asarray(t).max()) == 0.0]
+    assert frozen_moved, "client should have fully-untrained leaves"
+    assert max(frozen_moved) < max(trained_moved)
+
+
+# ------------------------------------------------- sync equivalence (crit.)
+@pytest.mark.parametrize("method", ["fedavg", "fedepth"])
+def test_zero_latency_sync_reproduces_round_engine(method):
+    """Acceptance criterion: AsyncEngine (sync mode, zero-latency
+    uniform profile) reproduces RoundEngine accuracies."""
+    data, sim = _data(), _sim()
+    _, ref = RoundEngine(get_strategy(method),
+                         build_context(data, sim, model_cfg=CFG)
+                         ).run(eval_every=2)
+    eng = AsyncEngine(get_strategy(method),
+                      build_context(data, sim, model_cfg=CFG), mode="sync")
+    _, got = eng.run(eval_every=2)
+    assert [(r.round, r.comm_bytes) for r in ref] \
+        == [(g.round, g.comm_bytes) for g in got]
+    np.testing.assert_allclose([r.accuracy for r in ref],
+                               [g.accuracy for g in got], atol=1e-6)
+    assert all(g.sim_seconds == 0.0 for g in got)
+
+
+# ------------------------------------------------------------- determinism
+def test_async_trace_and_history_deterministic():
+    """Same seed => byte-identical event trace and history."""
+    def run_once():
+        data, sim = _data(), _sim(rounds=3)
+        profs = mixed_profiles(8, {"workstation": 0.75, "iot": 0.25},
+                               seed=0)
+        eng = AsyncEngine(get_strategy("fedavg"),
+                          build_context(data, sim, model_cfg=CFG),
+                          system=SystemModel(profs), mode="async",
+                          concurrency=4, buffer_size=2)
+        _, hist = eng.run(eval_every=2)
+        return eng.trace, hist
+    t1, h1 = run_once()
+    t2, h2 = run_once()
+    assert repr(t1) == repr(t2)
+    assert [(r.round, r.accuracy, r.comm_bytes, r.sim_seconds)
+            for r in h1] == [(r.round, r.accuracy, r.comm_bytes,
+                              r.sim_seconds) for r in h2]
+    assert all(isinstance(t[1], float) for t in t1)   # plain-float times
+
+
+def test_async_sim_time_advances_and_staleness_observed():
+    data, sim = _data(), _sim(rounds=6)
+    profs = mixed_profiles(8, {"workstation": 0.5, "iot": 0.5}, seed=1)
+    eng = AsyncEngine(get_strategy("fedavg"),
+                      build_context(data, sim, model_cfg=CFG),
+                      system=SystemModel(profs), mode="async",
+                      concurrency=4, buffer_size=1)
+    _, hist = eng.run(eval_every=2)
+    assert hist[-1].round == 6
+    sims = [r.sim_seconds for r in hist]
+    assert sims == sorted(sims)                   # clock is monotone
+    finishes = [t for t in eng.trace if t[0] == "finish"]
+    assert any(t[4] > 0 for t in finishes), "no staleness ever observed"
+
+
+# ------------------------------------------------- deadline stragglers
+def test_deadline_drops_slow_clients_not_coins():
+    """Under a deadline, exactly the over-deadline clients miss — a
+    behavioral contrast with StragglerSampler's seeded coin flip."""
+    data, sim = _data(), _sim(rounds=2, participation=1.0)
+    # uplink so slow that the upload ALONE blows any 1s deadline
+    slow = DeviceProfile("crawler", flops=float("inf"),
+                         mem_bw=float("inf"), link_up=1.0,
+                         link_down=float("inf"), mem_bytes=float("inf"))
+    profiles = [slow if k < 4 else ZERO_LATENCY for k in range(8)]
+    ctx = build_context(data, sim, model_cfg=CFG)
+    eng = AsyncEngine(get_strategy("fedavg"), ctx,
+                      system=SystemModel(profiles), mode="sync",
+                      deadline_s=1.0)
+    _, hist = eng.run(eval_every=1)
+    misses = [t for t in eng.trace if t[0] == "miss"]
+    finishes = [t for t in eng.trace if t[0] == "finish"]
+    assert misses, "iot clients should miss a 1s deadline"
+    assert all(t[2] < 4 for t in misses)          # only the slow half
+    assert all(t[2] >= 4 for t in finishes)
+    # server waits out the deadline when someone misses
+    assert hist[-1].sim_seconds == pytest.approx(2.0)
+
+    # coin-flip comparison: StragglerSampler drops BEFORE running, with
+    # no regard to device speed
+    ctx2 = build_context(data, sim, model_cfg=CFG)
+    cohort = StragglerSampler(drop_prob=0.5).sample(ctx2, 0)
+    assert set(cohort) <= set(range(8))
+
+
+def test_deadline_never_stalls_even_if_all_miss():
+    data, sim = _data(), _sim(rounds=2)
+    ctx = build_context(data, sim, model_cfg=CFG)
+    eng = AsyncEngine(get_strategy("fedavg"), ctx,
+                      system=SystemModel(uniform_profiles(
+                          8, DEVICE_TIERS["iot"])),
+                      mode="sync", deadline_s=1e-9)
+    state, hist = eng.run(eval_every=1)
+    assert len(hist) == 2                          # history contract holds
+    assert all(t[0] != "finish" for t in eng.trace
+               if t[0] in ("finish",))
+
+
+# ---------------------------------------------------------- availability
+def test_windowed_availability_by_sim_time():
+    av = WindowedAvailability([(0.0, 10.0, [0, 1]), (10.0, 20.0, [2, 3])])
+
+    class Ctx:
+        num_clients = 6
+    assert list(av.available(Ctx, 5.0)) == [0, 1]
+    assert list(av.available(Ctx, 15.0)) == [2, 3]
+    assert list(av.available(Ctx, 25.0)) == [0, 1]   # cycles
+
+
+def test_duty_cycle_availability_deterministic():
+    av = DutyCycleAvailability(100.0, 0.5, seed=7)
+
+    class Ctx:
+        num_clients = 20
+    a = av.available(Ctx, 30.0)
+    b = DutyCycleAvailability(100.0, 0.5, seed=7).available(Ctx, 30.0)
+    assert list(a) == list(b)
+    assert 0 < len(a) <= 20
+
+
+def test_async_with_availability_runs():
+    data, sim = _data(), _sim(rounds=3)
+    eng = AsyncEngine(get_strategy("fedavg"),
+                      build_context(data, sim, model_cfg=CFG),
+                      system=SystemModel(uniform_profiles(
+                          8, DEVICE_TIERS["workstation"])),
+                      availability=DutyCycleAvailability(10.0, 0.5, seed=0),
+                      mode="async", concurrency=2, buffer_size=1)
+    _, hist = eng.run(eval_every=3)
+    assert hist[-1].round == 3
+
+
+# ----------------------------------------------------------- history shape
+def test_round_record_back_compat_and_sim_seconds_default():
+    rec = RoundRecord(3, 0.5, 1.0, 10)
+    assert rec[0] == 3 and rec[1] == 0.5
+    assert rec.sim_seconds == 0.0
+
+
+def test_client_ratios_seeded_shuffle_keeps_multiset():
+    a = client_ratios(100, "fair", seed=0)
+    b = client_ratios(100, "fair", seed=1)
+    assert sorted(a) == sorted(b)                  # same multiset
+    assert not np.array_equal(a, b)                # different assignment
+    assert np.array_equal(a, client_ratios(100, "fair", seed=0))
+
+
+# ------------------------------------------------------------- deprecation
+def test_run_experiment_warns_deprecation():
+    from repro.fl.simulate import run_experiment
+    data = _data(4)
+    sim = SimConfig(rounds=1, participation=0.5, lr=0.05, local_steps=1,
+                    batch_size=32, scenario="fair", seed=0)
+    with pytest.warns(DeprecationWarning, match="RoundEngine"):
+        run_experiment("fedavg", data, sim, model_cfg=CFG, eval_every=1)
