@@ -9,9 +9,9 @@ import sys
 import traceback
 
 from benchmarks import (async_sim, fig5_partial_training, fig7_vit_finetune,
-                        kernel_microbench, roofline_report, round_engine,
-                        table1_memory, table2_budget_scenarios,
-                        table3_unbalanced)
+                        kernel_microbench, prefix_cache, roofline_report,
+                        round_engine, table1_memory,
+                        table2_budget_scenarios, table3_unbalanced)
 
 BENCHES = {
     "table1_memory": table1_memory.main,
@@ -23,6 +23,7 @@ BENCHES = {
     "roofline_report": roofline_report.main,
     "round_engine": round_engine.main,
     "async_sim": async_sim.main,
+    "prefix_cache": prefix_cache.main,
 }
 
 

@@ -18,6 +18,19 @@ from typing import List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+# NOTE on buffer donation (core/jit_utils.py): the aggregation jits are
+# deliberately NOT donated.  Client payloads are not private buffers:
+# partial-training FeDepth clients pass the untouched prefix through
+# ``merge`` BY REFERENCE (the same Array objects as the server state the
+# round was broadcast from), async FedBuff merges retain payloads whose
+# leaves alias an OLDER state across aggregation calls, and the async
+# anchor paths put the live state itself into the client-tree tuple.
+# Donating any of those invalidates a buffer someone still holds
+# (gpu/tpu raises "Array has been deleted").  The hot-path donation win
+# lives where buffers are private BY CONSTRUCTION: the per-step
+# (train, vel) carries and the broadcast stacked params of the group
+# updates (see core/blockwise.py and docs/prefix_cache.md).
+
 
 @jax.jit
 def _fedavg_jit(trees, w):
@@ -52,6 +65,7 @@ def fedavg_delta(global_params, client_params: Sequence,
 
 @jax.jit
 def _masked_jit(global_params, trees, masks, w):
+    # not donated — see the module NOTE on buffer donation
     n = len(trees)                      # static at trace time
 
     def combine(g, *pairs):

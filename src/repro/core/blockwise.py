@@ -4,7 +4,11 @@ For a client with decomposition {(lo_1,hi_1), ...}: solve J subproblems in
 order.  Subproblem j trains ONLY units [lo_j, hi_j) plus the head φ; the
 prefix is FROZEN and its output activation z_{lo_j - 1} is BUFFERED (the
 paper's frozen-then-pass forward), so each subproblem's live memory is one
-block, not the network.
+block, not the network.  :class:`PrefixCache` (default on) makes the
+buffering literal at runtime: z_{lo_j-1} is computed once per distinct
+batch per subproblem, reused across every SGD step, and advanced
+incrementally through the just-trained units between subproblems — see
+docs/prefix_cache.md.
 
 Two head strategies (paper §Methodology):
   * ``head="skip"``  — skip connection from the block output straight into
@@ -19,12 +23,14 @@ adapters for LM / ResNet / ViT.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.decomposition import Decomposition
+from repro.core.jit_utils import donate, donation_supported
 from repro.models import common, resnet as resnet_mod, vit as vit_mod
 
 
@@ -42,6 +48,15 @@ class BlockRunner:
     # embed keys train with block 0 only
     split: Callable[[Any, int, int], Any]  # -> trainable subtree
     merge: Callable[[Any, Any], Any]
+    # True when the params feeding ``embed`` and the prefix
+    # ``apply_units(·, 0, lo)`` never change while LATER subproblems
+    # train, so a buffered z_{lo-1} can be advanced incrementally through
+    # the just-trained units and stay exactly equal to a from-scratch
+    # prefix forward.  False for families whose head-trained keys leak
+    # into the prefix forward (tied embeddings, whisper's enc_norm,
+    # hybrid's shared attention) — there :class:`PrefixCache` re-buffers
+    # once per subproblem instead (still once, never once per step).
+    prefix_stable: bool = True
 
 
 # ---- LM adapter -----------------------------------------------------------
@@ -110,8 +125,14 @@ def lm_runner(lm, head: str = "skip", kernel_force=None) -> BlockRunner:
                 out[k] = v
         return out
 
+    # tied embeddings train the embed table through the head path every
+    # subproblem, and the hybrid family's shared attention params (trained
+    # with φ) sit inside apply_range — both leak head updates into the
+    # prefix forward, so buffered activations must be re-buffered per
+    # subproblem rather than advanced incrementally
+    stable = not cfg.tie_embeddings and cfg.family != "hybrid"
     return BlockRunner(lm.num_depth_units, embed, apply_units, head_loss,
-                       split, merge)
+                       split, merge, prefix_stable=stable)
 
 
 def _whisper_runner(lm, kernel_force):
@@ -133,15 +154,15 @@ def _whisper_runner(lm, kernel_force):
         return {"enc": x_enc, "dec": x_dec}
 
     def apply_units(params, z, lo, hi):
+        # ``_enc_range`` is the single encoder path: ``embed`` already
+        # added pos_enc, so ``whisper.encode`` (which re-adds it) must
+        # never run here — asserted against the reference encoder in
+        # tests/test_adapters.py
         enc, dec = z["enc"], z["dec"]
         e_lo, e_hi = min(lo, E), min(hi, E)
         d_lo, d_hi = max(lo - E, 0), max(hi - E, 0)
         if e_hi > e_lo:
-            enc = whisper.encode(params, cfg, enc, lo=e_lo, hi=e_hi,
-                                 kernel_force=kernel_force) \
-                if e_lo == 0 and False else _enc_range(params, cfg, enc,
-                                                       e_lo, e_hi,
-                                                       kernel_force)
+            enc = _enc_range(params, cfg, enc, e_lo, e_hi, kernel_force)
         if d_hi > d_lo:
             dec = whisper.apply_decoder_range(params, cfg, dec, enc, d_lo,
                                               d_hi, kernel_force=kernel_force)
@@ -209,8 +230,11 @@ def _whisper_runner(lm, kernel_force):
                 out[k] = v
         return out
 
+    # the tied embed table and enc_norm (applied at the encoder's end
+    # inside apply_units) train with the head, so the prefix forward
+    # drifts between subproblems — re-buffer instead of advancing
     return BlockRunner(E + cfg.num_layers, embed, apply_units, head_loss,
-                       split, merge)
+                       split, merge, prefix_stable=False)
 
 
 # ---- ResNet adapter -------------------------------------------------------
@@ -246,13 +270,16 @@ def resnet_runner(cfg, head: str = "skip") -> BlockRunner:
         return train
 
     def merge(params, train, lo: int = None, hi: int = None):
+        # same contract as the LM/ViT adapters' ``.at[lo:hi].set``: a
+        # functional splice of exactly [lo, hi) into the full stack (the
+        # block list stays a list — stages have different widths, so the
+        # stack cannot be one array), head/embed keys passed through.
+        # Asserted by the adapter-contract test (tests/test_adapters.py).
         out = dict(params)
-        blocks = list(params["blocks"])
-        for i, b in enumerate(train["blocks"]):
-            blocks[lo + i] = b
-        out["blocks"] = blocks
-        for k in ("head_norm", "classifier", "stem", "aux_heads"):
-            if k in train:
+        out["blocks"] = (list(params["blocks"][:lo]) + list(train["blocks"])
+                         + list(params["blocks"][hi:]))
+        for k in train:
+            if k != "blocks":
                 out[k] = train[k]
         return out
 
@@ -317,14 +344,23 @@ def block_loss_fn(runner: BlockRunner, params_full, train_params, z_in,
     return runner.head_loss(merged, z, batch, hi - 1)
 
 
+def _prox_term(train, anchor, prox_mu: float):
+    sq = sum(jnp.sum((a - b) ** 2) for a, b in zip(
+        jax.tree.leaves(train), jax.tree.leaves(anchor)))
+    return 0.5 * prox_mu * sq
+
+
 def make_block_step(runner: BlockRunner, lo: int, hi: int, j: int, *,
                     lr: float, momentum: float, prox_mu: float = 0.0):
-    """One jitted SGD-momentum step on subproblem j.  The frozen-then-pass
-    prefix forward (z_{lo-1}) happens inside the jit under stop_gradient,
-    so XLA never allocates backward state for the prefix — the compiled
-    memory profile matches the paper's claim."""
+    """One jitted SGD-momentum step on subproblem j, recompute variant:
+    the frozen-then-pass prefix forward (z_{lo-1}) happens inside the jit
+    under stop_gradient every step, so XLA never allocates backward state
+    for the prefix — but the prefix forward itself is re-billed per step
+    (the pre-:class:`PrefixCache` execution contract, kept as the
+    reference path behind ``prefix_cache=False``).  The (train, vel)
+    carry is donated so the step updates it in place on gpu/tpu."""
 
-    @jax.jit
+    @functools.partial(jax.jit, donate_argnums=donate(1, 2))
     def step(params, train, vel, anchor, batch):
         def loss(tp):
             z_in = runner.embed(params, batch)
@@ -332,9 +368,7 @@ def make_block_step(runner: BlockRunner, lo: int, hi: int, j: int, *,
                 z_in = runner.apply_units(params, z_in, 0, lo)
             l = block_loss_fn(runner, params, tp, z_in, batch, lo, hi, j)
             if prox_mu > 0:
-                sq = sum(jnp.sum((a - b) ** 2) for a, b in zip(
-                    jax.tree.leaves(tp), jax.tree.leaves(anchor)))
-                l = l + 0.5 * prox_mu * sq
+                l = l + _prox_term(tp, anchor, prox_mu)
             return l
 
         g = jax.grad(loss)(train)
@@ -345,10 +379,132 @@ def make_block_step(runner: BlockRunner, lo: int, hi: int, j: int, *,
     return step
 
 
+def make_buffered_block_step(runner: BlockRunner, lo: int, hi: int, j: int,
+                             *, lr: float, momentum: float,
+                             prox_mu: float = 0.0):
+    """The :class:`PrefixCache` hot-path step: identical update rule to
+    :func:`make_block_step`, but the prefix activation ``z_in`` arrives
+    as an argument (buffered once per distinct batch per subproblem) —
+    each step runs ONE block-local forward + backward, nothing else.
+    ``z_in`` is reused across steps and therefore never donated; the
+    (train, vel) carry is."""
+
+    @functools.partial(jax.jit, donate_argnums=donate(1, 2))
+    def step(params, train, vel, anchor, z_in, batch):
+        def loss(tp):
+            l = block_loss_fn(runner, params, tp, z_in, batch, lo, hi, j)
+            if prox_mu > 0:
+                l = l + _prox_term(tp, anchor, prox_mu)
+            return l
+
+        g = jax.grad(loss)(train)
+        vel = jax.tree.map(lambda v, gi: momentum * v + gi, vel, g)
+        train = jax.tree.map(lambda t, v: t - lr * v, train, vel)
+        return train, vel
+
+    return step
+
+
+def make_prefix_forward(runner: BlockRunner, lo: int):
+    """Jitted from-scratch prefix forward: z_{lo-1} = units[0, lo) over
+    the embed output, under stop_gradient (pure buffering, no backward
+    state)."""
+
+    @jax.jit
+    def fwd(params, batch):
+        z = runner.embed(params, batch)
+        if lo > 0:
+            z = runner.apply_units(params, z, 0, lo)
+        return jax.lax.stop_gradient(z)
+
+    return fwd
+
+
+def make_prefix_advance(runner: BlockRunner, lo: int, hi: int):
+    """Jitted incremental advance: push a buffered z_{lo-1} through units
+    [lo, hi) — the just-trained block (plus any never-trained gap) — to
+    obtain z_{hi-1} without replaying the whole prefix."""
+
+    @jax.jit
+    def adv(params, z):
+        return jax.lax.stop_gradient(runner.apply_units(params, z, lo, hi))
+
+    return adv
+
+
+class PrefixCache:
+    """Buffered z_{lo-1} activations for one client's depth-wise update —
+    the paper's prefix-once execution contract, made explicit.
+
+    Per subproblem [lo, hi), :meth:`prepare` buffers the frozen-prefix
+    output z_{lo-1} ONCE per distinct batch; every SGD step then reuses
+    its buffer, so the per-step cost is one block-local forward+backward
+    instead of a prefix replay.  Between subproblems the buffers are
+    *advanced* through the just-trained units (``apply_units(z, lo_j,
+    lo_{j+1})``) when the runner's prefix params are stable
+    (``BlockRunner.prefix_stable``); otherwise (tied embeddings, whisper,
+    hybrid) they are re-buffered from scratch — still once per
+    subproblem, never once per step.  Total prefix forward cost per
+    client: O(depth) per distinct batch, vs O(Σ_j lo_j · steps) on the
+    recompute path.
+
+    The held bytes (:meth:`buffered_bytes`) are the same quantity
+    ``core.memory_model.ModelMemory.buffered_z_bytes`` prices and the
+    systime latency model assumes — one accounting, asserted in
+    tests/test_prefix_cache.py.
+    """
+
+    def __init__(self, runner: BlockRunner, jit_cache: Optional[dict] = None):
+        self.runner = runner
+        self._jits = jit_cache if jit_cache is not None else {}
+        self.zs: Optional[list] = None   # one buffer per distinct batch
+        self._lo: Optional[int] = None   # prefix depth of the buffers
+
+    def _jit(self, key, build):
+        if key not in self._jits:
+            self._jits[key] = build()
+        return self._jits[key]
+
+    def reset(self) -> None:
+        """Drop the buffers (compiled prefix/advance fns are kept).
+        ``client_update`` resets a caller-supplied cache on entry so a
+        reused instance can never serve one client's activations to the
+        next."""
+        self.zs = None
+        self._lo = None
+
+    def prepare(self, params, batches, lo: int) -> list:
+        """Buffer (or advance) z_{lo-1} for every distinct batch and
+        return the buffer list, aligned with ``batches``.  The advance
+        only runs FORWARD (lo > the buffered depth, the just-trained
+        range); any other transition re-buffers from scratch."""
+        if (self.zs is None or not self.runner.prefix_stable
+                or lo < self._lo):
+            fwd = self._jit(("prefix", lo),
+                            lambda: make_prefix_forward(self.runner, lo))
+            self.zs = [fwd(params, b) for b in batches]
+        elif lo != self._lo:
+            adv = self._jit(("advance", self._lo, lo),
+                            lambda: make_prefix_advance(self.runner,
+                                                        self._lo, lo))
+            self.zs = [adv(params, z) for z in self.zs]
+        self._lo = lo
+        return self.zs
+
+    def buffered_bytes(self) -> int:
+        """Bytes currently held by the buffers (0 when nothing is
+        buffered) — must equal the memory model's accounting."""
+        if self.zs is None:
+            return 0
+        return sum(int(leaf.nbytes) for z in self.zs
+                   for leaf in jax.tree.leaves(z))
+
+
 def client_update(runner: BlockRunner, params, dec: Decomposition, batches,
                   *, lr: float = 0.1, momentum: float = 0.9,
                   local_steps: int = 1, prox_mu: float = 0.0,
-                  step_cache: Optional[dict] = None):
+                  step_cache: Optional[dict] = None,
+                  prefix_cache: Union[bool, PrefixCache] = True):
     """Sequential depth-wise local update.  ``batches``: list of data
     batches cycled within each subproblem.  Returns updated full params.
 
@@ -357,23 +513,53 @@ def client_update(runner: BlockRunner, params, dec: Decomposition, batches,
     FedProx proximal term ||w - w_global||^2 showing optimizer-agnosticism.
     Pass a shared ``step_cache`` dict across clients/rounds to reuse
     compiled block steps.
+
+    ``prefix_cache`` selects the execution contract: ``True`` (default)
+    buffers z_{lo-1} once per distinct batch per subproblem via
+    :class:`PrefixCache` and advances it incrementally between
+    subproblems — the paper's prefix-once claim; ``False`` re-runs the
+    prefix inside every SGD step (the reference recompute path).  Pass a
+    :class:`PrefixCache` instance to inspect the buffers afterwards.
+    Both paths produce the same params up to float reassociation.
     """
     step_cache = step_cache if step_cache is not None else {}
+    cache: Optional[PrefixCache] = None
+    if isinstance(prefix_cache, PrefixCache):
+        cache = prefix_cache
+        cache.reset()      # never serve a previous client's activations
+    elif prefix_cache:
+        cache = PrefixCache(runner, jit_cache=step_cache)
 
     for j, (lo, hi) in enumerate(dec.blocks):
+        zs = cache.prepare(params, batches, lo) if cache is not None \
+            else None
         train = runner.split(params, lo, hi)
+        # the FedProx anchor aliases the split views (cheap, never
+        # donated); the (train, vel) carry gets private buffers when the
+        # backend honors donation, so the step can update it in place
+        # without invalidating ``params``' leaves
         anchor = jax.tree.map(jnp.asarray, train)
+        if donation_supported():
+            train = jax.tree.map(jnp.copy, train)
         vel = jax.tree.map(jnp.zeros_like, train)
 
-        key = (lo, hi, j, lr, momentum, prox_mu)
+        key = ("buffered" if cache is not None else "recompute",
+               lo, hi, j, lr, momentum, prox_mu)
         if key not in step_cache:
-            step_cache[key] = make_block_step(
+            make = make_buffered_block_step if cache is not None \
+                else make_block_step
+            step_cache[key] = make(
                 runner, lo, hi, j, lr=lr, momentum=momentum, prox_mu=prox_mu)
         step = step_cache[key]
 
         for _ in range(local_steps):
-            for batch in batches:
-                train, vel = step(params, train, vel, anchor, batch)
+            if cache is not None:
+                for z_in, batch in zip(zs, batches):
+                    train, vel = step(params, train, vel, anchor, z_in,
+                                      batch)
+            else:
+                for batch in batches:
+                    train, vel = step(params, train, vel, anchor, batch)
         params = runner.merge(params, train, lo=lo, hi=hi)
 
     return params
@@ -419,9 +605,10 @@ def stackable(batches_per_client) -> bool:
 def stack_batches(batches_per_client):
     """Stack per-client batch lists into a ``(clients, batches, ...)``
     pytree: client order is preserved on axis 0, the per-round batch list
-    on axis 1 (the local-epoch repetition is unrolled INSIDE the compiled
-    update via ``step % n_batches`` indexing, so repeated epochs slice the
-    same data and XLA CSE can buffer the frozen-prefix forward)."""
+    on axis 1 (the local-epoch repetition happens INSIDE the compiled
+    update via ``step % n_batches`` indexing, so each distinct batch —
+    and its buffered z_{lo-1} prefix activation — is stored once, not
+    once per epoch)."""
     per_client = [jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
                   for batches in batches_per_client]
     return jax.tree.map(lambda *xs: jnp.stack(xs), *per_client)
@@ -439,9 +626,11 @@ def run_local_steps(step, carry, batches, local_steps: int):
     """Run ``local_steps`` epochs of ``step(carry, batch) -> carry`` over
     a stacked batch axis, inside a trace.  Short step counts fully unroll
     with static ``s % n_batches`` slices — epoch repeats become the SAME
-    subgraph, so XLA CSE dedupes anything that only depends on the batch
-    (e.g. the frozen-prefix forward, the paper's buffered z_{lo-1}); long
-    ones use a partially-unrolled scan to bound compile size."""
+    subgraph, so XLA CSE dedupes anything that only depends on the batch;
+    long ones use a partially-unrolled scan over a ``step % n_batches``
+    index vector (a dynamic gather per step — no materialized
+    ``local_steps`` concatenation of the data or of any buffered
+    activations riding along in ``batches``) to bound compile size."""
     n_batches = jax.tree.leaves(batches)[0].shape[0]
     n_steps = local_steps * n_batches
     if n_steps <= MAX_UNROLL_STEPS:
@@ -449,16 +638,19 @@ def run_local_steps(step, carry, batches, local_steps: int):
             batch = jax.tree.map(lambda x, i=s % n_batches: x[i], batches)
             carry = step(carry, batch)
         return carry
-    steps = jax.tree.map(lambda x: jnp.concatenate([x] * local_steps),
-                         batches)
-    carry, _ = jax.lax.scan(lambda c, b: (step(c, b), None), carry, steps,
-                            unroll=SCAN_UNROLL)
+    idx = jnp.arange(n_steps, dtype=jnp.int32) % n_batches
+
+    def body(c, i):
+        b = jax.tree.map(lambda x: x[i], batches)
+        return step(c, b), None
+
+    carry, _ = jax.lax.scan(body, carry, idx, unroll=SCAN_UNROLL)
     return carry
 
 
 def make_group_update(runner: BlockRunner, blocks, *, lr: float,
                       momentum: float, local_steps: int = 1,
-                      prox_mu: float = 0.0):
+                      prox_mu: float = 0.0, prefix_cache: bool = True):
     """Jitted group update: ``jax.vmap`` over the client axis of an
     entire depth-wise local update (all blocks, all SGD steps).  One
     dispatch covers the whole group's round — vs. clients x blocks x
@@ -468,18 +660,31 @@ def make_group_update(runner: BlockRunner, blocks, *, lr: float,
     the FedProx anchor reset per block, like :func:`client_update`, and
     steps visit ``local_steps`` repetitions of the batch axis in the same
     order as the sequential ``for local_steps: for batch`` loop.
+
+    With ``prefix_cache`` (default), the buffered z_{lo-1} lives in the
+    stacked trace: per subproblem it is computed once per distinct batch
+    (vmapped over the batch axis) and threaded through
+    :func:`run_local_steps` alongside the data, so each SGD step — and
+    in particular every iteration of the long-step-count *scan*, where
+    XLA CSE cannot hoist loop-invariant prefix work — runs only the
+    block-local forward+backward.  Between subproblems the buffers
+    advance through the just-trained units (see :class:`PrefixCache` for
+    the ``prefix_stable`` contract).  The stacked params argument is
+    donated, so the broadcast input buffer is reused for the outputs
+    rather than copied each dispatch.
     """
 
-    def sgd_step(params, train, vel, anchor, batch, lo, hi, j):
+    def sgd_step(params, train, vel, anchor, z_in, batch, lo, hi, j):
         def loss(tp):
-            z_in = runner.embed(params, batch)
-            if lo > 0:
-                z_in = runner.apply_units(params, z_in, 0, lo)
-            l = block_loss_fn(runner, params, tp, z_in, batch, lo, hi, j)
+            if z_in is None:
+                z = runner.embed(params, batch)
+                if lo > 0:
+                    z = runner.apply_units(params, z, 0, lo)
+            else:
+                z = z_in
+            l = block_loss_fn(runner, params, tp, z, batch, lo, hi, j)
             if prox_mu > 0:
-                sq = sum(jnp.sum((a - b) ** 2) for a, b in zip(
-                    jax.tree.leaves(tp), jax.tree.leaves(anchor)))
-                l = l + 0.5 * prox_mu * sq
+                l = l + _prox_term(tp, anchor, prox_mu)
             return l
 
         g = jax.grad(loss)(train)
@@ -488,25 +693,41 @@ def make_group_update(runner: BlockRunner, blocks, *, lr: float,
         return train, vel
 
     def one_client(params, batches):
+        zs, prev_lo = None, None
         for j, (lo, hi) in enumerate(blocks):
+            if prefix_cache:
+                if zs is None or not runner.prefix_stable:
+                    fwd = make_prefix_forward(runner, lo)
+                    zs = jax.vmap(fwd, in_axes=(None, 0))(params, batches)
+                elif lo != prev_lo:
+                    adv = make_prefix_advance(runner, prev_lo, lo)
+                    zs = jax.vmap(adv, in_axes=(None, 0))(params, zs)
+                prev_lo = lo
             train = runner.split(params, lo, hi)
             anchor = train
             vel = jax.tree.map(jnp.zeros_like, train)
-            train, vel = run_local_steps(
-                lambda c, b, lo=lo, hi=hi, j=j, a=anchor: sgd_step(
-                    params, c[0], c[1], a, b, lo, hi, j),
-                (train, vel), batches, local_steps)
+            if prefix_cache:
+                train, vel = run_local_steps(
+                    lambda c, x, lo=lo, hi=hi, j=j, a=anchor: sgd_step(
+                        params, c[0], c[1], a, x[0], x[1], lo, hi, j),
+                    (train, vel), (zs, batches), local_steps)
+            else:
+                train, vel = run_local_steps(
+                    lambda c, b, lo=lo, hi=hi, j=j, a=anchor: sgd_step(
+                        params, c[0], c[1], a, None, b, lo, hi, j),
+                    (train, vel), batches, local_steps)
             params = runner.merge(params, train, lo=lo, hi=hi)
         return params
 
-    return jax.jit(jax.vmap(one_client))
+    return jax.jit(jax.vmap(one_client), donate_argnums=donate(0))
 
 
 def client_update_batched(runner: BlockRunner, params, dec: Decomposition,
                           batches_per_client, *, lr: float = 0.1,
                           momentum: float = 0.9, local_steps: int = 1,
                           prox_mu: float = 0.0,
-                          step_cache: Optional[dict] = None):
+                          step_cache: Optional[dict] = None,
+                          prefix_cache: bool = True):
     """Depth-wise local updates for a GROUP of clients sharing one
     decomposition, as a single stacked computation.
 
@@ -516,14 +737,19 @@ def client_update_batched(runner: BlockRunner, params, dec: Decomposition,
     Returns a list of per-client updated full param trees, in the order of
     ``batches_per_client``.  Pass a shared ``step_cache`` so one compiled
     group update serves every round (jit re-specializes per group size).
+    ``prefix_cache`` selects the same execution contract as in
+    :func:`client_update`; the donated stacked-params input is always a
+    fresh broadcast buffer, never the caller's tree.
     """
     step_cache = step_cache if step_cache is not None else {}
-    key = (dec.blocks, lr, momentum, local_steps, prox_mu)
+    key = (dec.blocks, lr, momentum, local_steps, prox_mu,
+           bool(prefix_cache))
     if key not in step_cache:
         step_cache[key] = make_group_update(runner, dec.blocks, lr=lr,
                                             momentum=momentum,
                                             local_steps=local_steps,
-                                            prox_mu=prox_mu)
+                                            prox_mu=prox_mu,
+                                            prefix_cache=bool(prefix_cache))
     group = len(batches_per_client)
     out = step_cache[key](broadcast_tree(params, group),
                           stack_batches(batches_per_client))

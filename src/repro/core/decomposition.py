@@ -38,12 +38,21 @@ class Decomposition:
 
 def decompose(mem: ModelMemory, budget_bytes: int, *,
               optimizer_slots: int = 2,
-              allow_partial: bool = True) -> Decomposition:
-    """Memory-adaptive greedy decomposition."""
+              allow_partial: bool = True,
+              n_batches: int = 1) -> Decomposition:
+    """Memory-adaptive greedy decomposition.
+
+    ``n_batches`` sizes the buffered z_{lo-1} held per block: the
+    paper's accounting (and the protocol default) buffers ONE batch;
+    pass the client's distinct-local-batch count to size blocks for the
+    prefix cache holding every batch's buffer simultaneously
+    (``ModelMemory.block_train_bytes(n_batches=...)`` — see
+    docs/prefix_cache.md)."""
     n = len(mem.units)
 
     def block_cost(lo: int, hi: int) -> int:
-        return mem.block_train_bytes(lo, hi, optimizer_slots=optimizer_slots)
+        return mem.block_train_bytes(lo, hi, optimizer_slots=optimizer_slots,
+                                     n_batches=n_batches)
 
     # Partial training: skip leading units whose finest block doesn't fit.
     skipped = 0

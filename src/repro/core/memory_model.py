@@ -48,17 +48,43 @@ class ModelMemory:
     batch: int = 1                 # batch size the activation bytes were
                                    # priced at (latency models rescale)
 
+    def buffered_z_bytes(self, lo: int, *, n_batches: int = 1,
+                         batch_size: Optional[int] = None) -> int:
+        """Bytes of the buffered prefix activation z_{lo-1} held while a
+        block starting at ``lo`` trains: the producing unit's ``output``
+        (the embed/stem output for ``lo == 0``), one buffer per distinct
+        local batch (``core.blockwise.PrefixCache`` keeps all of them so
+        every SGD step reuses its batch's buffer), rescaled from the
+        pricing batch to ``batch_size`` when given.
+
+        This is THE buffered-z accounting: the runtime cache's
+        ``buffered_bytes()``, the budget check (via
+        :meth:`block_train_bytes`), and the systime latency model all
+        price this same quantity — asserted in tests/test_prefix_cache.py.
+        """
+        out = self.embed.output if lo == 0 else self.units[lo - 1].output
+        if batch_size is not None:
+            out = out * batch_size // max(1, self.batch)
+        return int(out) * max(0, n_batches)   # 0 buffers -> 0 bytes
+
     def block_train_bytes(self, lo: int, hi: int, *,
                           optimizer_slots: int = 2,
-                          include_embed: bool = None) -> int:
-        """Memory to train contiguous units [lo, hi) + the head."""
+                          include_embed: bool = None,
+                          n_batches: int = 1) -> int:
+        """Memory to train contiguous units [lo, hi) + the head.
+
+        ``n_batches`` counts the distinct local batches whose z_{lo-1}
+        the prefix cache buffers simultaneously: each unit's
+        ``activations`` already includes its input activation — which
+        doubles as ONE buffered z_{lo-1} — so only the additional
+        ``n_batches - 1`` buffers are added (``n_batches=1``, the paper's
+        single-batch accounting, is unchanged)."""
         include_embed = (lo == 0) if include_embed is None else include_embed
-        # NOTE: each unit's ``activations`` already includes its input
-        # activation, which doubles as the buffered z_{lo-1} for lo > 0.
         b = sum(u.train_bytes(optimizer_slots) for u in self.units[lo:hi])
         b += self.head.train_bytes(optimizer_slots)
         if include_embed:
             b += self.embed.train_bytes(optimizer_slots)
+        b += self.buffered_z_bytes(lo, n_batches=n_batches - 1)
         return b
 
     def full_train_bytes(self, optimizer_slots: int = 2) -> int:

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.preresnet20 import ResNetConfig, scaled
+from repro.core.jit_utils import donate
 from repro.core.memory_model import resnet_memory
 from repro.fl import width as width_util
 from repro.models import resnet
@@ -100,7 +101,9 @@ def fedavg_group_update(cfg: ResNetConfig, lr: float, momentum: float,
                                     local_steps)
         return params
 
-    return jax.jit(jax.vmap(one_client))
+    # the stacked params input is always a fresh broadcast buffer
+    # (fedavg_local_batched), so it is donated to the per-client outputs
+    return jax.jit(jax.vmap(one_client), donate_argnums=donate(0))
 
 
 def fedavg_local_batched(cfg: ResNetConfig, params, batches_per_client, *,
@@ -131,6 +134,8 @@ def heterofl_local(cfg_full: ResNetConfig, global_params, ratio: float,
 
 @jax.jit
 def _heterofl_agg_jit(global_params, padded, masks, w):
+    # not donated: the async anchor path puts the live state itself into
+    # ``padded`` — see the buffer-donation NOTE in core/aggregation.py
     n = len(padded)                     # static at trace time
 
     def combine(g, *rest):

@@ -145,6 +145,27 @@ def eval_state(strategy: FLStrategy, ctx: Context, state,
     return None
 
 
+def _resolve_prefix_cache(spec) -> bool:
+    """"on"/"off" (or a plain bool) -> the Context's boolean flag."""
+    if isinstance(spec, bool):
+        return spec
+    if spec not in ("on", "off"):
+        raise ValueError(f"prefix_cache must be 'on' or 'off', got {spec!r}")
+    return spec == "on"
+
+
+def apply_prefix_cache(ctx: Context, spec) -> Context:
+    """Resolve a ``prefix_cache`` knob onto a context.  Returns ``ctx``
+    unchanged when the contract already matches, else a SHALLOW COPY
+    with the flag flipped — a caller-shared context is never mutated, so
+    two engines over one context keep their own execution contracts
+    (rng / caches / data stay shared by reference)."""
+    resolved = _resolve_prefix_cache(spec)
+    if resolved == ctx.prefix_cache:
+        return ctx
+    return dataclasses.replace(ctx, prefix_cache=resolved)
+
+
 class RoundEngine:
     """Runs communication rounds of ONE strategy over a client
     population.  Generic over the strategy, the cohort sampler, and the
@@ -152,15 +173,25 @@ class RoundEngine:
 
     def __init__(self, strategy: FLStrategy, ctx: Context, *,
                  sampler: Optional[CohortSampler] = None,
-                 scheduler: Union[ClientScheduler, str, None] = None):
+                 scheduler: Union[ClientScheduler, str, None] = None,
+                 prefix_cache: str = "on"):
         """``scheduler`` is an instance or a name from
         ``repro.fl.sampling.SCHEDULERS`` ("sequential" — the default — or
         "vectorized").  The vectorized scheduler stacks clients that share
         an execution signature into single vmap dispatches; its per-group
         compiled updates live in ``ctx.caches`` so they are shared across
-        rounds (see README "Choosing a scheduler")."""
+        rounds (see README "Choosing a scheduler").
+
+        ``prefix_cache`` ("on", the default, or "off") selects the
+        depth-wise execution contract for strategies that run
+        ``core.blockwise`` updates: "on" buffers the frozen-prefix
+        activation z_{lo-1} once per distinct batch per subproblem and
+        advances it incrementally — the paper's prefix-once claim; "off"
+        replays the prefix inside every SGD step.  Both produce the same
+        aggregated params up to float tolerance (asserted in
+        tests/test_prefix_cache.py; see docs/prefix_cache.md)."""
         self.strategy = strategy
-        self.ctx = ctx
+        self.ctx = apply_prefix_cache(ctx, prefix_cache)
         self.sampler = sampler or UniformSampler()
         self.scheduler = make_scheduler(scheduler)
 

@@ -68,7 +68,8 @@ class FedepthStrategy:
                 self.runner, state, ctx.decomps[client_id], batches,
                 lr=ctx.sim.lr, momentum=ctx.sim.momentum,
                 local_steps=ctx.sim.local_steps, prox_mu=self.prox_mu,
-                step_cache=ctx.caches.setdefault("fedepth_step", {}))
+                step_cache=ctx.caches.setdefault("fedepth_step", {}),
+                prefix_cache=ctx.prefix_cache)
         result = ClientResult(local, float(ctx.sizes[client_id]))
         if self.masked_aggregation:
             mask = aggregation.trained_mask_for(
@@ -101,7 +102,8 @@ class FedepthStrategy:
             self.runner, state, dec, batches_per_client, lr=ctx.sim.lr,
             momentum=ctx.sim.momentum, local_steps=ctx.sim.local_steps,
             prox_mu=self.prox_mu,
-            step_cache=ctx.caches.setdefault("fedepth_group_step", {}))
+            step_cache=ctx.caches.setdefault("fedepth_group_step", {}),
+            prefix_cache=ctx.prefix_cache)
         mask = aggregation.trained_mask_for(state, dec, self.runner) \
             if self.masked_aggregation else None
         results = []
@@ -142,6 +144,7 @@ class FedepthStrategy:
         if ctx.decomps is None or any(r.client_id is None for r in results):
             return default_aggregate_async(self, ctx, state, results,
                                            stalenesses, alpha=alpha)
+        mask_cache = ctx.caches.setdefault("fedepth_async_masks", {})
         locals_, masks, weights = [], [], []
         anchor = 0.0
         for r, tau in zip(results, stalenesses):
@@ -151,8 +154,12 @@ class FedepthStrategy:
                 soft = jax.tree.map(lambda m, _s=s: m * _s, tm)
             else:
                 local = r.payload
-                tm = aggregation.trained_mask_for(
-                    state, ctx.decomps[r.client_id], self.runner)
+                dec = ctx.decomps[r.client_id]
+                key = (dec.blocks, dec.skipped_prefix)
+                if key not in mask_cache:   # mask depends only on dec
+                    mask_cache[key] = aggregation.trained_mask_for(
+                        state, dec, self.runner)
+                tm = mask_cache[key]
                 s2 = polynomial_discount(2 * tau, alpha)
                 soft = jax.tree.map(
                     lambda m, _s=s, _s2=s2: m * _s + (1.0 - m) * _s2, tm)
@@ -161,6 +168,8 @@ class FedepthStrategy:
             weights.append(r.weight)
             anchor += r.weight * (1.0 - s)
         if anchor > 0.0:
+            # the live state rides in the client-tree tuple — one reason
+            # aggregation inputs are never donated (core/aggregation.py)
             locals_.append(state)
             masks.append(jax.tree.map(jnp.ones_like, state))
             weights.append(anchor)

@@ -93,6 +93,8 @@ class HeteroFLStrategy:
         weights = [r.weight * s for r, s in zip(results, disc)]
         anchor = sum(r.weight * (1.0 - s) for r, s in zip(results, disc))
         if anchor > 0.0:
+            # the live state rides in the padded tuple — one reason
+            # aggregation inputs are never donated (core/aggregation.py)
             padded.append(state)
             masks.append(jax.tree.map(jnp.ones_like, state))
             weights.append(anchor)

@@ -73,6 +73,21 @@ class Context:
                                              # (M > 1 -> MKD client)
     data: Any = None                         # FederatedData (None = generic)
     caches: Dict = dataclasses.field(default_factory=dict)
+    # depth-wise execution contract: buffer the frozen-prefix activation
+    # z_{lo-1} once per distinct batch per subproblem (True, the default
+    # — the paper's prefix-once claim) or replay the prefix inside every
+    # SGD step (False, the reference recompute path).  Set via
+    # ``RoundEngine(prefix_cache=...)``; the systime latency model prices
+    # whichever contract is active (docs/prefix_cache.md).
+    prefix_cache: bool = True
+    # whether the active runner's prefix params are stable across
+    # subproblems (``BlockRunner.prefix_stable``): stable runners advance
+    # the buffer incrementally, unstable ones re-buffer per subproblem —
+    # the systime model prices each accordingly.  ``AsyncEngine`` passes
+    # the strategy runner's flag to ``SystemModel.latency`` directly;
+    # this field is the fallback for direct ``latency`` callers (True
+    # matches ResNet/ViT/untied-LM runners).
+    prefix_stable: bool = True
 
 
 @runtime_checkable

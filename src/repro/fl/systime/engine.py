@@ -34,7 +34,8 @@ from typing import Callable, List, Optional, Tuple, Union
 
 import numpy as np
 
-from repro.fl.engine import RoundRecord, default_batch_fn, eval_state
+from repro.fl.engine import (RoundRecord, apply_prefix_cache,
+                             default_batch_fn, eval_state)
 from repro.fl.sampling import (ClientScheduler, CohortSampler,
                                UniformSampler, make_scheduler)
 from repro.fl.strategy import ClientResult, Context, FLStrategy, tree_bytes
@@ -57,11 +58,16 @@ class AsyncEngine:
                  concurrency: Optional[int] = None,
                  buffer_size: Optional[int] = None,
                  staleness_alpha: float = 0.5,
-                 deadline_s: Optional[float] = None):
+                 deadline_s: Optional[float] = None,
+                 prefix_cache: str = "on"):
         if mode not in ("sync", "async"):
             raise ValueError(f"mode must be 'sync' or 'async', got {mode!r}")
         self.strategy = strategy
-        self.ctx = ctx
+        # same knob + default as RoundEngine: with both engines on the
+        # default contract, the zero-latency sync run reproduces the
+        # round engine exactly, cache and all (a differing knob gets a
+        # shallow context copy, never a mutation of a shared context)
+        self.ctx = apply_prefix_cache(ctx, prefix_cache)
         self.system = system or zero_latency_system(ctx.num_clients)
         if len(self.system.profiles) != ctx.num_clients:
             raise ValueError(
@@ -110,9 +116,15 @@ class AsyncEngine:
         # their actual compute via the optional client_work hook
         client_work = getattr(self.strategy, "client_work", None)
         work = client_work(self.ctx, client_id) if client_work else None
+        # depth-wise strategies carry a runner whose prefix_stable flag
+        # selects the buffered-prefix pricing schedule (read here, not
+        # stamped onto the possibly-shared context)
+        runner = getattr(self.strategy, "runner", None)
+        stable = getattr(runner, "prefix_stable", None)
         return self.system.latency(self.ctx, client_id, upload_bytes=up,
                                    download_bytes=download_bytes,
-                                   n_batches=n_batches, work=work), up
+                                   n_batches=n_batches, work=work,
+                                   prefix_stable=stable), up
 
     def _eval(self, state, eval_fn):
         return eval_state(self.strategy, self.ctx, state, eval_fn)

@@ -10,10 +10,12 @@ upload seconds for exactly the FeDepth blocks the client trains.
 
 Compute time is a roofline max: ``max(FLOPs / flops, traffic / mem_bw)``
 — tiny devices are usually FLOP-bound, wide ones bandwidth-bound.  The
-depth-wise schedule is priced like ``core.blockwise`` executes it: per
-block, one frozen-prefix forward per distinct batch (the buffered
-``z_{lo-1}``) plus forward+backward (3x forward FLOPs) on the block and
-the head for every (step, batch).
+depth-wise schedule is priced like ``core.blockwise`` executes it
+(``ctx.prefix_cache`` selects the contract): with the prefix cache on —
+the default — ONE buffered incremental prefix forward per distinct
+batch for the whole schedule plus forward+backward (3x forward FLOPs)
+on each block and the head for every (step, batch); with it off, the
+prefix replays inside every step (see ``docs/prefix_cache.md``).
 """
 from __future__ import annotations
 
@@ -145,13 +147,30 @@ class SystemModel:
     # ------------------------------------------------------------- pricing
     @staticmethod
     def _fedepth_work(mem: ModelMemory, dec: Decomposition, *,
-                      batch_size: int, n_batches: int, local_steps: int):
+                      batch_size: int, n_batches: int, local_steps: int,
+                      prefix_cache: bool = True,
+                      prefix_stable: bool = True):
         """(FLOPs, traffic bytes) of one depth-wise local update.
 
-        Per block [lo, hi): the frozen prefix (embed + units[:lo]) runs
-        forward ONCE per distinct batch (``core.blockwise`` buffers
-        z_{lo-1} across local steps); the block + head run
-        forward+backward (3x forward) for every (step, batch).
+        Pricing mirrors the ``core.blockwise`` execution contracts:
+
+        * ``prefix_cache=True, prefix_stable=True`` (the runtime default
+          for ResNet/ViT/untied LMs) — the buffered incremental
+          schedule: the frozen prefix runs forward once per distinct
+          batch up to the FIRST block's lo, and between subproblems the
+          buffer advances through the just-trained units, so the TOTAL
+          prefix bill is one forward through units[0, lo_last) per
+          distinct batch, independent of step count and block count.
+        * ``prefix_cache=True, prefix_stable=False`` (tied embeddings /
+          whisper / hybrid, ``BlockRunner.prefix_stable``) — the cache
+          re-buffers from scratch at each subproblem: one prefix forward
+          per block per distinct batch, still step-count-independent.
+        * ``prefix_cache=False`` — the recompute contract: the prefix
+          (embed + units[:lo]) replays inside EVERY SGD step of every
+          block, the O(depth^2 * steps) bill the cache removes.
+
+        In all three, the block + head run forward+backward (3x forward)
+        for every (step, batch).
         """
         # activation bytes in `mem` are priced at mem.batch samples;
         # rescale them to the batch the client actually trains with
@@ -163,8 +182,11 @@ class SystemModel:
         traffic = 0.0
         for lo, hi in dec.blocks:
             block_fwd = sum(fwd[lo:hi]) + mem.head.flops
-            flops += prefix[lo] * n_batches \
-                + 3 * block_fwd * n_batches * local_steps
+            flops += 3 * block_fwd * n_batches * local_steps
+            if not prefix_cache:
+                flops += prefix[lo] * n_batches * local_steps
+            elif not prefix_stable:
+                flops += prefix[lo] * n_batches   # re-buffer per block
             # per optimizer step the device streams the block's params,
             # grads + momentum (2 more param-sized passes) and its live
             # activations once forward + once backward
@@ -173,6 +195,11 @@ class SystemModel:
             par = sum(u.params for u in units) * 4       # p, g, m, update
             act = sum(u.activations for u in units) * 3 * act_scale
             traffic += (par + act) * n_batches * local_steps
+        if prefix_cache and prefix_stable and dec.blocks:
+            # buffered incremental prefix: initial buffer to lo_0 plus
+            # per-subproblem advances — telescopes to ONE forward
+            # through units[0, lo_last) per distinct batch
+            flops += prefix[dec.blocks[-1][0]] * n_batches
         return flops * batch_size, traffic
 
     @staticmethod
@@ -193,7 +220,7 @@ class SystemModel:
 
     def latency(self, ctx, client_id: int, *, upload_bytes: int,
                 download_bytes: int, n_batches: int,
-                work=None) -> Latency:
+                work=None, prefix_stable: Optional[bool] = None) -> Latency:
         """Price one client-round for ``client_id``.
 
         ``work`` selects the compute workload: a ``Decomposition`` prices
@@ -203,6 +230,11 @@ class SystemModel:
         can steer this via the optional ``client_work(ctx, client_id)``
         hook (see ``AsyncEngine._latency``) — e.g. fedavg trains the
         x min r subnet regardless of the client's own budget.
+
+        ``prefix_stable`` describes the active runner's buffered-prefix
+        schedule (``BlockRunner.prefix_stable``: incremental advance vs
+        re-buffer per subproblem); ``AsyncEngine`` passes the strategy's
+        runner flag, direct callers fall back to ``ctx.prefix_stable``.
         """
         prof = self.profiles[client_id]
         sim = ctx.sim
@@ -214,9 +246,13 @@ class SystemModel:
         if ctx.mem is None or work is None:
             flops, traffic = 0.0, 0.0
         elif isinstance(work, Decomposition):
+            if prefix_stable is None:
+                prefix_stable = ctx.prefix_stable
             flops, traffic = self._fedepth_work(
                 ctx.mem, work, batch_size=sim.batch_size,
-                n_batches=n_batches, local_steps=sim.local_steps)
+                n_batches=n_batches, local_steps=sim.local_steps,
+                prefix_cache=ctx.prefix_cache,
+                prefix_stable=prefix_stable)
         else:
             flops, traffic = self._full_model_work(
                 ctx.mem, float(work), batch_size=sim.batch_size,

@@ -1,0 +1,188 @@
+"""BlockRunner adapter contract, over all four families.
+
+The prefix cache leans on three adapter invariants that used to be
+implicit: ``apply_units`` composes over contiguous ranges (incremental
+advance = from-scratch prefix), ``merge`` splices EXACTLY [lo, hi) plus
+the trained head/embed keys back into the full tree without mutating
+its input, and ``merge(params, split(params))`` is the identity.  One
+parametrized test asserts all of it for the ResNet / ViT / LM / Whisper
+adapters, so every runner presents the same contract to
+``core.blockwise.PrefixCache``.
+
+Also here: the regression test for the deleted dead branch in
+``_whisper_runner.apply_units`` (``whisper.encode(...) if e_lo == 0 and
+False else ...``): ``_enc_range`` is now the single encoder path, and
+composing it over the full encoder must reproduce the reference
+``whisper.encode`` — including the final encoder norm at the boundary.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.configs.preresnet20 import reduced as rn_reduced
+from repro.configs.vit_t16 import reduced as vit_reduced
+from repro.core import blockwise
+from repro.models import build, resnet, vit
+
+
+def _resnet_setup(key):
+    cfg = rn_reduced(num_classes=4, image_size=16)
+    params = resnet.init(key, cfg)
+    batch = {"images": jax.random.normal(jax.random.fold_in(key, 1),
+                                         (4, 16, 16, 3)),
+             "labels": jax.random.randint(jax.random.fold_in(key, 2),
+                                          (4,), 0, 4)}
+    return blockwise.resnet_runner(cfg), params, batch
+
+
+def _vit_setup(key):
+    cfg = vit_reduced(num_classes=4)
+    params = vit.init(key, cfg)
+    batch = {"images": jax.random.normal(jax.random.fold_in(key, 1),
+                                         (4, 16, 16, 3)),
+             "labels": jax.random.randint(jax.random.fold_in(key, 2),
+                                          (4,), 0, 4)}
+    return blockwise.vit_runner(cfg), params, batch
+
+
+def _lm_setup(key):
+    cfg = get_reduced_config("yi-6b")
+    lm = build(cfg)
+    params = lm.init(key)
+    toks = jax.random.randint(key, (2, 12), 0, cfg.vocab_size)
+    return (blockwise.lm_runner(lm, kernel_force="ref"), params,
+            {"tokens": toks, "labels": toks})
+
+
+def _whisper_setup(key):
+    cfg = get_reduced_config("whisper-small")
+    lm = build(cfg)
+    params = lm.init(key)
+    batch = {"encoder_embeds": jax.random.normal(key, (2, 16, cfg.d_model)),
+             "tokens": jax.random.randint(key, (2, 8), 0, cfg.vocab_size),
+             "labels": jax.random.randint(key, (2, 8), 0, cfg.vocab_size)}
+    return blockwise.lm_runner(lm, kernel_force="ref"), params, batch
+
+
+SETUPS = {"resnet": _resnet_setup, "vit": _vit_setup, "lm": _lm_setup,
+          "whisper": _whisper_setup}
+
+
+def _leaves32(tree):
+    return [jnp.asarray(x, jnp.float32) for x in jax.tree.leaves(tree)]
+
+
+def _assert_trees_equal(a, b, msg, atol=0.0):
+    la, lb = _leaves32(a), _leaves32(b)
+    assert len(la) == len(lb), msg
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   atol=atol, rtol=0, err_msg=msg)
+
+
+@pytest.mark.parametrize("family", sorted(SETUPS))
+def test_apply_units_composes_over_ranges(family):
+    """apply_units(0, n) == apply_units(k, n) ∘ apply_units(0, k) — the
+    invariant the prefix cache's incremental advance rests on."""
+    runner, params, batch = SETUPS[family](jax.random.PRNGKey(0))
+    n = runner.n_units
+    k = n // 2
+    z0 = runner.embed(params, batch)
+    full = runner.apply_units(params, z0, 0, n)
+    split_z = runner.apply_units(params, runner.apply_units(params, z0, 0, k),
+                                 k, n)
+    _assert_trees_equal(full, split_z, f"{family}: range composition",
+                        atol=1e-5)
+
+
+@pytest.mark.parametrize("family", sorted(SETUPS))
+def test_split_merge_round_trip(family):
+    runner, params, _ = SETUPS[family](jax.random.PRNGKey(1))
+    n = runner.n_units
+    for lo, hi in ((0, 1), (n // 2, n), (0, n)):
+        train = runner.split(params, lo, hi)
+        merged = runner.merge(params, train, lo=lo, hi=hi)
+        _assert_trees_equal(params, merged,
+                            f"{family}: merge(split) != identity "
+                            f"for [{lo}, {hi})")
+
+
+@pytest.mark.parametrize("family", sorted(SETUPS))
+def test_merge_replaces_exactly_lo_hi(family):
+    """Perturbing the trained subtree must change units [lo, hi) (and
+    trained head/embed keys) and NOTHING else; the input params tree is
+    never mutated."""
+    runner, params, batch = SETUPS[family](jax.random.PRNGKey(2))
+    n = runner.n_units
+    lo, hi = (1, max(2, n // 2)) if n > 1 else (0, 1)
+    before = jax.tree.map(lambda x: np.array(x), params)
+    train = runner.split(params, lo, hi)
+    bumped = jax.tree.map(lambda x: x + 1.0, train)
+    merged = runner.merge(params, bumped, lo=lo, hi=hi)
+    # the input tree is untouched
+    _assert_trees_equal(params, before, f"{family}: merge mutated input")
+    # the PREFIX UNITS [0, lo) are untouched by the merge (run from a
+    # shared z0 so head-key effects on ``embed`` don't blur the check)
+    z0 = runner.embed(params, batch)
+    if lo > 0:
+        _assert_trees_equal(
+            runner.apply_units(params, z0, 0, lo),
+            runner.apply_units(merged, z0, 0, lo),
+            f"{family}: merge leaked into the [0, {lo}) prefix units",
+            atol=1e-6)
+    if runner.prefix_stable:
+        # stable runners additionally promise the EMBED path never sees
+        # head-trained keys — the full prefix forward is invariant, which
+        # is what licenses PrefixCache's incremental advance
+        _assert_trees_equal(
+            runner.embed(params, batch), runner.embed(merged, batch),
+            f"{family}: prefix_stable runner's embed saw trained keys")
+    # the trained range really changed
+    z_old = runner.apply_units(params, z0, lo, hi)
+    z_new = runner.apply_units(merged, z0, lo, hi)
+    diff = max(float(jnp.abs(a - b).max())
+               for a, b in zip(_leaves32(z_old), _leaves32(z_new)))
+    assert diff > 0, f"{family}: merge dropped the trained block"
+
+
+def test_resnet_merge_preserves_block_list_structure():
+    """The unified splice keeps ``blocks`` a plain list of per-block
+    dicts (stages have different widths — no single stacked array)."""
+    runner, params, _ = _resnet_setup(jax.random.PRNGKey(3))
+    train = runner.split(params, 1, 2)
+    merged = runner.merge(params, train, lo=1, hi=2)
+    assert isinstance(merged["blocks"], list)
+    assert len(merged["blocks"]) == len(params["blocks"])
+    # untouched entries are the SAME objects (splice, not rebuild)
+    assert merged["blocks"][0] is params["blocks"][0]
+
+
+def test_whisper_enc_range_matches_reference_encoder():
+    """Regression for the deleted dead branch: embed + apply_units over
+    the full encoder range must equal ``whisper.encode`` on the raw
+    frame embeddings (pos added once, final norm applied at hi == E)."""
+    from repro.models import whisper
+    cfg = get_reduced_config("whisper-small")
+    lm = build(cfg)
+    key = jax.random.PRNGKey(4)
+    params = lm.init(key)
+    batch = {"encoder_embeds": jax.random.normal(key, (2, 16, cfg.d_model)),
+             "tokens": jax.random.randint(key, (2, 8), 0, cfg.vocab_size),
+             "labels": jax.random.randint(key, (2, 8), 0, cfg.vocab_size)}
+    runner = blockwise.lm_runner(lm, kernel_force="ref")
+    E = cfg.encoder_layers
+    z = runner.apply_units(params, runner.embed(params, batch), 0, E)
+    ref = whisper.encode(params, cfg, batch["encoder_embeds"],
+                         kernel_force="ref")
+    np.testing.assert_allclose(
+        np.asarray(z["enc"], np.float32), np.asarray(ref, np.float32),
+        atol=1e-5, rtol=1e-5)
+    # and split ranges compose to the same thing (the single _enc_range
+    # path handles interior slices without the final norm)
+    z_half = runner.apply_units(params, runner.embed(params, batch), 0, E // 2)
+    z_rest = runner.apply_units(params, z_half, E // 2, E)
+    np.testing.assert_allclose(
+        np.asarray(z_rest["enc"], np.float32), np.asarray(ref, np.float32),
+        atol=1e-5, rtol=1e-5)
