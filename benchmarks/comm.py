@@ -1,0 +1,234 @@
+"""Communication frontier: accuracy vs uplink bytes, and simulated
+time-to-target under bandwidth-starved devices.
+
+Two questions the wire subsystem (``repro.fl.comm``, docs/comm.md) must
+answer with numbers:
+
+* **Frontier** — for fedepth on the image protocol, what does each
+  uplink codec pay in final accuracy per byte saved?  One
+  ``RoundEngine`` run per codec (``none`` / ``fp16`` / ``qsgd_int8`` /
+  ``topk@0.1`` with and without error feedback), same seed and round
+  count; we report final accuracy (mean of the last two evals, since
+  single-checkpoint accuracy is noisy at this scale), total encoded
+  uplink bytes, and the compression ratio against ``none``.
+
+* **Time-to-target** — on a bandwidth-starved iot/phone fleet (uplink
+  0.125-1.25 MB/s), how much simulated time does a compressed uplink
+  save to a fixed accuracy?  ``AsyncEngine`` sync and async modes, codec
+  ``none`` vs ``topk``, with sliced downlink; the target is 0.9x the
+  worst cell's final accuracy (reachable by construction, the
+  ``async_sim.py`` convention).
+
+Also emits a small downlink table (full / sliced / delta bytes for one
+broadcast) for the strategies whose slices genuinely shrink.
+
+Emits ``BENCH_comm.json`` via :func:`bench_lib.write_json`; CI runs this
+as a smoke and uploads the report.  The compression-ratio and
+accuracy-cost floors are enforced only under ``REPRO_BENCH_STRICT=1``
+(accuracy at smoke scale is stochastic; the prefix-cache precedent),
+with a loud warning otherwise.
+"""
+import os
+import time
+
+import numpy as np
+
+from repro.configs.preresnet20 import reduced as rn_reduced
+from repro.fl.comm import CommChannel, get_codec
+from repro.fl.comm.codecs import TopKCodec
+from repro.fl.data import build_federated
+from repro.fl.engine import RoundEngine, SimConfig, build_context
+from repro.fl.registry import get_strategy
+from repro.fl.strategy import tree_bytes
+from repro.fl.systime import (DEVICE_TIERS, AsyncEngine, SystemModel,
+                              mixed_profiles)
+
+from benchmarks.bench_lib import csv_row, rounds, write_json
+
+CLIENTS, BATCH = 8, 64
+CFG = rn_reduced(num_classes=10, image_size=16)
+
+
+def _data(seed=0):
+    return build_federated(num_clients=CLIENTS, alpha=1.0, n_train=640,
+                           n_test=300, image_size=16, seed=seed)
+
+
+def _sim(n_rounds, **kw):
+    base = dict(rounds=n_rounds, participation=0.5, lr=0.08, local_steps=2,
+                batch_size=BATCH, scenario="fair", seed=0)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+# ------------------------------------------------------------- frontier
+FRONTIER = {
+    "none": lambda: "none",
+    "fp16": lambda: "fp16",
+    "qsgd_int8": lambda: "qsgd_int8",
+    "topk": lambda: TopKCodec(k_frac=0.1),
+    "topk_no_ef": lambda: CommChannel(TopKCodec(k_frac=0.1),
+                                      error_feedback=False),
+}
+
+
+def frontier(n_rounds: int):
+    data = _data()
+    cells = {}
+    for name, make in FRONTIER.items():
+        spec = make()
+        kw = {"channel": spec} if isinstance(spec, CommChannel) \
+            else {"codec": spec}
+        eng = RoundEngine(get_strategy("fedepth"),
+                          build_context(data, _sim(n_rounds), model_cfg=CFG),
+                          **kw)
+        _, hist = eng.run(eval_every=2)
+        accs = [h.accuracy for h in hist]
+        up = int(sum(h.comm_bytes for h in hist))
+        cells[name] = {"final_accuracy": float(np.mean(accs[-2:])),
+                       "uplink_bytes": up,
+                       "down_bytes": int(sum(h.down_bytes for h in hist)),
+                       "curve": [(h.round, h.accuracy, h.comm_bytes)
+                                 for h in hist]}
+        acc = cells[name]["final_accuracy"]
+        print(f"  [frontier] {name:11s} acc={acc:.3f}  "
+              f"uplink={up / 1e6:7.2f} MB")
+    base = cells["none"]["uplink_bytes"]
+    for name, cell in cells.items():
+        cell["compression_ratio"] = base / cell["uplink_bytes"]
+        cell["accuracy_cost"] = (cells["none"]["final_accuracy"]
+                                 - cell["final_accuracy"])
+    return cells
+
+
+# ------------------------------------------------------- time-to-target
+def _to_target(curve, target):
+    """First (round, acc, sim_s) checkpoint at/above the target."""
+    for _, acc, sim_s in curve:
+        if acc is not None and acc >= target:
+            return sim_s
+    return None
+
+
+def starved(n_rounds: int):
+    """iot/phone fleet: links are the wall; compare codec none vs topk."""
+    data = _data()
+    profiles = mixed_profiles(CLIENTS, {"iot": 0.5, "phone": 0.5}, seed=0)
+    cells = {}
+    for mode in ("sync", "async"):
+        for codec_name in ("none", "topk"):
+            codec = "none" if codec_name == "none" \
+                else TopKCodec(k_frac=0.1)
+            kw = dict(concurrency=4, buffer_size=2) \
+                if mode == "async" else {}
+            eng = AsyncEngine(get_strategy("fedepth"),
+                              build_context(data, _sim(n_rounds),
+                                            model_cfg=CFG),
+                              system=SystemModel(profiles), mode=mode,
+                              codec=codec, downlink="sliced", **kw)
+            _, hist = eng.run(eval_every=2)
+            cells[f"{mode}/{codec_name}"] = {
+                "final_accuracy": hist[-1].accuracy,
+                "sim_seconds_total": hist[-1].sim_seconds,
+                "uplink_bytes": int(sum(h.comm_bytes for h in hist)),
+                "down_bytes": int(sum(h.down_bytes for h in hist)),
+                "curve": [(h.round, h.accuracy, h.sim_seconds)
+                          for h in hist]}
+    target = 0.9 * min(c["final_accuracy"] for c in cells.values())
+    out = {"target_accuracy": target, "cells": cells}
+    for cell in cells.values():
+        cell["sim_s_to_target"] = _to_target(cell["curve"], target)
+    for mode in ("sync", "async"):
+        t0 = cells[f"{mode}/none"]["sim_s_to_target"]
+        t1 = cells[f"{mode}/topk"]["sim_s_to_target"]
+        out[f"{mode}_codec_speedup_to_target"] = \
+            (t0 / t1) if t0 and t1 else None
+        print(f"  [starved/{mode}] none {t0 and f'{t0:.3g}s'} -> topk "
+              f"{t1 and f'{t1:.3g}s'} "
+              f"({out[f'{mode}_codec_speedup_to_target'] or 'n/a'})")
+    return out
+
+
+# ------------------------------------------------------- downlink table
+def downlink_table():
+    """One broadcast's downlink bytes per strategy x mode (two rounds in
+    delta mode, so the repeat-participant saving is visible)."""
+    data = _data()
+    table = {}
+    for method in ("fedepth", "heterofl", "depthfl", "fedavg"):
+        sim = _sim(1, participation=1.0, scenario="lack")
+        ctx = build_context(data, sim, model_cfg=CFG)
+        strat = get_strategy(method)
+        setup = getattr(strat, "setup", None)
+        if setup:
+            setup(ctx)
+        state = strat.init_state(ctx)
+        row = {}
+        for mode in ("full", "sliced"):
+            chan = CommChannel("none", downlink=mode)
+            row[mode] = int(sum(chan.downlink_bytes(strat, ctx, state, k)
+                                for k in range(ctx.num_clients)))
+        chan = CommChannel("none", downlink="delta")
+        first = sum(chan.downlink_bytes(strat, ctx, state, k)
+                    for k in range(ctx.num_clients))
+        repeat = sum(chan.downlink_bytes(strat, ctx, state, k)
+                     for k in range(ctx.num_clients))
+        row["delta_first"] = int(first)
+        row["delta_repeat_unchanged"] = int(repeat)
+        row["full_state_bytes"] = int(tree_bytes(state))
+        table[method] = row
+        print(f"  [downlink] {method:9s} full={row['full']:>9d} "
+              f"sliced={row['sliced']:>9d} repeat={row['delta_repeat_unchanged']:>4d}")
+    return table
+
+
+def main() -> None:
+    t0 = time.time()
+    n_rounds = rounds(8)
+    print(f"# comm frontier ({n_rounds} rounds per codec)")
+    front = frontier(n_rounds)
+    print("# bandwidth-starved time-to-target")
+    tt = starved(max(4, n_rounds // 2))
+    print("# downlink accounting")
+    dl = downlink_table()
+    payload = {"config": {"clients": CLIENTS, "batch_size": BATCH,
+                          "rounds": n_rounds, "model": CFG.name},
+               "frontier": front, "starved": tt, "downlink": dl}
+    write_json("comm", payload)
+
+    # acceptance: >= 4x uplink compression at <= 1 pt accuracy cost for a
+    # lossy codec with error feedback — judged on the cheapest-accuracy
+    # cell among the EF codecs that clear the byte floor (topk@0.1 is
+    # 5x by construction; qsgd_int8 ~3.97x just misses it).  The byte
+    # ratio is deterministic, the accuracy cost is not at smoke scale —
+    # floors enforce only under REPRO_BENCH_STRICT=1 (the prefix-cache
+    # precedent).
+    lossy_ef = [c for n, c in front.items()
+                if n not in ("none", "topk_no_ef")]
+    candidates = [c for c in lossy_ef if c["compression_ratio"] >= 4.0]
+    # no cell at the byte floor: fall through with the most-compressing
+    # one so BOTH floor checks below report (warning, or strict failure)
+    # instead of crashing the CI smoke on an empty min()
+    best = min(candidates, key=lambda c: c["accuracy_cost"]) if candidates \
+        else max(lossy_ef, key=lambda c: c["compression_ratio"])
+    ratio, cost = best["compression_ratio"], best["accuracy_cost"]
+    msgs = []
+    if ratio < 4.0:
+        msgs.append(f"compression ratio {ratio:.1f}x < 4x floor")
+    if cost > 0.01:
+        msgs.append(f"accuracy cost {cost * 100:.1f} pt > 1 pt floor")
+    if msgs:
+        msg = "; ".join(msgs)
+        if os.environ.get("REPRO_BENCH_STRICT"):
+            raise AssertionError(msg)
+        print(f"WARNING: {msg} (smoke scale; rerun with "
+              f"REPRO_BENCH_STRICT=1 REPRO_BENCH_SCALE=full to enforce)")
+    us = (time.time() - t0) * 1e6
+    print(csv_row("comm", us,
+                  f"best_ratio={ratio:.1f}x;acc_cost={cost * 100:.2f}pt;"
+                  f"sync_codec_speedup="
+                  f"{tt['sync_codec_speedup_to_target'] or 'n/a'}"))
+
+
+if __name__ == "__main__":
+    main()

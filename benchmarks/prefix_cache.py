@@ -92,7 +92,7 @@ def _run_config(make_engine, n_rounds: int, cohort: int, seed: int):
             state, ts = state0, []
             for rd in range(n_rounds):
                 t0 = time.perf_counter()
-                state, _ = engine.run_round(state, rd, batch_fn)
+                state, _, _ = engine.run_round(state, rd, batch_fn)
                 jax.block_until_ready(state)
                 ts.append(time.perf_counter() - t0)
                 if rd == 0:

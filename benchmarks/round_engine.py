@@ -55,7 +55,7 @@ def _timed_pass(engine, state0, batch_fn, n_rounds: int, seed: int):
     state, ts = state0, []
     for rd in range(n_rounds):
         t0 = time.perf_counter()
-        state, _ = engine.run_round(state, rd, batch_fn)
+        state, _, _ = engine.run_round(state, rd, batch_fn)
         jax.block_until_ready(state)
         ts.append(time.perf_counter() - t0)
     return state, ts

@@ -8,9 +8,9 @@ import argparse
 import sys
 import traceback
 
-from benchmarks import (async_sim, fig5_partial_training, fig7_vit_finetune,
-                        kernel_microbench, prefix_cache, roofline_report,
-                        round_engine, table1_memory,
+from benchmarks import (async_sim, comm, fig5_partial_training,
+                        fig7_vit_finetune, kernel_microbench, prefix_cache,
+                        roofline_report, round_engine, table1_memory,
                         table2_budget_scenarios, table3_unbalanced)
 
 BENCHES = {
@@ -24,6 +24,7 @@ BENCHES = {
     "round_engine": round_engine.main,
     "async_sim": async_sim.main,
     "prefix_cache": prefix_cache.main,
+    "comm": comm.main,
 }
 
 

@@ -11,7 +11,8 @@ import json
 import time
 
 from repro.configs.preresnet20 import ResNetConfig
-from repro.fl import SimConfig, build_federated, run_experiment
+from repro.fl import (RoundEngine, SimConfig, build_context,
+                      build_federated, get_strategy)
 from repro.fl.registry import available
 
 METHODS = available()
@@ -35,8 +36,10 @@ def main():
             sim = SimConfig(rounds=args.rounds, participation=0.1, lr=0.08,
                             local_steps=2, batch_size=64, scenario=scenario,
                             seed=seed)
-            acc, hist = run_experiment(m, data, sim, model_cfg=cfg,
-                                       eval_every=max(args.rounds // 4, 1))
+            engine = RoundEngine(get_strategy(m),
+                                 build_context(data, sim, model_cfg=cfg))
+            _, hist = engine.run(eval_every=max(args.rounds // 4, 1))
+            acc = hist[-1].accuracy
             out[m] = {"acc": acc,
                       "history": [rec._asdict() for rec in hist],
                       "seconds": time.time() - t0}

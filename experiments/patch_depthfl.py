@@ -5,7 +5,8 @@ import json
 import time
 
 from repro.configs.preresnet20 import ResNetConfig
-from repro.fl import SimConfig, build_federated, run_experiment
+from repro.fl import (RoundEngine, SimConfig, build_context,
+                      build_federated, get_strategy)
 
 
 def data_for(tag, clients):
@@ -39,8 +40,10 @@ def main(rounds=20, clients=40, path="experiments/paper_claims.json"):
                         seed=seed)
         for m in methods:
             t0 = time.time()
-            acc, hist = run_experiment(m, data, sim, model_cfg=cfg,
-                                       eval_every=max(rounds // 4, 1))
+            engine = RoundEngine(get_strategy(m),
+                                 build_context(data, sim, model_cfg=cfg))
+            _, hist = engine.run(eval_every=max(rounds // 4, 1))
+            acc = hist[-1].accuracy
             grid[m] = {"acc": acc,
                        "history": [rec._asdict() for rec in hist],
                        "seconds": time.time() - t0, "patched": True}

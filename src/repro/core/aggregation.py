@@ -43,11 +43,23 @@ def _fedavg_jit(trees, w):
         *trees)
 
 
+def _decoded(client_params: Sequence) -> tuple:
+    """Decode-at-aggregate: accept wire-encoded client payloads (any
+    object exposing ``.decode()`` — ``repro.fl.comm.WireUpdate``) next
+    to plain pytrees, so callers outside the engines can hand codec
+    outputs straight to the aggregators.  The engines normally decode
+    just before invoking the strategy, making this a no-op there.
+    Duck-typed on purpose: core must not import the fl layer."""
+    return tuple(p.decode() if hasattr(p, "decode") else p
+                 for p in client_params)
+
+
 def fedavg(client_params: Sequence, weights: Sequence[float]):
     """Weighted average of client pytrees.  weights ~ p_k, renormalized
     over the sampled cohort.  Jitted: the whole tree-wide weighted sum is
-    one dispatch, not one per (leaf, client)."""
-    return _fedavg_jit(tuple(client_params),
+    one dispatch, not one per (leaf, client).  Accepts wire-encoded
+    payloads (see :func:`_decoded`)."""
+    return _fedavg_jit(_decoded(client_params),
                        jnp.asarray(weights, jnp.float32))
 
 
@@ -91,9 +103,10 @@ def aggregate_masked(global_params, client_params: Sequence,
     ``trained_masks[k]`` is a pytree of {0,1} scalars (or arrays) marking
     which leaves client k trained (partial-training clients skip a
     prefix).  Leaves nobody trained keep the global value.  Jitted (one
-    dispatch per round).
+    dispatch per round).  Accepts wire-encoded payloads (see
+    :func:`_decoded`).
     """
-    return _masked_jit(global_params, tuple(client_params),
+    return _masked_jit(global_params, _decoded(client_params),
                        tuple(trained_masks),
                        jnp.asarray(weights, jnp.float32))
 

@@ -4,7 +4,7 @@ The round loop that used to live here is gone: ``FedepthServer`` is now a
 thin facade over the shared :class:`repro.fl.engine.RoundEngine` driving
 :class:`repro.fl.strategies.fedepth.FedepthStrategy` with an explicit
 ``BlockRunner`` — the same engine and strategy the image-protocol
-``run_experiment`` path uses, so there is exactly ONE implementation of
+registry path uses, so there is exactly ONE implementation of
 cohort sampling, local updates, and aggregation.  Variants:
   * head="skip"  -> FEDEPTH           (skip-connection classifier)
   * head="aux"   -> m-FEDEPTH         (auxiliary classifiers)
@@ -88,7 +88,7 @@ class FedepthServer:
               round_idx: int = 0):
         """One communication round.  ``client_batches(client_id)`` yields
         that client's local batch list."""
-        state, _bytes = self.engine.run_round(
+        state, _up, _down = self.engine.run_round(
             global_params, round_idx, self._batch_fn(client_batches))
         return state
 

@@ -1,7 +1,8 @@
 """Federated-learning runtime: data partitions, strategy API, round
-engine, samplers/schedulers, baselines, the system-time simulation
-subsystem (``repro.fl.systime``), and the legacy ``run_experiment``
-shim."""
+engine, samplers/schedulers, baselines, the wire-format communication
+subsystem (``repro.fl.comm``), and the system-time simulation subsystem
+(``repro.fl.systime``)."""
+from repro.fl.comm import CommChannel, get_codec  # noqa: F401
 from repro.fl.data import FederatedData, build_federated  # noqa: F401
 from repro.fl.engine import (RoundEngine, RoundRecord, SimConfig,  # noqa: F401
                              build_context)
@@ -11,4 +12,3 @@ from repro.fl.sampling import (SequentialScheduler,  # noqa: F401
 from repro.fl.strategy import (AsyncFLStrategy,  # noqa: F401
                                BatchableFLStrategy, ClientResult,
                                Context, FLStrategy)
-from repro.fl.simulate import run_experiment  # noqa: F401

@@ -1,0 +1,15 @@
+"""Wire-format communication subsystem: pluggable codecs, per-client
+error feedback, and the unified uplink/downlink wire contract both
+engines account bytes through.
+
+See ``docs/comm.md`` for the codec registry, the wire contract, and how
+byte accounting flows into the system-time link pricing.
+"""
+from repro.fl.comm.codecs import (CODECS, Codec, Fp16Codec,  # noqa: F401
+                                  NoneCodec, QsgdInt8Codec, TopKCodec,
+                                  TreeCodec, WirePayload, get_codec,
+                                  register_codec)
+from repro.fl.comm.error_feedback import ErrorFeedback  # noqa: F401
+from repro.fl.comm.payload import (DOWNLINK_MODES, CommChannel,  # noqa: F401
+                                   WireSpec, WireUpdate,
+                                   default_wire_parts, tree_add, tree_sub)

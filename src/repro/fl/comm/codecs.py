@@ -1,0 +1,306 @@
+"""Pluggable wire codecs: what a client update looks like ON THE LINK.
+
+A :class:`Codec` turns a pytree of float arrays into a
+:class:`WirePayload` carrying the EXACT encoded byte count — the number
+the engines stamp into ``RoundRecord`` and hand to the systime link
+pricer — and back.  Four built-ins, registered by name:
+
+========== ===================================================== =========
+name       wire format (per float leaf)                          bytes/coord
+========== ===================================================== =========
+none       float32 values, by reference (bitwise identity)       4
+fp16       float16 cast (values clipped to the fp16 range)       2
+qsgd_int8  QSGD stochastic int8 quantization + one fp32 scale    1 (+4/leaf)
+topk       top-k |value| sparsification: fp32 value + i32 index  8 * k_frac
+========== ===================================================== =========
+
+Every codec optionally takes a ``mask`` (a congruent 0/1 pytree): only
+coordinates inside the mask are encoded/counted — HeteroFL's padded
+width slices put exactly the slice on the wire, never the zero padding.
+Non-float leaves (ints riding along in a payload) pass through verbatim
+and are priced like :func:`repro.fl.strategy.tree_bytes` prices them
+(arrays at ``nbytes``, python scalars free).
+
+``qsgd_int8`` is unbiased in expectation (stochastic rounding) and the
+only stochastic codec — it draws from its OWN seeded generator, never
+the simulation stream, so enabling it cannot perturb cohort sampling.
+Lossy codecs are meant to run behind per-client error feedback
+(:mod:`repro.fl.comm.error_feedback`); see ``docs/comm.md``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, List, Optional, Protocol, Tuple, Union
+
+import jax
+import numpy as np
+
+_F16_MAX = float(np.finfo(np.float16).max)
+
+
+def _is_float_array(x) -> bool:
+    # read .dtype directly — np.asarray here would force a device->host
+    # transfer per leaf on accelerator backends just to inspect a dtype
+    return hasattr(x, "dtype") and np.issubdtype(x.dtype, np.floating)
+
+
+def trees_congruent(a, b) -> bool:
+    """Same treedef and same leaf shapes — THE congruence rule the comm
+    layer uses everywhere (delta coding, error-feedback residual reuse,
+    delta-downlink compare)."""
+    la, ta = jax.tree.flatten(a)
+    lb, tb = jax.tree.flatten(b)
+    return ta == tb and all(np.shape(x) == np.shape(y)
+                            for x, y in zip(la, lb))
+
+
+@dataclasses.dataclass
+class WirePayload:
+    """One encoded pytree as it crosses the link.
+
+    ``nbytes`` is the exact wire size of the encoded representation —
+    the single source of truth for comm accounting (engines copy it into
+    ``ClientResult.comm_bytes`` and the systime engines price uplink
+    seconds from it).  ``blobs`` holds one per-leaf record in
+    ``treedef`` order; the record layout is codec-private.
+    """
+    codec: str
+    blobs: List[tuple]
+    treedef: Any
+    nbytes: int
+
+
+class Codec(Protocol):
+    """Duck-typed codec protocol (subclassing :class:`TreeCodec` is the
+    convenient way to satisfy it)."""
+    name: str
+
+    def encode(self, tree, mask=None) -> WirePayload: ...
+
+    def decode(self, wp: WirePayload): ...
+
+    def size_bytes(self, tree=None, *, n_coords: Optional[int] = None) -> int:
+        ...
+
+
+class TreeCodec:
+    """Shared leaf-walking machinery: subclasses implement
+    ``_encode_leaf(x_f32, mask_bool|None) -> (blob, nbytes)`` and
+    ``_decode_leaf(blob) -> np.ndarray``."""
+
+    name = "abstract"
+
+    def encode(self, tree, mask=None) -> WirePayload:
+        leaves, treedef = jax.tree.flatten(tree)
+        mleaves = jax.tree.flatten(mask)[0] if mask is not None \
+            else [None] * len(leaves)
+        blobs, nbytes = [], 0
+        for x, m in zip(leaves, mleaves):
+            if not _is_float_array(x):
+                blobs.append(("raw", x))
+                nbytes += int(getattr(x, "nbytes", 0))
+                continue
+            arr = np.asarray(x, np.float32)
+            mb = None if m is None else np.asarray(m) > 0
+            blob, b = self._encode_leaf(arr, mb)
+            blobs.append(blob)
+            nbytes += int(b)
+        return WirePayload(self.name, blobs, treedef, int(nbytes))
+
+    def decode(self, wp: WirePayload):
+        leaves = [blob[1] if blob[0] == "raw" else self._decode_leaf(blob)
+                  for blob in wp.blobs]
+        return jax.tree.unflatten(wp.treedef, leaves)
+
+    # ------------------------------------------------------------ accounting
+    #: wire bytes per encoded coordinate (dense codecs); topk overrides
+    #: size_bytes outright.
+    coord_bytes = 4.0
+    #: fixed per-leaf overhead (e.g. qsgd's fp32 scale).
+    leaf_overhead = 0
+
+    def size_bytes(self, tree=None, *, n_coords: Optional[int] = None) -> int:
+        """Wire size WITHOUT encoding — the codec-aware half of
+        :func:`repro.fl.strategy.wire_bytes`.  ``n_coords`` overrides the
+        active-coordinate count (padded-sparse carriers); ``tree``
+        supplies leaf counts/sizes.  Exact for dense codecs; topk prices
+        its per-leaf k floors from the tree when given."""
+        ns, raw = _leaf_sizes(tree)
+        n = int(n_coords) if n_coords is not None else sum(ns)
+        n_leaves = max(1, len(ns))
+        return int(math.ceil(n * self.coord_bytes)
+                   + n_leaves * self.leaf_overhead + raw)
+
+
+def _leaf_sizes(tree) -> Tuple[List[int], int]:
+    """(per-float-leaf element counts, raw bytes of non-float leaves)."""
+    if tree is None:
+        return [], 0
+    ns, raw = [], 0
+    for leaf in jax.tree.leaves(tree):
+        if _is_float_array(leaf):
+            ns.append(int(np.asarray(leaf).size))
+        else:
+            raw += int(getattr(leaf, "nbytes", 0))
+    return ns, raw
+
+
+def _scatter(vals, m, shape):
+    out = np.zeros(shape, np.float32)
+    out[m] = vals
+    return out
+
+
+class NoneCodec(TreeCodec):
+    """Bitwise-identity passthrough — raw float32 on the wire.  The
+    engines additionally short-circuit the whole channel for it, so
+    ``codec="none"`` reproduces the channel-free engines exactly."""
+
+    name = "none"
+    coord_bytes = 4.0
+
+    def _encode_leaf(self, x, m):
+        if m is None:
+            return ("dense", x), x.nbytes
+        vals = x[m]
+        return ("masked", vals, m, x.shape), vals.nbytes
+
+    def _decode_leaf(self, blob):
+        if blob[0] == "dense":
+            return blob[1]
+        _, vals, m, shape = blob
+        return _scatter(vals, m, shape)
+
+
+class Fp16Codec(TreeCodec):
+    """float16 cast (values clipped to ±65504): 2x compression,
+    deterministic, worst-case relative error 2^-11 in the normal range."""
+
+    name = "fp16"
+    coord_bytes = 2.0
+
+    def _encode_leaf(self, x, m):
+        vals = x if m is None else x[m]
+        enc = np.clip(vals, -_F16_MAX, _F16_MAX).astype(np.float16)
+        if m is None:
+            return ("dense", enc), enc.nbytes
+        return ("masked", enc, m, x.shape), enc.nbytes
+
+    def _decode_leaf(self, blob):
+        if blob[0] == "dense":
+            return blob[1].astype(np.float32)
+        _, enc, m, shape = blob
+        return _scatter(enc.astype(np.float32), m, shape)
+
+
+class QsgdInt8Codec(TreeCodec):
+    """QSGD (Alistarh et al. 2017) stochastic uniform quantization to
+    int8: per leaf, ``scale = max|x| / 127`` (one fp32 on the wire) and
+    each coordinate rounds stochastically to a neighbouring level —
+    unbiased in expectation over the codec's own seeded stream."""
+
+    name = "qsgd_int8"
+    coord_bytes = 1.0
+    leaf_overhead = 4
+
+    def __init__(self, seed: int = 0):
+        self._rng = np.random.default_rng(seed)
+
+    def _encode_leaf(self, x, m):
+        vals = x if m is None else x[m]
+        amax = float(np.max(np.abs(vals))) if vals.size else 0.0
+        scale = amax / 127.0
+        if scale == 0.0:
+            q = np.zeros(vals.shape, np.int8)
+        else:
+            v = vals / scale
+            lo = np.floor(v)
+            q = np.clip(lo + (self._rng.random(vals.shape) < (v - lo)),
+                        -127, 127).astype(np.int8)
+        blob = ("q8", q, scale) if m is None \
+            else ("q8m", q, scale, m, x.shape)
+        return blob, q.nbytes + 4
+
+    def _decode_leaf(self, blob):
+        if blob[0] == "q8":
+            return blob[1].astype(np.float32) * blob[2]
+        _, q, scale, m, shape = blob
+        return _scatter(q.astype(np.float32) * scale, m, shape)
+
+
+class TopKCodec(TreeCodec):
+    """Top-k magnitude sparsification: per leaf, keep the
+    ``ceil(k_frac * n)`` largest-|value| coordinates (at least one) and
+    ship (fp32 value, int32 flat index) pairs — 8 bytes per kept
+    coordinate.  Biased; run it behind error feedback."""
+
+    name = "topk"
+
+    def __init__(self, k_frac: float = 0.1):
+        if not 0.0 < k_frac <= 1.0:
+            raise ValueError(f"k_frac must be in (0, 1], got {k_frac}")
+        self.k_frac = float(k_frac)
+
+    def _k(self, n: int) -> int:
+        return max(1, int(math.ceil(self.k_frac * n)))
+
+    def _encode_leaf(self, x, m):
+        flat = x.ravel()
+        cand = np.arange(flat.size) if m is None else np.flatnonzero(m.ravel())
+        mag = np.abs(flat[cand])
+        k = min(self._k(mag.size), mag.size) if mag.size else 0
+        if k == 0:
+            idx = np.zeros((0,), np.int32)
+        elif k >= mag.size:
+            idx = cand.astype(np.int32)
+        else:
+            idx = cand[np.argpartition(mag, mag.size - k)[mag.size - k:]]
+            idx = np.sort(idx).astype(np.int32)
+        vals = flat[idx].astype(np.float32)
+        return ("topk", vals, idx, x.shape), vals.nbytes + idx.nbytes
+
+    def _decode_leaf(self, blob):
+        _, vals, idx, shape = blob
+        out = np.zeros(int(np.prod(shape)), np.float32)
+        out[idx] = vals
+        return out.reshape(shape)
+
+    def size_bytes(self, tree=None, *, n_coords: Optional[int] = None) -> int:
+        ns, raw = _leaf_sizes(tree)
+        if n_coords is not None or not ns:
+            n = int(n_coords) if n_coords is not None else 0
+            return 8 * self._k(n) + raw if n else raw
+        return sum(8 * self._k(n) for n in ns) + raw
+
+
+#: name -> zero-config factory.  ``register_codec`` extends it.
+CODECS: Dict[str, Callable[[], Codec]] = {
+    "none": NoneCodec,
+    "fp16": Fp16Codec,
+    "qsgd_int8": QsgdInt8Codec,
+    "topk": TopKCodec,
+}
+
+
+def register_codec(name: str) -> Callable:
+    """``@register_codec("mycodec")`` on a codec class/factory."""
+    def deco(factory: Callable) -> Callable:
+        if name in CODECS:
+            raise ValueError(f"codec {name!r} already registered")
+        CODECS[name] = factory
+        return factory
+    return deco
+
+
+def get_codec(spec: Union[str, Codec, None]) -> Codec:
+    """Resolve a codec knob: a registered name (default config), an
+    already-configured instance (passthrough), or ``None`` -> "none"."""
+    if spec is None:
+        spec = "none"
+    if not isinstance(spec, str):
+        return spec
+    if spec not in CODECS:
+        raise KeyError(f"unknown codec {spec!r}; "
+                       f"available: {sorted(CODECS)}")
+    return CODECS[spec]()

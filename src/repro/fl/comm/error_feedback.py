@@ -1,0 +1,96 @@
+"""Per-client error feedback (EF-SGD) for lossy uplink codecs.
+
+A lossy codec throws information away every round; without correction
+the discarded mass is lost forever and biased codecs (top-k) stall
+convergence.  EF-SGD (Seide et al. 2014; Karimireddy et al. 2019) keeps
+a per-client RESIDUAL — everything the codec failed to transmit so far —
+and adds it back into the next update before encoding:
+
+    corrected_t = delta_t + e_{t-1}
+    wire_t      = encode(corrected_t)
+    e_t         = corrected_t - decode(wire_t)
+
+so over repeated participation every coordinate's error is eventually
+transmitted (the residual is bounded, hence the time-averaged decoded
+signal converges to the true one — asserted in tests/test_comm.py).
+
+The residual lives CLIENT-side in a real deployment; here the
+:class:`~repro.fl.comm.payload.CommChannel` holds one per client id.
+A residual is only re-applied when it still describes the SAME
+coordinates: it is dropped when the outgoing tree's structure changes,
+AND when the strategy's wire ``tag`` changes — structure alone cannot
+distinguish two same-capacity SplitMix base subsets (same treedef, same
+shapes, different networks), so rotating-coordinate strategies tag
+their wire with the coordinate identity (``WireSpec.tag``).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.fl.comm.codecs import _is_float_array, trees_congruent
+
+
+class ErrorFeedback:
+    """Per-client residual store.  ``correct`` adds the residual into an
+    outgoing update, ``update`` records what the codec just failed to
+    transmit; both are no-ops for exact codecs (zero residual)."""
+
+    def __init__(self):
+        self._residuals: Dict[int, tuple] = {}   # id -> (tag, residual)
+
+    def residual(self, client_id: int):
+        entry = self._residuals.get(client_id)
+        return entry[1] if entry is not None else None
+
+    def reset(self, client_id: Optional[int] = None) -> None:
+        if client_id is None:
+            self._residuals.clear()
+        else:
+            self._residuals.pop(client_id, None)
+
+    def correct(self, client_id: int, tree, tag=None):
+        """``tree + residual`` (float leaves only).  A residual whose
+        structure OR wire tag no longer matches the outgoing update is
+        dropped, never misapplied to different coordinates."""
+        entry = self._residuals.get(client_id)
+        if entry is None:
+            return tree
+        old_tag, res = entry
+        if old_tag != tag or not trees_congruent(tree, res):
+            self.reset(client_id)
+            return tree
+        return jax.tree.map(
+            lambda t, r: np.asarray(t, np.float32) + r
+            if _is_float_array(t) else t, tree, res)
+
+    def update(self, client_id: int, corrected, decoded, tag=None) -> None:
+        """Store ``corrected - decoded`` — the part of this round's
+        (already residual-corrected) update the codec dropped.
+        Non-float leaves keep the outgoing leaf itself as a placeholder
+        so the stored tree stays congruent with next round's update
+        (a scalar stand-in would fail ``trees_congruent`` and silently
+        reset the residual every round)."""
+        self._residuals[client_id] = (tag, jax.tree.map(
+            lambda c, d: np.asarray(c, np.float32)
+            - np.asarray(d, np.float32) if _is_float_array(c) else c,
+            corrected, decoded))
+
+    # ---------------------------------------------- delivery rollback
+    def snapshot(self, client_id: int):
+        """Opaque pre-encode state for :meth:`restore` — taken by the
+        engines before encoding an upload whose DELIVERY may still fail
+        (sync-mode deadline miss)."""
+        return self._residuals.get(client_id)
+
+    def restore(self, client_id: int, snap) -> None:
+        """Undo an encode whose payload the server discarded: the
+        transmitted mass never arrived, so the residual reverts to its
+        pre-encode value instead of keeping only the codec error (which
+        would silently drop the delivered-then-discarded coordinates)."""
+        if snap is None:
+            self._residuals.pop(client_id, None)
+        else:
+            self._residuals[client_id] = snap

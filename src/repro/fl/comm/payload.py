@@ -1,0 +1,232 @@
+"""The unified wire contract: what crosses the link, in both directions.
+
+**Uplink** — a strategy's :class:`~repro.fl.strategy.ClientResult`
+payload is split by an optional ``wire_parts(ctx, state, result)`` hook
+into a :class:`WireSpec` — the pytree that goes on the wire, a congruent
+reference for DELTA coding (the broadcast state both ends already hold;
+untouched prefixes / carried copies delta to exact zeros, which
+sparsifying codecs then skip for free), an optional coordinate mask
+(HeteroFL's width slice), and a ``rebuild`` closure restoring the
+strategy's payload shape after decode.  Strategies without the hook get
+:func:`default_wire_parts` (delta coding whenever the payload is
+congruent with the server state).  The channel adds per-client error
+feedback, encodes, and stamps the EXACT encoded byte count into
+``ClientResult.comm_bytes``; the payload slot then carries a
+:class:`WireUpdate` until the engine decodes it just before
+``aggregate`` (``core.aggregation`` also accepts WireUpdates directly —
+the decode-at-aggregate path for callers outside the engines).
+
+**Downlink** — three accounting modes on :class:`CommChannel`:
+
+* ``"full"``   — every participant downloads the whole server state
+  (``tree_bytes(state)``), the pre-channel engines' pricing.
+* ``"sliced"`` — each client downloads only the sub-pytree its
+  ``downlink_tree(ctx, state, client_id)`` hook declares it needs:
+  HeteroFL its width slice, DepthFL its depth prefix + matching aux
+  exits, SplitMix its base-net subset.  FeDepth's depth-wise slice —
+  subproblem j needs embed + units[0, hi_j) + head — TELESCOPES over a
+  round's schedule to embed + units[0, hi_last) + head, and FeDepth
+  decompositions always cover to the last unit, so its slice is the
+  full model (documented on the hook).
+* ``"delta"``  — sliced, and repeat participants receive only the
+  coordinates that CHANGED since their last-seen version, priced as
+  (fp32 value + i32 index) pairs capped at the dense size — lossless,
+  so downlink mode never changes training results, only bytes and
+  simulated link time.
+
+Content stays exact in every mode (slicing and deltas are lossless
+reorganizations); lossy transforms are an UPLINK-only concern, where
+error feedback repairs them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.comm.codecs import (Codec, WirePayload, _is_float_array,
+                                  get_codec, trees_congruent)
+from repro.fl.comm.error_feedback import ErrorFeedback
+from repro.fl.strategy import tree_bytes
+
+DOWNLINK_MODES = ("full", "sliced", "delta")
+
+
+def tree_sub(a, b):
+    """Float-leaf-wise ``a - b``; non-float leaves pass through from
+    ``a`` (they are never delta-coded)."""
+    return jax.tree.map(
+        lambda x, y: x - y if _is_float_array(x) else x, a, b)
+
+
+def tree_add(ref, delta):
+    """Inverse of :func:`tree_sub`: ``ref + delta`` on float leaves
+    (restoring ``ref``'s dtype), the delta's own value elsewhere."""
+    return jax.tree.map(
+        lambda r, d: (jnp.asarray(r, jnp.float32)
+                      + jnp.asarray(d, jnp.float32)).astype(r.dtype)
+        if _is_float_array(r) else d, ref, delta)
+
+
+@dataclasses.dataclass
+class WireSpec:
+    """How one ClientResult maps onto the wire (see module docstring)."""
+    tree: Any                                 # the pytree to encode
+    ref: Any = None                           # congruent delta base, or None
+    mask: Any = None                          # 0/1 coordinate mask, or None
+    rebuild: Optional[Callable] = None        # decoded tree -> payload shape
+    # error-feedback identity: a residual only applies to a later round
+    # whose tag matches (hashable).  Structure alone cannot tell two
+    # same-capacity SplitMix base subsets apart — same treedef, same
+    # shapes, different networks — so strategies whose wire maps onto
+    # varying coordinate sets MUST tag it (splitmix tags the base ids).
+    tag: Any = None
+
+
+@dataclasses.dataclass
+class WireUpdate:
+    """An encoded client update in flight: the ``WirePayload`` that
+    crossed the link plus the server-side context (codec, delta
+    reference, payload rebuild) needed to decode it.  ``decode()``
+    returns the strategy-shaped payload.  ``decoded`` optionally carries
+    the already-decoded tree (the error-feedback path decodes once to
+    compute the residual — reuse it instead of decoding the whole model
+    a second time at aggregate)."""
+    wire: WirePayload
+    codec: Codec
+    ref: Any = None
+    rebuild: Optional[Callable] = None
+    decoded: Any = None
+
+    @property
+    def nbytes(self) -> int:
+        return self.wire.nbytes
+
+    def decode(self):
+        tree = self.decoded if self.decoded is not None \
+            else self.codec.decode(self.wire)
+        if self.ref is not None:
+            tree = tree_add(self.ref, tree)
+        return self.rebuild(tree) if self.rebuild is not None else tree
+
+
+def default_wire_parts(ctx, state, result) -> WireSpec:
+    """Fallback wire contract: delta against the broadcast state when
+    the payload is congruent with it (FedAvg's subnet, FeDepth's full
+    model), else absolute coding of the payload tree."""
+    payload = result.payload
+    try:
+        congruent = trees_congruent(payload, state)
+    except Exception:
+        congruent = False
+    if congruent:
+        return WireSpec(payload, ref=state)
+    return WireSpec(payload)
+
+
+class CommChannel:
+    """One experiment's wire: codec + error feedback on the uplink,
+    slicing/delta accounting on the downlink.  Both engines own one
+    (``RoundEngine(codec=..., downlink=...)`` / same on ``AsyncEngine``)
+    and route every byte they report through it."""
+
+    def __init__(self, codec: Union[str, Codec, None] = "none",
+                 downlink: str = "full", *, error_feedback: bool = True):
+        self.codec = get_codec(codec)
+        if downlink not in DOWNLINK_MODES:
+            raise ValueError(f"downlink must be one of {DOWNLINK_MODES}, "
+                             f"got {downlink!r}")
+        self.downlink = downlink
+        self.ef = ErrorFeedback() if error_feedback else None
+        self._last_sent: Dict[int, Any] = {}    # client -> last-seen tree
+
+    # -------------------------------------------------------------- uplink
+    def encode_result(self, strategy, ctx, state, client_id: int, result):
+        """Encode one ClientResult for the wire (in place).  The "none"
+        codec is a strict no-op — the result object, payload and
+        ``comm_bytes`` pass through untouched, so the channel-free
+        engines are reproduced bitwise."""
+        if self.codec.name == "none":
+            return result
+        spec_fn = getattr(strategy, "wire_parts", None)
+        spec = spec_fn(ctx, state, result) if spec_fn is not None \
+            else default_wire_parts(ctx, state, result)
+        delta = tree_sub(spec.tree, spec.ref) if spec.ref is not None \
+            else spec.tree
+        corrected = self.ef.correct(client_id, delta, tag=spec.tag) \
+            if self.ef else delta
+        wire = self.codec.encode(corrected, mask=spec.mask)
+        decoded = None
+        if self.ef:
+            decoded = self.codec.decode(wire)
+            self.ef.update(client_id, corrected, decoded, tag=spec.tag)
+        result.payload = WireUpdate(wire, self.codec, ref=spec.ref,
+                                    rebuild=spec.rebuild, decoded=decoded)
+        result.comm_bytes = wire.nbytes
+        return result
+
+    def decode_result(self, result):
+        """Server-side decode (in place), called just before the
+        strategy's aggregate sees the result."""
+        if isinstance(result.payload, WireUpdate):
+            result.payload = result.payload.decode()
+        return result
+
+    def snapshot_uplink(self, client_id: int):
+        """Pre-encode error-feedback state, for engines whose DELIVERY
+        can still fail after encoding (sync-mode deadline misses)."""
+        return self.ef.snapshot(client_id) if self.ef else None
+
+    def rollback_uplink(self, client_id: int, snap) -> None:
+        """Undo :meth:`encode_result`'s residual update for a payload
+        the server discarded — see ``ErrorFeedback.restore``."""
+        if self.ef:
+            self.ef.restore(client_id, snap)
+
+    # ------------------------------------------------------------ downlink
+    def downlink_bytes(self, strategy, ctx, state, client_id: int) -> int:
+        """Wire size of what the server ships ``client_id`` this
+        dispatch (and, in delta mode, record it as last-seen)."""
+        hook = getattr(strategy, "downlink_tree", None)
+        if self.downlink == "full":
+            full = tree_bytes(state)
+            if full == 0 and hook is not None:
+                # the state is not a priceable pytree (SplitMixState):
+                # fall back to the hook's needed-tree so full mode never
+                # under-reports a real broadcast as zero bytes
+                full = tree_bytes(hook(ctx, state, client_id))
+            return full
+        tree = hook(ctx, state, client_id) if hook is not None else state
+        if self.downlink == "sliced":
+            return tree_bytes(tree)
+        return self._delta_bytes(client_id, tree)
+
+    def _delta_bytes(self, client_id: int, tree) -> int:
+        """Changed-coordinate downlink: (fp32 value + i32 index) pairs
+        per changed coordinate, per-leaf capped at the dense fp32 size,
+        against the client's last-seen version.  Leaves the aggregation
+        passed through by reference (blocks nobody trained) are free.
+
+        NOTE the tracker pins each client's last-seen tree by reference
+        (O(clients x model) host memory) and compares element-wise per
+        dispatch — fine at simulation scale; a deployment-scale tracker
+        would keep per-leaf digests instead."""
+        leaves = jax.tree.leaves(tree)
+        dense = sum(int(leaf.nbytes) for leaf in leaves
+                    if hasattr(leaf, "nbytes"))
+        prev = self._last_sent.get(client_id)
+        total = dense
+        if prev is not None and trees_congruent(tree, prev):
+            changed = 0
+            for new, old in zip(leaves, jax.tree.leaves(prev)):
+                if new is old or not hasattr(new, "nbytes"):
+                    continue
+                a = np.asarray(new)
+                nnz = int(np.count_nonzero(a != np.asarray(old)))
+                changed += min(nnz * 8, int(a.nbytes))
+            total = min(changed, dense)
+        self._last_sent[client_id] = tree
+        return int(total)

@@ -1,6 +1,6 @@
 """The single FL round engine — shared by ALL methods.
 
-One loop owns what `run_experiment`'s per-method branches and
+One loop owns what the pre-registry per-method monolith and
 ``core.fedepth.FedepthServer`` used to duplicate: cohort sampling
 (pluggable, :mod:`repro.fl.sampling`), the paper's budget / decomposition
 assignment, per-experiment jit/step caches, eval cadence, and a
@@ -33,10 +33,12 @@ import numpy as np
 from repro.configs.preresnet20 import ResNetConfig
 from repro.core.decomposition import decompose, width_equivalent_budget
 from repro.core.memory_model import resnet_memory
+from repro.fl.comm import CommChannel
 from repro.fl.sampling import (CohortSampler, ClientScheduler,
                                SequentialScheduler, UniformSampler,
                                VectorizedScheduler, make_scheduler)
-from repro.fl.strategy import ClientResult, Context, FLStrategy, tree_bytes
+from repro.fl.strategy import (ClientResult, Context, FLStrategy,
+                               wire_bytes)
 
 SCENARIOS: Dict[str, Tuple[float, ...]] = {
     "fair": (1 / 6, 1 / 3, 1 / 2, 1.0),
@@ -69,12 +71,21 @@ class RoundRecord(NamedTuple):
     accumulate wall-clock and client-upload traffic since the previous
     record.  ``sim_seconds`` is the ABSOLUTE simulated time of the record
     under a system-time engine (:mod:`repro.fl.systime`); the wall-clock
-    ``RoundEngine`` has no virtual clock and stamps 0.0."""
+    ``RoundEngine`` has no virtual clock and stamps 0.0.
+
+    ``comm_bytes`` counts the UPLINK as it actually crossed the wire —
+    the exact encoded ``WirePayload`` size when a lossy codec is active,
+    raw float32 payload bytes under ``codec="none"`` (identical to the
+    pre-channel accounting).  ``down_bytes`` is the matching DOWNLINK
+    accumulator: full-model broadcast bytes by default, or the
+    sliced/delta wire size when the engine's ``downlink`` knob is set
+    (see ``docs/comm.md``)."""
     round: int
     accuracy: Optional[float]
     seconds: float
     comm_bytes: int
     sim_seconds: float = 0.0
+    down_bytes: int = 0
 
 
 def client_ratios(num_clients: int, scenario: str,
@@ -174,7 +185,10 @@ class RoundEngine:
     def __init__(self, strategy: FLStrategy, ctx: Context, *,
                  sampler: Optional[CohortSampler] = None,
                  scheduler: Union[ClientScheduler, str, None] = None,
-                 prefix_cache: str = "on"):
+                 prefix_cache: str = "on",
+                 codec: Union[str, object, None] = "none",
+                 downlink: str = "full",
+                 channel: Optional[CommChannel] = None):
         """``scheduler`` is an instance or a name from
         ``repro.fl.sampling.SCHEDULERS`` ("sequential" — the default — or
         "vectorized").  The vectorized scheduler stacks clients that share
@@ -189,11 +203,21 @@ class RoundEngine:
         advances it incrementally — the paper's prefix-once claim; "off"
         replays the prefix inside every SGD step.  Both produce the same
         aggregated params up to float tolerance (asserted in
-        tests/test_prefix_cache.py; see docs/prefix_cache.md)."""
+        tests/test_prefix_cache.py; see docs/prefix_cache.md).
+
+        ``codec`` (a name from ``repro.fl.comm.CODECS`` or a configured
+        codec instance) and ``downlink`` ("full"/"sliced"/"delta")
+        configure the wire: lossy uplink codecs run behind per-client
+        error feedback and history switches to exact encoded bytes;
+        ``codec="none"`` (default) is a strict no-op that reproduces the
+        channel-free engine bitwise.  Pass a prebuilt ``channel`` to
+        share/ablate one (e.g. ``CommChannel(error_feedback=False)``);
+        it wins over the two knobs.  See docs/comm.md."""
         self.strategy = strategy
         self.ctx = apply_prefix_cache(ctx, prefix_cache)
         self.sampler = sampler or UniformSampler()
         self.scheduler = make_scheduler(scheduler)
+        self.channel = channel or CommChannel(codec, downlink)
 
     # ------------------------------------------------------------------
     def default_batch_fn(self) -> Callable[[int], list]:
@@ -203,14 +227,21 @@ class RoundEngine:
 
     def run_round(self, state, round_idx: int,
                   batch_fn: Callable[[int], list]):
-        """One communication round: sample -> local updates -> aggregate.
-        Returns (new_state, comm_bytes)."""
-        cohort = self.sampler.sample(self.ctx, round_idx)
-        results = self.scheduler.run(self.ctx, self.strategy, state,
+        """One communication round: broadcast (downlink accounting) ->
+        sample -> local updates -> uplink encode -> decode ->
+        aggregate.  Returns (new_state, up_bytes, down_bytes)."""
+        ctx, chan = self.ctx, self.channel
+        cohort = self.sampler.sample(ctx, round_idx)
+        down = sum(chan.downlink_bytes(self.strategy, ctx, state, int(k))
+                   for k in cohort)
+        results = self.scheduler.run(ctx, self.strategy, state,
                                      cohort, batch_fn)
+        results = [chan.encode_result(self.strategy, ctx, state, int(k), r)
+                   for k, r in zip(cohort, results)]
         comm = sum(r.comm_bytes if r.comm_bytes is not None
-                   else tree_bytes(r.payload) for r in results)
-        return self.strategy.aggregate(self.ctx, state, results), comm
+                   else wire_bytes(r.payload) for r in results)
+        results = [chan.decode_result(r) for r in results]
+        return self.strategy.aggregate(ctx, state, results), comm, down
 
     def run(self, *, initial_state=None,
             batch_fn: Optional[Callable[[int], list]] = None,
@@ -238,15 +269,16 @@ class RoundEngine:
             else self.strategy.init_state(ctx)
         batch_fn = batch_fn or self.default_batch_fn()
         history: List[RoundRecord] = []
-        t_last, bytes_acc = time.perf_counter(), 0
+        t_last, bytes_acc, down_acc = time.perf_counter(), 0, 0
         for rd in range(ctx.sim.rounds):
-            state, comm = self.run_round(state, rd, batch_fn)
+            state, comm, down = self.run_round(state, rd, batch_fn)
             bytes_acc += comm
+            down_acc += down
             if (rd + 1) % eval_every == 0 or rd == ctx.sim.rounds - 1:
                 # eval_state keeps the record even with no eval source
                 acc = eval_state(self.strategy, ctx, state, eval_fn)
                 now = time.perf_counter()
                 history.append(RoundRecord(rd + 1, acc, now - t_last,
-                                           bytes_acc))
-                t_last, bytes_acc = now, 0
+                                           bytes_acc, 0.0, down_acc))
+                t_last, bytes_acc, down_acc = now, 0, 0
         return state, history

@@ -11,6 +11,7 @@ import numpy as np
 
 from repro.fl.baselines import (depthfl_depth_for_budget, depthfl_init_aux,
                                 depthfl_local)
+from repro.fl.comm.payload import WireSpec
 from repro.fl.registry import register
 from repro.fl.strategy import ClientResult
 from repro.fl.strategies import common
@@ -46,6 +47,28 @@ class DepthFLStrategy:
                                 local_steps=ctx.sim.local_steps,
                                 step_cache=cache)
         return ClientResult((p, a, depth), float(ctx.sizes[client_id]))
+
+    # ------------------------------------------------- wire contract
+    def wire_parts(self, ctx, state, result):
+        """Delta-code (params, aux) against the server pair; blocks
+        beyond the client's depth equal the broadcast copy, so their
+        deltas are exact zeros and sparsifying codecs skip them.  The
+        coverage int rides along uncompressed (free)."""
+        p, a, depth = result.payload
+        return WireSpec((p, a), ref=state,
+                        rebuild=lambda t, _d=depth: (t[0], t[1], _d))
+
+    def downlink_tree(self, ctx, state, client_id):
+        """Depth-wise downlink slice — the fixed-depth case where it
+        genuinely shrinks: a depth-d client needs only the stem, the
+        first d blocks, the head, and the aux exits at or below d."""
+        params, aux = state
+        depth = max(self.depths[client_id], 2)
+        sub = {k: params[k] for k in ("stem", "head_norm", "classifier")}
+        sub["blocks"] = params["blocks"][:depth]
+        sub_aux = {k: v for k, v in aux.items()
+                   if int(k.split("_")[1]) <= depth}
+        return (sub, sub_aux)
 
     def aggregate(self, ctx, state, results):
         params, aux = state

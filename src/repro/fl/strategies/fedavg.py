@@ -27,6 +27,12 @@ class FedAvgStrategy:
         its own budget's decomposition."""
         return self.r_min
 
+    # Wire contract: no hooks needed.  The x min r subnet IS the
+    # wire-minimal model, so the channel's no-hook defaults are exact —
+    # downlink slicing is the identity (delta mode still pays off for
+    # repeat participants) and the payload is congruent with the state,
+    # so default_wire_parts delta-codes the uplink.
+
     def init_state(self, ctx):
         return resnet.init(ctx.key, self.sub_cfg)
 

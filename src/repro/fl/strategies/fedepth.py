@@ -26,8 +26,9 @@ import numpy as np
 from repro.core import aggregation, blockwise, mkd
 from repro.core.blockwise import BlockRunner
 from repro.fl.baselines import _ce
+from repro.fl.comm.payload import WireSpec
 from repro.fl.registry import register
-from repro.fl.strategy import ClientResult, tree_bytes
+from repro.fl.strategy import ClientResult, wire_bytes
 from repro.fl.strategies import common
 from repro.models import resnet
 
@@ -77,7 +78,7 @@ class FedepthStrategy:
             # only the trained model crosses the wire; the mask is
             # derivable server-side from the client's decomposition
             result.payload = (local, mask)
-            result.comm_bytes = tree_bytes(local)
+            result.comm_bytes = wire_bytes(local)
         return result
 
     # ---------------------------------------------- batched capability
@@ -111,9 +112,36 @@ class FedepthStrategy:
             res = ClientResult(local, float(ctx.sizes[cid]))
             if self.masked_aggregation:
                 res.payload = (local, mask)
-                res.comm_bytes = tree_bytes(local)
+                res.comm_bytes = wire_bytes(local)
             results.append(res)
         return results
+
+    # ------------------------------------------------- wire contract
+    def wire_parts(self, ctx, state, result):
+        """Lossy uplink codecs encode the client's DELTA against the
+        broadcast state: a partial-training client's untouched prefix
+        and an MKD client's carried leaves delta to exact zeros, which
+        sparsifying codecs then skip for free.  Under masked
+        aggregation the trained-mask aux rides along unencoded (it is
+        server-derivable from the client's decomposition)."""
+        if self.masked_aggregation:
+            local, tm = result.payload
+            return WireSpec(local, ref=state,
+                            rebuild=lambda t, _tm=tm: (t, _tm))
+        return WireSpec(result.payload, ref=state)
+
+    def downlink_tree(self, ctx, state, client_id):
+        """Depth-wise downlink slice.  Subproblem j needs only
+        ``embed + units[0, hi_j) + head``, so a round's staged downloads
+        TELESCOPE to ``embed + units[0, hi_last) + head`` — and FeDepth
+        decompositions always cover to the last unit (partial-training
+        clients still forward through their skipped prefix), so the
+        union is the full model.  FeDepth's downlink savings therefore
+        come from the channel's "delta" mode: repeat participants
+        receive only the coordinates that changed since their last-seen
+        version.  Fixed-depth prefixes DO slice — see
+        ``DepthFLStrategy.downlink_tree``."""
+        return state
 
     def aggregate(self, ctx, state, results):
         ws = [r.weight for r in results]

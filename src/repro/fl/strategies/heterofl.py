@@ -12,18 +12,17 @@ import jax.numpy as jnp
 from repro.fl import width as width_util
 from repro.fl.baselines import (fedavg_local_batched, heterofl_aggregate,
                                 heterofl_local)
+from repro.fl.comm.payload import WireSpec
 from repro.fl.registry import register
-from repro.fl.strategy import ClientResult
+from repro.fl.strategy import ClientResult, wire_bytes
 from repro.fl.strategies import common
 from repro.models import resnet
 
 
-def _wire_bytes(padded, mask) -> int:
+def _slice_coords(mask) -> int:
     # the wire carries the r-width slice, not the zero-padded tree:
     # the mask's nonzero count IS the slice's coordinate count
-    return sum(int(jnp.sum(m)) * p.dtype.itemsize
-               for p, m in zip(jax.tree.leaves(padded),
-                               jax.tree.leaves(mask)))
+    return sum(int(jnp.sum(m)) for m in jax.tree.leaves(mask))
 
 
 @register("heterofl")
@@ -34,15 +33,34 @@ class HeteroFLStrategy:
     @staticmethod
     def _wire_for(ctx, ratio: float, padded, mask) -> int:
         # upload size is fixed per (experiment, ratio); cache lives in the
-        # per-experiment context, not on the (reusable) strategy instance
+        # per-experiment context, not on the (reusable) strategy instance.
+        # Sizing routes through the one codec-aware wire_bytes helper
+        # (fl/strategy.py), pricing only the slice's active coordinates.
         cache = ctx.caches.setdefault("heterofl_wire", {})
         if ratio not in cache:
-            cache[ratio] = _wire_bytes(padded, mask)
+            cache[ratio] = wire_bytes(n_coords=_slice_coords(mask))
         return cache[ratio]
 
     def client_work(self, ctx, client_id):
         """Systime pricing: a width slice, never the FeDepth blocks."""
         return float(min(ctx.ratios[client_id], 1.0))
+
+    # ------------------------------------------------- wire contract
+    def wire_parts(self, ctx, state, result):
+        """Only the width slice crosses the wire: the mask restricts
+        the codec to the slice's coordinates (the zero padding is never
+        encoded or counted), and the delta reference is the masked
+        broadcast state so lossy codecs see true in-slice deltas."""
+        padded, mask = result.payload
+        ref = jax.tree.map(lambda s, m: s * m, state, mask)
+        return WireSpec(padded, ref=ref, mask=mask,
+                        rebuild=lambda t, _m=mask: (t, _m))
+
+    def downlink_tree(self, ctx, state, client_id):
+        """Sliced downlink: a width-r client downloads exactly its
+        first-round(r*C)-channels subnet, not the full model."""
+        r = float(min(ctx.ratios[client_id], 1.0))
+        return width_util.slice_resnet(state, ctx.model_cfg, r)[0]
 
     def client_update(self, ctx, state, client_id, batches):
         r = min(ctx.ratios[client_id], 1.0)

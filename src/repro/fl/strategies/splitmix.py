@@ -13,6 +13,7 @@ from __future__ import annotations
 import jax
 
 from repro.fl.baselines import SplitMixState, fedavg_local
+from repro.fl.comm.payload import WireSpec
 from repro.fl.registry import register
 from repro.fl.strategy import ClientResult, accuracy
 from repro.models import resnet
@@ -44,6 +45,32 @@ class SplitMixStrategy:
                                local_steps=ctx.sim.local_steps)
             trained.append((int(b_idx), new))
         return ClientResult(trained, float(ctx.sizes[client_id]))
+
+    # ------------------------------------------------- wire contract
+    def wire_parts(self, ctx, state, result):
+        """Each trained base net is delta-coded against the server's
+        copy; the base indices ride along uncompressed.  The rotating
+        subset means two rounds' wires can share structure (same
+        capacity) yet cover DIFFERENT base nets, so the wire is tagged
+        with the base ids — error feedback only re-applies a residual
+        under a matching tag, resetting instead of misapplying it."""
+        idxs = tuple(int(i) for i, _ in result.payload)
+        trees = [t for _, t in result.payload]
+        ref = [state.bases[i] for i in idxs]
+        return WireSpec(trees, ref=ref, tag=idxs,
+                        rebuild=lambda ts, _ix=idxs:
+                        [(i, t) for i, t in zip(_ix, ts)])
+
+    def downlink_tree(self, ctx, state, client_id):
+        """Downlink accounting: a capacity-``cap`` client downloads
+        ``cap`` base nets.  The subset identity is drawn inside
+        ``client_update`` (after the loader, to keep the shared rng
+        stream stable), so the first ``cap`` bases stand in — all bases
+        share one architecture, so the byte count is exact.  A
+        ``SplitMixState`` is not a pytree, so "full" mode also routes
+        through this hook rather than pricing the broadcast as zero."""
+        cap = state.capacity(min(float(ctx.ratios[client_id]), 1.0))
+        return state.bases[:cap]
 
     def aggregate(self, ctx, state, results):
         """Per-base uniform averaging over the clients that trained it

@@ -183,6 +183,34 @@ def tree_bytes(tree) -> int:
                if hasattr(leaf, "nbytes"))
 
 
+def wire_bytes(tree=None, *, codec=None, n_coords: Optional[int] = None,
+               itemsize: int = 4) -> int:
+    """THE one sizing rule for payload wire cost — strategy-side
+    ``comm_bytes`` and the engines' fallback sizing both route here.
+
+    * ``codec`` ``None``/``"none"``: raw float32 pricing.  With
+      ``n_coords`` (the active-coordinate count of a padded-sparse
+      carrier — HeteroFL prices its width slice, never the zero
+      padding): ``itemsize * n_coords``; else ``tree_bytes(tree)``.
+    * any other codec (name or instance): the codec's ``size_bytes``
+      accounting.  When a ``CommChannel`` is active the engines
+      OVERWRITE this estimate with the exact encoded
+      ``WirePayload.nbytes``, so the codec path only prices payloads
+      that never cross a channel.
+
+    Engine fallback contract (the single place it is documented): when a
+    strategy leaves ``ClientResult.comm_bytes=None``, both engines size
+    the upload as ``wire_bytes(result.payload)`` — i.e. raw float32
+    bytes of every array leaf.
+    """
+    if codec is not None and codec != "none":
+        from repro.fl.comm.codecs import get_codec
+        return get_codec(codec).size_bytes(tree, n_coords=n_coords)
+    if n_coords is not None:
+        return int(n_coords) * itemsize
+    return tree_bytes(tree)
+
+
 def accuracy(logits_fn: Callable, x, y, batch: int = 512) -> float:
     """Batched top-1 accuracy for any ``logits_fn(x) -> (B, C)``."""
     correct = 0

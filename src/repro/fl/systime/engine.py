@@ -34,11 +34,13 @@ from typing import Callable, List, Optional, Tuple, Union
 
 import numpy as np
 
+from repro.fl.comm import CommChannel
 from repro.fl.engine import (RoundRecord, apply_prefix_cache,
                              default_batch_fn, eval_state)
 from repro.fl.sampling import (ClientScheduler, CohortSampler,
                                UniformSampler, make_scheduler)
-from repro.fl.strategy import ClientResult, Context, FLStrategy, tree_bytes
+from repro.fl.strategy import (ClientResult, Context, FLStrategy,
+                               wire_bytes)
 from repro.fl.systime.availability import AvailabilityModel
 from repro.fl.systime.clock import EventLoop
 from repro.fl.systime.profiles import SystemModel, zero_latency_system
@@ -59,7 +61,10 @@ class AsyncEngine:
                  buffer_size: Optional[int] = None,
                  staleness_alpha: float = 0.5,
                  deadline_s: Optional[float] = None,
-                 prefix_cache: str = "on"):
+                 prefix_cache: str = "on",
+                 codec: Union[str, object, None] = "none",
+                 downlink: str = "full",
+                 channel: Optional[CommChannel] = None):
         if mode not in ("sync", "async"):
             raise ValueError(f"mode must be 'sync' or 'async', got {mode!r}")
         self.strategy = strategy
@@ -68,6 +73,10 @@ class AsyncEngine:
         # round engine exactly, cache and all (a differing knob gets a
         # shallow context copy, never a mutation of a shared context)
         self.ctx = apply_prefix_cache(ctx, prefix_cache)
+        # same wire knobs + defaults as RoundEngine: codec="none" is a
+        # strict no-op and link pricing reads the same encoded bytes the
+        # history reports — in BOTH directions (see docs/comm.md)
+        self.channel = channel or CommChannel(codec, downlink)
         self.system = system or zero_latency_system(ctx.num_clients)
         if len(self.system.profiles) != ctx.num_clients:
             raise ValueError(
@@ -109,8 +118,10 @@ class AsyncEngine:
 
     def _latency(self, client_id: int, result: ClientResult,
                  n_batches: int, download_bytes: int):
+        # encoded uplink when a channel ran; wire_bytes is the one
+        # documented fallback for strategies that left comm_bytes unset
         up = result.comm_bytes if result.comm_bytes is not None \
-            else tree_bytes(result.payload)
+            else wire_bytes(result.payload)
         # strategies that don't train the client's FeDepth decomposition
         # (fedavg's x min r subnet, heterofl's width slice, ...) declare
         # their actual compute via the optional client_work hook
@@ -130,7 +141,9 @@ class AsyncEngine:
         return eval_state(self.strategy, self.ctx, state, eval_fn)
 
     def _apply_async(self, state, buffered):
-        results = [r for r, _ in buffered]
+        # results travel encoded (WireUpdate payloads) and decode only
+        # here, at the aggregate boundary
+        results = [self.channel.decode_result(r) for r, _ in buffered]
         stale = [s for _, s in buffered]
         agg = getattr(self.strategy, "aggregate_async", None)
         if agg is not None:
@@ -171,12 +184,17 @@ class AsyncEngine:
         return self.ctx.rng.choice(avail, size=k, replace=False)
 
     def _run_sync(self, state, batch_fn, eval_fn, eval_every):
-        ctx = self.ctx
+        ctx, chan = self.ctx, self.channel
         history: List[RoundRecord] = []
-        t_last, bytes_acc = time.perf_counter(), 0
+        t_last, bytes_acc, down_acc = time.perf_counter(), 0, 0
         for rd in range(ctx.sim.rounds):
             cohort = [int(k) for k in self._sample_cohort(rd)]
-            down = tree_bytes(state)
+            # broadcast: per-client encoded downlink (full model, or the
+            # sliced/delta wire under the channel's downlink modes) —
+            # even a future deadline-misser pays for its download
+            downs = {k: chan.downlink_bytes(self.strategy, ctx, state, k)
+                     for k in cohort}
+            down_acc += sum(downs.values())
             # count what the loader ACTUALLY produced per client (a
             # custom batch_fn need not follow the |D_k|/B formula)
             n_drawn: dict = {}
@@ -190,16 +208,22 @@ class AsyncEngine:
             kept, totals = [], []
             for k, res in zip(cohort, results):
                 res.client_id = k
-                lat, up = self._latency(k, res, n_drawn.get(k, 1), down)
+                # delivery can still fail at the deadline below: snapshot
+                # the error-feedback residual so a discarded payload's
+                # transmitted mass is NOT dropped from it
+                ef_snap = chan.snapshot_uplink(k)
+                res = chan.encode_result(self.strategy, ctx, state, k, res)
+                lat, up = self._latency(k, res, n_drawn.get(k, 1), downs[k])
                 if self.deadline_s is not None \
                         and lat.total > self.deadline_s:
+                    chan.rollback_uplink(k, ef_snap)
                     # the miss is observed when the server gives up
                     self.trace.append(("miss",
                                        float(self.clock.now
                                              + self.deadline_s), k, rd,
                                        round(float(lat.total), 9)))
                     continue
-                kept.append(res)
+                kept.append(chan.decode_result(res))
                 totals.append(lat.total)
                 bytes_acc += up
                 # stamp the client's virtual COMPLETION time, matching
@@ -219,8 +243,9 @@ class AsyncEngine:
                 acc = self._eval(state, eval_fn)
                 now = time.perf_counter()
                 history.append(RoundRecord(rd + 1, acc, now - t_last,
-                                           bytes_acc, self.clock.now))
-                t_last, bytes_acc = now, 0
+                                           bytes_acc, self.clock.now,
+                                           down_acc))
+                t_last, bytes_acc, down_acc = now, 0, 0
         return state, history
 
     # ------------------------------------------------------------ async mode
@@ -249,12 +274,19 @@ class AsyncEngine:
             if free.size == 0:
                 return False
         k = int(self.ctx.rng.choice(free))
+        down = self.channel.downlink_bytes(self.strategy, self.ctx, state, k)
+        self._down_acc += down
         batches = batch_fn(k)
         # the client trains on the CURRENT state — an eager snapshot; the
         # result just doesn't merge until its finish event fires
         res = self.strategy.client_update(self.ctx, state, k, batches)
         res.client_id = k
-        lat, up = self._latency(k, res, len(batches), tree_bytes(state))
+        # encode against the snapshot: the WireUpdate carries that very
+        # reference, so the server decodes correctly however many
+        # versions land before this result does
+        res = self.channel.encode_result(self.strategy, self.ctx, state,
+                                         k, res)
+        lat, up = self._latency(k, res, len(batches), down)
         running.add(k)
         self.clock.schedule(lat.total, "finish", client=k,
                             payload=(res, version, up))
@@ -270,6 +302,7 @@ class AsyncEngine:
         running: set = set()
         buffered: List[tuple] = []
         t_last, bytes_acc = time.perf_counter(), 0
+        self._down_acc = 0              # downlink accrues at dispatch time
         for _ in range(self.concurrency):
             self._dispatch(state, version, running, batch_fn)
         if not running:   # nobody reachable at t=0: force one start
@@ -293,8 +326,10 @@ class AsyncEngine:
                     acc = self._eval(state, eval_fn)
                     now = time.perf_counter()
                     history.append(RoundRecord(version, acc, now - t_last,
-                                               bytes_acc, self.clock.now))
+                                               bytes_acc, self.clock.now,
+                                               self._down_acc))
                     t_last, bytes_acc = now, 0
+                    self._down_acc = 0
             if version < ctx.sim.rounds:
                 self._dispatch(state, version, running, batch_fn)
                 if not running and not len(self.clock):
@@ -306,5 +341,7 @@ class AsyncEngine:
             acc = self._eval(state, eval_fn)
             now = time.perf_counter()
             history.append(RoundRecord(version, acc, now - t_last,
-                                       bytes_acc, self.clock.now))
+                                       bytes_acc, self.clock.now,
+                                       self._down_acc))
+            self._down_acc = 0
         return state, history

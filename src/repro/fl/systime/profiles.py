@@ -9,7 +9,10 @@ combines them with the analytic memory model's per-unit FLOP counts
 upload seconds for exactly the FeDepth blocks the client trains.
 
 Compute time is a roofline max: ``max(FLOPs / flops, traffic / mem_bw)``
-— tiny devices are usually FLOP-bound, wide ones bandwidth-bound.  The
+— tiny devices are usually FLOP-bound, wide ones bandwidth-bound.  Link
+time is priced from the ENCODED wire sizes the comm channel reports
+(``repro.fl.comm``): compressed uplinks and sliced/delta downlinks
+shorten exactly the seconds their byte savings imply.  The
 depth-wise schedule is priced like ``core.blockwise`` executes it
 (``ctx.prefix_cache`` selects the contract): with the prefix cache on —
 the default — ONE buffered incremental prefix forward per distinct
@@ -222,6 +225,14 @@ class SystemModel:
                 download_bytes: int, n_batches: int,
                 work=None, prefix_stable: Optional[bool] = None) -> Latency:
         """Price one client-round for ``client_id``.
+
+        ``upload_bytes`` / ``download_bytes`` are the TRUE wire sizes in
+        each direction: the engines pass the encoded
+        ``WirePayload.nbytes`` of the client's (codec + error-feedback)
+        upload and the channel's downlink accounting (full broadcast,
+        depth/width slice, or changed-coordinate delta — see
+        ``docs/comm.md``), so link seconds track exactly the bytes the
+        history reports.
 
         ``work`` selects the compute workload: a ``Decomposition`` prices
         the depth-wise schedule, a float width ratio prices a sliced

@@ -30,7 +30,7 @@ def test_table1_width_vs_depth_relation():
     """Paper claim: a x1/6-width budget trains the full net depth-wise
     (with the paper's own ~10% slack)."""
     mem = resnet_memory(RN20, batch=128)
-    from repro.fl.simulate import BUDGET_SLACK
+    from repro.fl.engine import BUDGET_SLACK
     budget = int(width_equivalent_budget(mem, 1 / 6) * BUDGET_SLACK)
     dec = decompose(mem, budget)
     assert dec.covers_all(len(mem.units))

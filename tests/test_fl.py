@@ -9,8 +9,18 @@ import pytest
 from repro.configs.preresnet20 import CONFIG as RN20, reduced as rn_reduced
 from repro.fl import baselines, width as width_util
 from repro.fl.data import build_federated, dirichlet_partition
-from repro.fl.simulate import SimConfig, client_ratios, run_experiment
+from repro.fl.engine import (RoundEngine, SimConfig, build_context,
+                             client_ratios)
+from repro.fl.registry import get_strategy
 from repro.models import resnet
+
+
+def _run_experiment(method, data, sim, *, model_cfg, eval_every=5):
+    """The engine-API equivalent of the removed run_experiment shim."""
+    engine = RoundEngine(get_strategy(method),
+                         build_context(data, sim, model_cfg=model_cfg))
+    _, hist = engine.run(eval_every=eval_every)
+    return hist[-1].accuracy, hist
 
 
 @pytest.fixture(scope="module")
@@ -85,8 +95,8 @@ def test_depthfl_budget_to_depth_monotone():
 def test_run_experiment_smoke(method, tiny_data, tiny_cfg):
     sim = SimConfig(rounds=2, participation=0.5, lr=0.05, local_steps=1,
                     batch_size=32, scenario="fair", seed=0)
-    acc, hist = run_experiment(method, tiny_data, sim, model_cfg=tiny_cfg,
-                               eval_every=2)
+    acc, hist = _run_experiment(method, tiny_data, sim, model_cfg=tiny_cfg,
+                                eval_every=2)
     assert 0.0 <= acc <= 1.0
     assert len(hist) >= 1
 
@@ -102,8 +112,8 @@ def test_fedepth_learns_above_chance(tiny_data, tiny_cfg):
     # three evals (rounds 8/10/12 -> 0.23), well clear of chance 0.10.
     sim = SimConfig(rounds=12, participation=0.5, lr=0.08, local_steps=2,
                     batch_size=64, scenario="fair", seed=0)
-    _, hist = run_experiment("fedepth", tiny_data, sim, model_cfg=tiny_cfg,
-                             eval_every=2)
+    _, hist = _run_experiment("fedepth", tiny_data, sim,
+                              model_cfg=tiny_cfg, eval_every=2)
     tail = [rec.accuracy for rec in hist[-3:]]
     assert sum(tail) / len(tail) > 0.15  # 10 classes -> chance is 0.10
 
@@ -114,6 +124,6 @@ def test_fedepth_robust_to_scenarios(tiny_data, tiny_cfg):
     for scen in ("fair", "lack", "surplus"):
         sim = SimConfig(rounds=1, participation=0.5, lr=0.05, local_steps=1,
                         batch_size=32, scenario=scen, seed=0)
-        acc, _ = run_experiment("m-fedepth", tiny_data, sim,
-                                model_cfg=tiny_cfg, eval_every=1)
+        acc, _ = _run_experiment("m-fedepth", tiny_data, sim,
+                                 model_cfg=tiny_cfg, eval_every=1)
         assert 0.0 <= acc <= 1.0

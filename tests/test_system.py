@@ -23,7 +23,9 @@ from repro.core import aggregation, blockwise
 from repro.core.decomposition import decompose, width_equivalent_budget
 from repro.core.memory_model import resnet_memory
 from repro.fl.data import build_federated
-from repro.fl.simulate import BUDGET_SLACK, SimConfig, run_experiment
+from repro.fl.engine import (BUDGET_SLACK, RoundEngine, SimConfig,
+                             build_context)
+from repro.fl.registry import get_strategy
 from repro.models import build, resnet
 
 
@@ -58,9 +60,10 @@ def test_paper_claim_chain_small():
                            n_test=300, image_size=16, seed=0)
     sim = SimConfig(rounds=10, participation=0.5, lr=0.08, local_steps=2,
                     batch_size=64, scenario="fair", seed=0)
-    acc, _ = run_experiment("fedepth", data, sim, model_cfg=cfg,
-                            eval_every=10)
-    assert acc > 0.25
+    engine = RoundEngine(get_strategy("fedepth"),
+                         build_context(data, sim, model_cfg=cfg))
+    _, hist = engine.run(eval_every=10)
+    assert hist[-1].accuracy > 0.25
 
 
 def test_client_dropout_robustness():

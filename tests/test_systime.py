@@ -1,8 +1,6 @@
 """System-time subsystem: profiles/latency pricing, the event loop,
 staleness rules, sync-equivalence vs RoundEngine, deadline stragglers,
 determinism, and the deprecation satellite."""
-import warnings
-
 import numpy as np
 import pytest
 
@@ -422,10 +420,12 @@ def test_client_ratios_seeded_shuffle_keeps_multiset():
 
 
 # ------------------------------------------------------------- deprecation
-def test_run_experiment_warns_deprecation():
-    from repro.fl.simulate import run_experiment
-    data = _data(4)
-    sim = SimConfig(rounds=1, participation=0.5, lr=0.05, local_steps=1,
-                    batch_size=32, scenario="fair", seed=0)
-    with pytest.warns(DeprecationWarning, match="RoundEngine"):
-        run_experiment("fedavg", data, sim, model_cfg=CFG, eval_every=1)
+def test_run_experiment_shim_removed():
+    """The deprecated fl/simulate.py shim is gone: callers use
+    RoundEngine(get_strategy(m), build_context(...)) directly."""
+    import importlib
+
+    import repro.fl
+    assert not hasattr(repro.fl, "run_experiment")
+    with pytest.raises(ImportError):
+        importlib.import_module("repro.fl.simulate")
