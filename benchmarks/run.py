@@ -10,7 +10,7 @@ import traceback
 
 from benchmarks import (async_sim, comm, fig5_partial_training,
                         fig7_vit_finetune, kernel_microbench, prefix_cache,
-                        roofline_report, round_engine, table1_memory,
+                        roofline_report, round_engine, scale, table1_memory,
                         table2_budget_scenarios, table3_unbalanced)
 
 BENCHES = {
@@ -25,6 +25,7 @@ BENCHES = {
     "async_sim": async_sim.main,
     "prefix_cache": prefix_cache.main,
     "comm": comm.main,
+    "scale": scale.main,
 }
 
 

@@ -722,6 +722,28 @@ def make_group_update(runner: BlockRunner, blocks, *, lr: float,
     return jax.jit(jax.vmap(one_client), donate_argnums=donate(0))
 
 
+def group_update_for(runner: BlockRunner, dec: Decomposition, *,
+                     lr: float = 0.1, momentum: float = 0.9,
+                     local_steps: int = 1, prox_mu: float = 0.0,
+                     step_cache: Optional[dict] = None,
+                     prefix_cache: bool = True):
+    """The cached jitted group update for one decomposition — the exact
+    callable :func:`client_update_batched` dispatches, exposed so mesh
+    executors (``fl.scale.executor.ShardedScheduler``) can wrap the SAME
+    compiled function in ``shard_map`` instead of rebuilding it (one
+    cache key, one compile, identical lanes on every path)."""
+    step_cache = step_cache if step_cache is not None else {}
+    key = (dec.blocks, lr, momentum, local_steps, prox_mu,
+           bool(prefix_cache))
+    if key not in step_cache:
+        step_cache[key] = make_group_update(runner, dec.blocks, lr=lr,
+                                            momentum=momentum,
+                                            local_steps=local_steps,
+                                            prox_mu=prox_mu,
+                                            prefix_cache=bool(prefix_cache))
+    return step_cache[key]
+
+
 def client_update_batched(runner: BlockRunner, params, dec: Decomposition,
                           batches_per_client, *, lr: float = 0.1,
                           momentum: float = 0.9, local_steps: int = 1,
@@ -741,16 +763,11 @@ def client_update_batched(runner: BlockRunner, params, dec: Decomposition,
     :func:`client_update`; the donated stacked-params input is always a
     fresh broadcast buffer, never the caller's tree.
     """
-    step_cache = step_cache if step_cache is not None else {}
-    key = (dec.blocks, lr, momentum, local_steps, prox_mu,
-           bool(prefix_cache))
-    if key not in step_cache:
-        step_cache[key] = make_group_update(runner, dec.blocks, lr=lr,
-                                            momentum=momentum,
-                                            local_steps=local_steps,
-                                            prox_mu=prox_mu,
-                                            prefix_cache=bool(prefix_cache))
+    update = group_update_for(runner, dec, lr=lr, momentum=momentum,
+                              local_steps=local_steps, prox_mu=prox_mu,
+                              step_cache=step_cache,
+                              prefix_cache=prefix_cache)
     group = len(batches_per_client)
-    out = step_cache[key](broadcast_tree(params, group),
-                          stack_batches(batches_per_client))
+    out = update(broadcast_tree(params, group),
+                 stack_batches(batches_per_client))
     return unstack_tree(out, group)

@@ -36,10 +36,20 @@ from repro.fl.comm.codecs import _is_float_array, trees_congruent
 class ErrorFeedback:
     """Per-client residual store.  ``correct`` adds the residual into an
     outgoing update, ``update`` records what the codec just failed to
-    transmit; both are no-ops for exact codecs (zero residual)."""
+    transmit; both are no-ops for exact codecs (zero residual).
 
-    def __init__(self):
-        self._residuals: Dict[int, tuple] = {}   # id -> (tag, residual)
+    ``store`` (any ``repro.fl.scale.state_store.ClientStateStore``; a
+    plain dict is one) replaces the default in-memory residual map.
+    With a bounded ``SpillStore`` the residuals stop growing
+    O(population) as cohorts rotate through millions of clients: cold
+    residuals spill to disk and reload transparently on the client's
+    next participation (entry keys stay ``client_id ->
+    (WireSpec.tag, residual)`` — the tag must travel WITH the residual
+    so the same-coordinates check survives a spill/load cycle)."""
+
+    def __init__(self, store=None):
+        # id -> (tag, residual); a dict satisfies the store protocol
+        self._residuals = store if store is not None else {}
 
     def residual(self, client_id: int):
         entry = self._residuals.get(client_id)

@@ -134,14 +134,28 @@ class CommChannel:
     and route every byte they report through it."""
 
     def __init__(self, codec: Union[str, Codec, None] = "none",
-                 downlink: str = "full", *, error_feedback: bool = True):
+                 downlink: str = "full", *, error_feedback: bool = True,
+                 state_store=None):
+        """``state_store`` (a ``repro.fl.scale.state_store``
+        ClientStateStore, e.g. a bounded ``SpillStore``) backs BOTH
+        per-client maps the channel keeps — error-feedback residuals
+        and the delta-downlink last-seen tracker — under ``"ef"`` /
+        ``"downlink"`` namespaces of the one store, so channel-side
+        resident memory is O(cohort) at population scale (docs/scale.md
+        §State store).  Default ``None`` keeps plain dicts."""
         self.codec = get_codec(codec)
         if downlink not in DOWNLINK_MODES:
             raise ValueError(f"downlink must be one of {DOWNLINK_MODES}, "
                              f"got {downlink!r}")
         self.downlink = downlink
-        self.ef = ErrorFeedback() if error_feedback else None
-        self._last_sent: Dict[int, Any] = {}    # client -> last-seen tree
+        if state_store is not None:
+            from repro.fl.scale.state_store import PrefixedStore
+            self.ef = ErrorFeedback(PrefixedStore(state_store, "ef")) \
+                if error_feedback else None
+            self._last_sent = PrefixedStore(state_store, "downlink")
+        else:
+            self.ef = ErrorFeedback() if error_feedback else None
+            self._last_sent: Dict[int, Any] = {}   # client -> last-seen
 
     # -------------------------------------------------------------- uplink
     def encode_result(self, strategy, ctx, state, client_id: int, result):

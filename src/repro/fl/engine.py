@@ -112,9 +112,19 @@ def scenario_budgets(mem, ratios) -> np.ndarray:
 
 
 def build_context(data, sim: SimConfig, *,
-                  model_cfg: Optional[ResNetConfig] = None) -> Context:
+                  model_cfg: Optional[ResNetConfig] = None,
+                  population=None) -> Context:
     """Precompute the per-experiment context for the paper's image
-    protocol: ratios, byte budgets, FeDepth decompositions, MKD flags."""
+    protocol: ratios, byte budgets, FeDepth decompositions, MKD flags.
+
+    With ``population=`` (a ``repro.fl.scale.population.Population``),
+    the per-client arrays become LAZY hash-drawn views and ``data`` may
+    be ``None`` (synthesized on demand) — nothing O(num_clients) is
+    materialized; see docs/scale.md."""
+    if population is not None:
+        from repro.fl.scale.population import population_context
+        return population_context(population, sim, model_cfg=model_cfg,
+                                  data=data)
     num_clients = len(data.client_indices)
     cfg = model_cfg or ResNetConfig(num_classes=data.num_classes,
                                     image_size=data.x.shape[1])
@@ -188,7 +198,8 @@ class RoundEngine:
                  prefix_cache: str = "on",
                  codec: Union[str, object, None] = "none",
                  downlink: str = "full",
-                 channel: Optional[CommChannel] = None):
+                 channel: Optional[CommChannel] = None,
+                 history_sink=None):
         """``scheduler`` is an instance or a name from
         ``repro.fl.sampling.SCHEDULERS`` ("sequential" — the default — or
         "vectorized").  The vectorized scheduler stacks clients that share
@@ -212,12 +223,19 @@ class RoundEngine:
         ``codec="none"`` (default) is a strict no-op that reproduces the
         channel-free engine bitwise.  Pass a prebuilt ``channel`` to
         share/ablate one (e.g. ``CommChannel(error_feedback=False)``);
-        it wins over the two knobs.  See docs/comm.md."""
+        it wins over the two knobs.  See docs/comm.md.
+
+        ``history_sink`` (e.g. ``repro.fl.scale.JsonlHistorySink``)
+        streams each :class:`RoundRecord` to disk as it is produced
+        instead of accumulating the in-memory list; ``run`` then
+        returns an empty history (the stream IS the history).  Default
+        ``None`` keeps today's list behavior."""
         self.strategy = strategy
         self.ctx = apply_prefix_cache(ctx, prefix_cache)
         self.sampler = sampler or UniformSampler()
         self.scheduler = make_scheduler(scheduler)
         self.channel = channel or CommChannel(codec, downlink)
+        self.history_sink = history_sink
 
     # ------------------------------------------------------------------
     def default_batch_fn(self) -> Callable[[int], list]:
@@ -234,6 +252,19 @@ class RoundEngine:
         cohort = self.sampler.sample(ctx, round_idx)
         down = sum(chan.downlink_bytes(self.strategy, ctx, state, int(k))
                    for k in cohort)
+        # fused on-mesh execution+aggregation (ShardedScheduler with
+        # aggregate="mesh"): only under the strict no-op codec — a lossy
+        # channel needs per-client payloads on the host for
+        # encode/error-feedback, the very round trip fusion removes.
+        # NotImplemented falls through to the standard path (probed
+        # before any batch is drawn, so the rng stream never double-
+        # advances).
+        fused = getattr(self.scheduler, "run_fused", None)
+        if fused is not None and chan.codec.name == "none":
+            out = fused(ctx, self.strategy, state, cohort, batch_fn)
+            if out is not NotImplemented:
+                new_state, comm = out
+                return new_state, comm, down
         results = self.scheduler.run(ctx, self.strategy, state,
                                      cohort, batch_fn)
         results = [chan.encode_result(self.strategy, ctx, state, int(k), r)
@@ -260,7 +291,11 @@ class RoundEngine:
         the record is still appended with ``accuracy=None``, so
         ``seconds`` / ``comm_bytes`` accounting is complete and
         ``history[-1]`` always covers round ``sim.rounds``.  ``seconds``
-        and ``comm_bytes`` accumulate since the previous record."""
+        and ``comm_bytes`` accumulate since the previous record.
+
+        With a ``history_sink``, each record streams to the sink as it
+        is produced and the returned history list stays EMPTY — bounded
+        memory however many rounds run (docs/scale.md §History)."""
         ctx = self.ctx
         setup = getattr(self.strategy, "setup", None)
         if setup is not None:
@@ -278,7 +313,11 @@ class RoundEngine:
                 # eval_state keeps the record even with no eval source
                 acc = eval_state(self.strategy, ctx, state, eval_fn)
                 now = time.perf_counter()
-                history.append(RoundRecord(rd + 1, acc, now - t_last,
-                                           bytes_acc, 0.0, down_acc))
+                rec = RoundRecord(rd + 1, acc, now - t_last,
+                                  bytes_acc, 0.0, down_acc)
+                if self.history_sink is not None:
+                    self.history_sink.write(rec)
+                else:
+                    history.append(rec)
                 t_last, bytes_acc, down_acc = now, 0, 0
         return state, history

@@ -154,20 +154,31 @@ class VectorizedScheduler:
         return results
 
 
+# "module:Class" string entries resolve lazily in make_scheduler — the
+# sharded scheduler lives in fl/scale (which imports this module), so a
+# direct class reference here would be a circular import
 SCHEDULERS = {
     "sequential": SequentialScheduler,
     "vectorized": VectorizedScheduler,
+    "sharded": "repro.fl.scale.executor:ShardedScheduler",
 }
 
 
 def make_scheduler(spec=None) -> ClientScheduler:
     """Resolve a scheduler spec: ``None`` -> sequential default, a name
-    from ``SCHEDULERS``, or a ready instance passed through."""
+    from ``SCHEDULERS`` ("sequential", "vectorized", "sharded"), or a
+    ready instance passed through."""
     if spec is None:
         return SequentialScheduler()
     if isinstance(spec, str):
         if spec not in SCHEDULERS:
             raise ValueError(f"unknown scheduler {spec!r}; "
                              f"available: {sorted(SCHEDULERS)}")
-        return SCHEDULERS[spec]()
+        entry = SCHEDULERS[spec]
+        if isinstance(entry, str):
+            import importlib
+            mod, _, cls = entry.partition(":")
+            entry = getattr(importlib.import_module(mod), cls)
+            SCHEDULERS[spec] = entry
+        return entry()
     return spec

@@ -1,0 +1,41 @@
+"""Population-scale sharded cohort execution (docs/scale.md).
+
+Three pieces, composable with everything that already exists:
+
+* :mod:`~repro.fl.scale.executor` — ``ShardedScheduler``, a peer of
+  ``VectorizedScheduler`` behind the same ``RoundEngine(scheduler=...)``
+  knob: each cohort group's stacked update is partitioned across the
+  mesh's ``"data"`` axis with ``shard_map``, and (opt-in) the masked
+  depth-wise aggregation runs ON-MESH via a ``psum`` of
+  (masked-sum, count) partials so aggregated params never round-trip
+  through the host.
+* :mod:`~repro.fl.scale.state_store` — the ``ClientStateStore``
+  protocol with ``InMemoryStore`` and ``SpillStore`` (LRU-bounded hot
+  set, msgpack/np spill-to-disk) backing error-feedback residuals,
+  downlink trackers, availability phases, and async in-flight
+  snapshots: resident per-client state is O(cohort), not O(population).
+* :mod:`~repro.fl.scale.population` — trace-driven population specs:
+  per-client ratio / size / profile / availability drawn lazily from a
+  seeded counter-based hash, never materializing N dicts; wired through
+  ``build_context(..., population=)`` and both engines.
+
+``history`` adds the JSONL ``RoundRecord``/trace sink both engines
+accept via ``history_sink=``.
+"""
+from repro.fl.scale.executor import (ShardedScheduler, mesh_aggregate_masked,
+                                     psum_masked_partials)
+from repro.fl.scale.history import JsonlHistorySink
+from repro.fl.scale.population import (HashedDutyCycle, Population,
+                                       PopulationData, PopulationSampler,
+                                       population_context,
+                                       population_system)
+from repro.fl.scale.state_store import (ClientStateStore, InMemoryStore,
+                                        PrefixedStore, SpillStore)
+
+__all__ = [
+    "ShardedScheduler", "mesh_aggregate_masked", "psum_masked_partials",
+    "JsonlHistorySink",
+    "Population", "PopulationData", "PopulationSampler", "HashedDutyCycle",
+    "population_context", "population_system",
+    "ClientStateStore", "InMemoryStore", "SpillStore", "PrefixedStore",
+]

@@ -1,0 +1,75 @@
+"""Streaming history sinks (docs/scale.md §History).
+
+Both engines historically ACCUMULATE: ``RoundEngine.run`` appends one
+``RoundRecord`` per eval checkpoint to a list, and the systime
+``AsyncEngine`` additionally grows an unbounded per-event trace — at a
+million simulated rounds/events that is real host memory
+(ROADMAP "unbounded history growth").  A history sink replaces the
+lists with an append-only JSONL stream: ``write(record)`` for round
+records, ``write_trace(event)`` for systime trace tuples, one JSON
+object per line, flushed per record so a crashed run keeps its history.
+
+Both engines accept ``history_sink=``; the default (``None``) keeps the
+in-memory lists bitwise-unchanged.  When a sink is set, ``run()``
+returns an EMPTY history list — the stream is the history.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import IO, Optional, Union
+
+
+class JsonlHistorySink:
+    """JSONL writer for ``RoundRecord`` streams and systime traces.
+
+    Records become ``{"kind": "round", ...fields}`` lines; trace events
+    (heterogeneous tuples like ``("dispatch", t, client)``) become
+    ``{"kind": "trace", "event": [...]}``.  Accepts a path (parent dirs
+    created, file truncated) or an open text handle (left open on
+    ``close`` — the caller owns it)."""
+
+    def __init__(self, path_or_file: Union[str, os.PathLike, IO[str]]):
+        if hasattr(path_or_file, "write"):
+            self._f: Optional[IO[str]] = path_or_file
+            self._owns = False
+            self.path = getattr(path_or_file, "name", None)
+        else:
+            self.path = os.fspath(path_or_file)
+            parent = os.path.dirname(self.path)
+            if parent:
+                os.makedirs(parent, exist_ok=True)
+            self._f = open(self.path, "w")
+            self._owns = True
+        self.records = 0
+        self.traces = 0
+
+    def _emit(self, obj: dict) -> None:
+        if self._f is None:
+            raise ValueError("history sink is closed")
+        self._f.write(json.dumps(obj) + "\n")
+        self._f.flush()
+
+    def write(self, record) -> None:
+        """Stream one ``RoundRecord`` (any NamedTuple with ``_asdict``,
+        or a plain dict)."""
+        fields = record._asdict() if hasattr(record, "_asdict") \
+            else dict(record)
+        self._emit({"kind": "round", **fields})
+        self.records += 1
+
+    def write_trace(self, event) -> None:
+        """Stream one systime trace event (a plain tuple)."""
+        self._emit({"kind": "trace", "event": list(event)})
+        self.traces += 1
+
+    def close(self) -> None:
+        if self._f is not None and self._owns:
+            self._f.close()
+        self._f = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

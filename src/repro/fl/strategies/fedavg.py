@@ -51,8 +51,23 @@ class FedAvgStrategy:
         locals_ = fedavg_local_batched(
             self.sub_cfg, state, batches_per_client, lr=ctx.sim.lr,
             momentum=ctx.sim.momentum, local_steps=ctx.sim.local_steps)
+        return self.group_results(ctx, state, client_ids, locals_)
+
+    # --------------------------------------------- shardable capability
+    def group_update_fn(self, ctx, client_ids):
+        """The lru-cached jitted full-model group SGD — the callable
+        ``fedavg_local_batched`` dispatches, exposed for mesh executors
+        (``ShardableFLStrategy``)."""
+        from repro.fl.baselines import fedavg_group_update
+        return fedavg_group_update(self.sub_cfg, ctx.sim.lr,
+                                   ctx.sim.momentum, ctx.sim.local_steps)
+
+    def group_results(self, ctx, state, client_ids, locals_):
         return [ClientResult(local, float(ctx.sizes[cid]))
                 for cid, local in zip(client_ids, locals_)]
+
+    def group_mask(self, ctx, state, client_id):
+        return None        # plain FedAvg aggregation, no per-leaf masks
 
     def aggregate(self, ctx, state, results):
         return aggregation.fedavg([r.payload for r in results],

@@ -98,15 +98,32 @@ class FedepthStrategy:
         """One vmap+scan dispatch for the whole group (partial-training
         prefix skips and aux heads ride along: both live in the shared
         decomposition / param tree, not in per-client control flow)."""
-        dec = ctx.decomps[client_ids[0]]
-        locals_ = blockwise.client_update_batched(
-            self.runner, state, dec, batches_per_client, lr=ctx.sim.lr,
+        update = self.group_update_fn(ctx, client_ids)
+        group = len(batches_per_client)
+        locals_ = blockwise.unstack_tree(
+            update(blockwise.broadcast_tree(state, group),
+                   blockwise.stack_batches(batches_per_client)), group)
+        return self.group_results(ctx, state, client_ids, locals_)
+
+    # --------------------------------------------- shardable capability
+    def group_update_fn(self, ctx, client_ids):
+        """The cached jitted group update for this group's shared
+        decomposition — the same callable ``client_update_batched``
+        dispatches, handed to mesh executors for ``shard_map`` wrapping
+        (``ShardableFLStrategy``)."""
+        return blockwise.group_update_for(
+            self.runner, ctx.decomps[client_ids[0]], lr=ctx.sim.lr,
             momentum=ctx.sim.momentum, local_steps=ctx.sim.local_steps,
             prox_mu=self.prox_mu,
             step_cache=ctx.caches.setdefault("fedepth_group_step", {}),
             prefix_cache=ctx.prefix_cache)
-        mask = aggregation.trained_mask_for(state, dec, self.runner) \
-            if self.masked_aggregation else None
+
+    def group_results(self, ctx, state, client_ids, locals_):
+        """Result shaping for a group's updated trees (the other half of
+        ``client_update_batched``): weight ~ |D_k|; under masked
+        aggregation the shared trained-mask rides in the payload and the
+        wire is priced as the trained model alone."""
+        mask = self.group_mask(ctx, state, client_ids[0])
         results = []
         for cid, local in zip(client_ids, locals_):
             res = ClientResult(local, float(ctx.sizes[cid]))
@@ -115,6 +132,20 @@ class FedepthStrategy:
                 res.comm_bytes = wire_bytes(local)
             results.append(res)
         return results
+
+    def group_mask(self, ctx, state, client_id):
+        """Trained-mask for the client's decomposition under masked
+        aggregation (cached per decomposition signature — the mask
+        depends only on it), ``None`` when aggregating unmasked."""
+        if not self.masked_aggregation:
+            return None
+        dec = ctx.decomps[client_id]
+        cache = ctx.caches.setdefault("fedepth_group_masks", {})
+        key = (dec.blocks, dec.skipped_prefix)
+        if key not in cache:
+            cache[key] = aggregation.trained_mask_for(state, dec,
+                                                      self.runner)
+        return cache[key]
 
     # ------------------------------------------------- wire contract
     def wire_parts(self, ctx, state, result):

@@ -151,6 +151,45 @@ class BatchableFLStrategy(FLStrategy, Protocol):
 
 
 @runtime_checkable
+class ShardableFLStrategy(BatchableFLStrategy, Protocol):
+    """Optional capability: mesh-shardable group updates.
+
+    A batchable strategy that ALSO exposes its compiled group update as
+    a first-class function can be driven by
+    ``repro.fl.scale.executor.ShardedScheduler``, which wraps that very
+    function in ``shard_map`` over the mesh's ``"data"`` axis — the
+    stacked client dimension partitions across devices while each
+    device runs the identical per-lane computation.  Strategies without
+    these hooks are delegated to the vectorized scheduler wholesale.
+    """
+
+    def group_update_fn(self, ctx: Context,
+                        client_ids: Sequence[int]) -> Callable:
+        """The cached jitted ``(stacked_params, stacked_batches) ->
+        stacked_locals`` update this group runs — the SAME callable
+        ``client_update_batched`` dispatches (one cache, one compile),
+        valid for any group sharing ``client_group_key``."""
+        ...
+
+    def group_results(self, ctx: Context, state: Any,
+                      client_ids: Sequence[int],
+                      locals_: Sequence) -> List["ClientResult"]:
+        """Wrap per-client updated trees into ``ClientResult``s, in
+        ``client_ids`` order — the result-shaping half of
+        ``client_update_batched``, split out so an executor that ran
+        ``group_update_fn`` itself produces identical results."""
+        ...
+
+    def group_mask(self, ctx: Context, state: Any, client_id: int):
+        """The trained-mask pytree a masked aggregation would use for
+        this client (shared across a ``client_group_key`` group), or
+        ``None`` when the strategy aggregates unmasked.  Lets on-mesh
+        aggregation fold (masked-sum, count) partials without the
+        per-client payloads ever reaching the host."""
+        ...
+
+
+@runtime_checkable
 class AsyncFLStrategy(FLStrategy, Protocol):
     """Optional capability: staleness-aware asynchronous aggregation.
 

@@ -64,7 +64,8 @@ class AsyncEngine:
                  prefix_cache: str = "on",
                  codec: Union[str, object, None] = "none",
                  downlink: str = "full",
-                 channel: Optional[CommChannel] = None):
+                 channel: Optional[CommChannel] = None,
+                 history_sink=None, state_store=None):
         if mode not in ("sync", "async"):
             raise ValueError(f"mode must be 'sync' or 'async', got {mode!r}")
         self.strategy = strategy
@@ -108,7 +109,29 @@ class AsyncEngine:
         self.staleness_alpha = float(staleness_alpha)
         self.deadline_s = deadline_s
         self.clock = EventLoop()
+        # ``history_sink`` streams RoundRecords AND the event trace to
+        # disk (JsonlHistorySink) instead of growing the two in-memory
+        # lists; ``state_store`` (a ClientStateStore, e.g. a bounded
+        # SpillStore) parks async in-flight result snapshots so at most
+        # its hot capacity stays resident however high the concurrency —
+        # both default off (docs/scale.md).
+        self.history_sink = history_sink
+        self.state_store = state_store
+        self._inflight_seq = 0
         self.trace: List[tuple] = []
+
+    def _trace(self, event: tuple) -> None:
+        if self.history_sink is not None \
+                and hasattr(self.history_sink, "write_trace"):
+            self.history_sink.write_trace(event)
+        else:
+            self.trace.append(event)
+
+    def _record(self, history: List[RoundRecord], rec: RoundRecord) -> None:
+        if self.history_sink is not None:
+            self.history_sink.write(rec)
+        else:
+            history.append(rec)
 
     # ------------------------------------------------------------- helpers
     def default_batch_fn(self) -> Callable[[int], list]:
@@ -218,7 +241,7 @@ class AsyncEngine:
                         and lat.total > self.deadline_s:
                     chan.rollback_uplink(k, ef_snap)
                     # the miss is observed when the server gives up
-                    self.trace.append(("miss",
+                    self._trace(("miss",
                                        float(self.clock.now
                                              + self.deadline_s), k, rd,
                                        round(float(lat.total), 9)))
@@ -228,7 +251,7 @@ class AsyncEngine:
                 bytes_acc += up
                 # stamp the client's virtual COMPLETION time, matching
                 # async-mode finish semantics
-                self.trace.append(("finish",
+                self._trace(("finish",
                                    float(self.clock.now + lat.total), k,
                                    rd, round(float(lat.total), 9)))
             round_time = max(totals) if totals else 0.0
@@ -237,14 +260,15 @@ class AsyncEngine:
             self.clock.advance(round_time)
             if kept:
                 state = self.strategy.aggregate(ctx, state, kept)
-            self.trace.append(("aggregate", float(self.clock.now), -1, rd,
+            self._trace(("aggregate", float(self.clock.now), -1, rd,
                                len(kept)))
             if (rd + 1) % eval_every == 0 or rd == ctx.sim.rounds - 1:
                 acc = self._eval(state, eval_fn)
                 now = time.perf_counter()
-                history.append(RoundRecord(rd + 1, acc, now - t_last,
-                                           bytes_acc, self.clock.now,
-                                           down_acc))
+                self._record(history,
+                             RoundRecord(rd + 1, acc, now - t_last,
+                                         bytes_acc, self.clock.now,
+                                         down_acc))
                 t_last, bytes_acc, down_acc = now, 0, 0
         return state, history
 
@@ -288,9 +312,18 @@ class AsyncEngine:
                                          k, res)
         lat, up = self._latency(k, res, len(batches), down)
         running.add(k)
+        payload = (res, version, up)
+        if self.state_store is not None:
+            # park the in-flight snapshot in the store (a bounded
+            # SpillStore keeps at most its hot capacity resident); the
+            # clock event carries only the key
+            key = ("inflight", k, self._inflight_seq)
+            self._inflight_seq += 1
+            self.state_store[key] = payload
+            payload = key
         self.clock.schedule(lat.total, "finish", client=k,
-                            payload=(res, version, up))
-        self.trace.append(("dispatch_forced" if forced else "dispatch",
+                            payload=payload)
+        self._trace(("dispatch_forced" if forced else "dispatch",
                            float(self.clock.now), k, version,
                            round(float(lat.total), 9)))
         return True
@@ -309,25 +342,27 @@ class AsyncEngine:
             self._dispatch(state, version, running, batch_fn, force=True)
         while version < ctx.sim.rounds and len(self.clock):
             ev = self.clock.pop()
-            res, v0, up = ev.payload
+            res, v0, up = self.state_store.pop(ev.payload) \
+                if self.state_store is not None else ev.payload
             running.discard(ev.client)
             staleness = version - v0
             buffered.append((res, staleness))
             bytes_acc += up
-            self.trace.append(("finish", float(self.clock.now), ev.client, version,
+            self._trace(("finish", float(self.clock.now), ev.client, version,
                                staleness))
             if len(buffered) >= self.buffer_size:
                 state = self._apply_async(state, buffered)
                 version += 1
-                self.trace.append(("aggregate", float(self.clock.now), -1, version,
+                self._trace(("aggregate", float(self.clock.now), -1, version,
                                    len(buffered)))
                 buffered = []
                 if version % eval_every == 0 or version == ctx.sim.rounds:
                     acc = self._eval(state, eval_fn)
                     now = time.perf_counter()
-                    history.append(RoundRecord(version, acc, now - t_last,
-                                               bytes_acc, self.clock.now,
-                                               self._down_acc))
+                    self._record(history,
+                                 RoundRecord(version, acc, now - t_last,
+                                             bytes_acc, self.clock.now,
+                                             self._down_acc))
                     t_last, bytes_acc = now, 0
                     self._down_acc = 0
             if version < ctx.sim.rounds:
@@ -340,8 +375,9 @@ class AsyncEngine:
         if not history or history[-1].round != version:
             acc = self._eval(state, eval_fn)
             now = time.perf_counter()
-            history.append(RoundRecord(version, acc, now - t_last,
-                                       bytes_acc, self.clock.now,
-                                       self._down_acc))
+            self._record(history,
+                         RoundRecord(version, acc, now - t_last,
+                                     bytes_acc, self.clock.now,
+                                     self._down_acc))
             self._down_acc = 0
         return state, history

@@ -6,8 +6,19 @@ the "pod" axis is pure data parallelism over DCN.
 
 Functions, not module constants: importing this module never touches jax
 device state (the dry-run sets XLA_FLAGS before any jax init).
+
+**Import-order constraint** (the reason the module stays lazy): XLA
+reads ``XLA_FLAGS`` exactly once, when the jax backend initializes —
+i.e. at the first ``jax.devices()`` / array op anywhere in the process.
+:func:`force_host_device_count` therefore only works BEFORE that point;
+tests that need a multi-device CPU mesh run in a subprocess that calls
+it (or sets the flag in the environment) before importing anything that
+touches jax (see ``tests/conftest.py::multi_device_env`` and
+docs/scale.md §Testing on a forced mesh).
 """
 from __future__ import annotations
+
+import os
 
 import jax
 
@@ -23,6 +34,38 @@ def make_host_mesh(model_axis: int = 1):
     n = len(jax.devices())
     data = max(1, n // model_axis)
     return jax.make_mesh((data, model_axis), ("data", "model"))
+
+
+def make_data_mesh():
+    """1-D mesh over ALL visible devices, single axis ``"data"`` — the
+    client fan-out axis ``fl.scale.executor.ShardedScheduler`` shards
+    cohort groups over.  On an unforced CPU this is a 1-device mesh
+    (every sharded path degenerates to the vectorized one, bitwise)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
+def force_host_device_count(n: int) -> None:
+    """Make the CPU backend expose ``n`` devices, for testing sharded
+    paths without accelerators: appends
+    ``--xla_force_host_platform_device_count=n`` to ``XLA_FLAGS``.
+
+    MUST run before jax initializes its backend (see the module
+    docstring's import-order constraint) — raises ``RuntimeError`` if
+    devices are already live with a different count, since the flag
+    would silently not apply."""
+    flag = f"--xla_force_host_platform_device_count={int(n)}"
+    prev = os.environ.get("XLA_FLAGS", "")
+    if flag not in prev.split():
+        os.environ["XLA_FLAGS"] = (prev + " " + flag).strip()
+    import jax._src.xla_bridge as xla_bridge
+    if getattr(xla_bridge, "_backends", None):
+        if len(jax.devices()) != int(n):
+            raise RuntimeError(
+                f"jax already initialized with {len(jax.devices())} "
+                f"device(s); force_host_device_count({n}) must run before "
+                "any jax device access (set XLA_FLAGS in the environment "
+                "or call this first thing in the process)")
 
 
 def batch_axes(mesh) -> tuple:
