@@ -10,8 +10,9 @@ import traceback
 
 from benchmarks import (async_sim, comm, fig5_partial_training,
                         fig7_vit_finetune, kernel_microbench, prefix_cache,
-                        roofline_report, round_engine, scale, table1_memory,
-                        table2_budget_scenarios, table3_unbalanced)
+                        roofline_report, round_engine, scale, seq_fastpath,
+                        table1_memory, table2_budget_scenarios,
+                        table3_unbalanced)
 
 BENCHES = {
     "table1_memory": table1_memory.main,
@@ -20,6 +21,7 @@ BENCHES = {
     "fig5_partial_training": fig5_partial_training.main,
     "fig7_vit_finetune": fig7_vit_finetune.main,
     "kernel_microbench": kernel_microbench.main,
+    "seq_fastpath": seq_fastpath.main,
     "roofline_report": roofline_report.main,
     "round_engine": round_engine.main,
     "async_sim": async_sim.main,

@@ -1,0 +1,144 @@
+"""Sequence-model fast path: CPU-fallback timings + interpret-mode parity
+for the four kernels the mamba2/rwkv6/zamba2/moe runners dispatch through
+``kernels.ops`` (flash attention, WKV scan, SSD scan, chunked CE).
+
+Two row kinds in ``BENCH_seq_fastpath.json``:
+
+* ``timing`` — wall time of the CPU-fallback (``force="ref"``) path the
+  non-TPU engines execute, per kernel: the number that regresses if a
+  dispatch change silently de-jits or de-chunks a hot path;
+* ``parity`` — max |interpret - ref| over forward outputs AND gradients
+  (through the deployed custom_vjp backward), per kernel: the continuous
+  version of tests/test_kernel_diff.py, recorded so the artifact shows
+  kernel drift over time, not just pass/fail.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+from benchmarks.bench_lib import csv_row, write_json
+
+
+def _bench(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def _max_abs(tree_a, tree_b):
+    return max(float(jnp.abs(jnp.asarray(a, jnp.float32)
+                             - jnp.asarray(b, jnp.float32)).max())
+               for a, b in zip(jax.tree.leaves(tree_a),
+                               jax.tree.leaves(tree_b)))
+
+
+def _parity(f, args):
+    """(forward diff, grad diff) between interpret and ref dispatch."""
+    fwd = _max_abs(f("interpret", *args), f("ref", *args))
+    nums = tuple(range(len(args)))
+    g_i = jax.grad(lambda *a: jax.tree_util.tree_reduce(
+        lambda s, x: s + x.sum(), f("interpret", *a), 0.0),
+        argnums=nums)(*args)
+    g_r = jax.grad(lambda *a: jax.tree_util.tree_reduce(
+        lambda s, x: s + x.sum(), f("ref", *a), 0.0), argnums=nums)(*args)
+    return fwd, _max_abs(g_i, g_r)
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+    B, T = 2, 256
+    rows = []
+
+    # ---------------------------------------------------------- attention
+    Hq, Hkv, D = 8, 2, 64
+    q = jax.random.normal(ks[0], (B, T, Hq, D))
+    k = jax.random.normal(ks[1], (B, T, Hkv, D))
+    v = jax.random.normal(ks[2], (B, T, Hkv, D))
+
+    def fa(mode, q_, k_, v_):
+        return (ops.attention(q_, k_, v_, block_q=64, block_k=64,
+                              force=mode),)
+
+    us = _bench(jax.jit(lambda *a: fa("ref", *a)[0]), q, k, v)
+    rows.append({"kind": "timing", "kernel": "attention", "us": us,
+                 "shape": f"B{B}xT{T}xH{Hq}xD{D}", "backend": "ref"})
+    fwd, grad = _parity(fa, (q, k, v))
+    rows.append({"kind": "parity", "kernel": "attention",
+                 "fwd_max_abs": fwd, "grad_max_abs": grad})
+
+    # ---------------------------------------------------------- rwkv6
+    H, Dh = 4, 32
+    r = jax.random.normal(ks[3], (B, T, H, Dh))
+    w = jax.random.normal(ks[4], (B, T, H, Dh)) * 0.3
+    u = jax.random.normal(ks[5], (H, Dh)) * 0.1
+
+    def rw(mode, r_, k_, v_, w_, u_):
+        return ops.rwkv6(r_, k_, v_, w_, u_, block_t=64, force=mode)
+
+    us = _bench(jax.jit(lambda *a: rw("ref", *a)[0]), r, r, r, w, u)
+    rows.append({"kind": "timing", "kernel": "rwkv6", "us": us,
+                 "shape": f"B{B}xT{T}xH{H}xD{Dh}", "backend": "ref"})
+    fwd, grad = _parity(rw, (r, r, r, w, u))
+    rows.append({"kind": "parity", "kernel": "rwkv6",
+                 "fwd_max_abs": fwd, "grad_max_abs": grad})
+
+    # ---------------------------------------------------------- mamba2
+    P, N = 32, 16
+    x = jax.random.normal(ks[6], (B, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[7], (B, T, H)))
+    A = -jnp.exp(jax.random.normal(ks[0], (H,)))
+    Bm = jax.random.normal(ks[1], (B, T, N))
+    Cm = jax.random.normal(ks[2], (B, T, N))
+    Dp = jax.random.normal(ks[3], (H,))
+
+    def mb(mode, x_, dt_, A_, Bm_, Cm_, D_):
+        return ops.mamba2(x_, dt_, A_, Bm_, Cm_, D_, block_t=64, force=mode)
+
+    us = _bench(jax.jit(lambda *a: mb("ref", *a)[0]), x, dt, A, Bm, Cm, Dp)
+    rows.append({"kind": "timing", "kernel": "mamba2", "us": us,
+                 "shape": f"B{B}xT{T}xH{H}xP{P}xN{N}", "backend": "ref"})
+    fwd, grad = _parity(mb, (x, dt, A, Bm, Cm, Dp))
+    rows.append({"kind": "parity", "kernel": "mamba2",
+                 "fwd_max_abs": fwd, "grad_max_abs": grad})
+
+    # ---------------------------------------------------------- chunked CE
+    Dm, V = 128, 4096
+    h = jax.random.normal(ks[4], (B, T, Dm))
+    wce = jax.random.normal(ks[5], (Dm, V)) * 0.05
+    lbl = jax.random.randint(ks[6], (B, T), 0, V)
+
+    def ce(mode, h_, w_):
+        return (ops.cross_entropy(h_, w_, lbl, block_t=64, block_v=512,
+                                  force=mode)[0],)
+
+    us = _bench(jax.jit(lambda *a: ce("ref", *a)[0]), h, wce)
+    rows.append({"kind": "timing", "kernel": "chunked_ce", "us": us,
+                 "shape": f"BT{B * T}xV{V}", "backend": "ref"})
+    fwd, grad = _parity(ce, (h, wce))
+    rows.append({"kind": "parity", "kernel": "chunked_ce",
+                 "fwd_max_abs": fwd, "grad_max_abs": grad})
+
+    for row in rows:
+        if row["kind"] == "timing":
+            print(csv_row(f"{row['kernel']}_{row['backend']}", row["us"],
+                          row["shape"]))
+        else:
+            print(csv_row(f"{row['kernel']}_parity",
+                          row["fwd_max_abs"] * 1e6,
+                          f"grad_max_abs={row['grad_max_abs']:.2e}"))
+    write_json("seq_fastpath", {
+        "backend": jax.default_backend(),
+        "rows": rows,
+    })
+
+
+if __name__ == "__main__":
+    main()

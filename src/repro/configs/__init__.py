@@ -12,6 +12,7 @@ from repro.configs.base import InputShape, ModelConfig, SHAPES, SHAPE_BY_NAME
 from repro.configs import (  # noqa: F401
     h2o_danube3_4b,
     llama4_maverick_400b_a17b,
+    mamba2_370m,
     minicpm_2b,
     qwen2_7b,
     qwen2_vl_2b,
@@ -27,6 +28,7 @@ _MODULES = {
     "whisper-small": whisper_small,
     "minicpm-2b": minicpm_2b,
     "rwkv6-7b": rwkv6_7b,
+    "mamba2-370m": mamba2_370m,
     "qwen3-moe-235b-a22b": qwen3_moe_235b_a22b,
     "qwen2-vl-2b": qwen2_vl_2b,
     "zamba2-1.2b": zamba2_1_2b,

@@ -52,6 +52,9 @@ class ModelConfig:
     ssm_head_dim: int = 0
     ssm_expand: int = 2
     rwkv_head_dim: int = 64
+    # which SSM stack a family="ssm" config uses: "rwkv6" (Finch
+    # recurrence) or "mamba2" (SSD scan, the zamba2 layer as a pure stack)
+    ssm_kind: str = "rwkv6"
 
     # hybrid (zamba2): indices of layers that are attention (shared block)
     hybrid_attn_every: int = 0  # an attention block every N mamba blocks
@@ -82,7 +85,8 @@ class ModelConfig:
     def layer_kinds(self) -> Tuple[str, ...]:
         """Per-layer kind tags, in depth order (used by the decomposer)."""
         if self.family == "ssm":
-            return tuple("rwkv" for _ in range(self.num_layers))
+            kind = "mamba" if self.ssm_kind == "mamba2" else "rwkv"
+            return tuple(kind for _ in range(self.num_layers))
         if self.family == "hybrid":
             kinds = []
             for i in range(self.num_layers):
@@ -156,13 +160,16 @@ class ModelConfig:
             cm = 2 * d * self.d_ff + d * d
             return tm + cm + 2 * d
         if kind == "mamba":
+            # exact for models/mamba2.py: in_proj emits [z|x|B|C|dt] with
+            # B,C shared across heads (single N each, not N per head)
             d_in = self.ssm_expand * d
             N = self.ssm_state_dim
             nh = max(1, self.ssm_num_heads)
-            p = d * (2 * d_in + 2 * N * nh + nh)  # in_proj(x,z) + B,C proj + dt
-            p += d_in * d  # out proj
-            p += d_in + nh  # conv/ A
-            return p + 2 * d
+            p = d * (2 * d_in + 2 * N + nh)  # in_proj
+            p += d_in * d                    # out proj
+            p += 5 * d_in                    # conv kernel (K=4) + bias
+            p += 3 * nh                      # dt_bias, A_log, D
+            return p + d                     # pre-norm
         if kind in ("attn", "attn_shared"):
             return self._attn_params() + 2 * d
         raise ValueError(kind)

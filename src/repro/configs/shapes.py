@@ -94,6 +94,15 @@ def cache_specs(cfg: ModelConfig, batch: int, seq_len: int):
     cache: Dict[str, jax.ShapeDtypeStruct] = {}
 
     n_attn = sum(1 for k in kinds if k.startswith("attn") or k in ("dense", "moe"))
+    if cfg.family == "ssm" and cfg.ssm_kind == "mamba2":
+        # Mamba2 stack: per-layer SSD state + causal-conv tail
+        d_in = cfg.ssm_expand * cfg.d_model
+        cache["ssm_state"] = jax.ShapeDtypeStruct(
+            (L, batch, cfg.ssm_num_heads, cfg.ssm_head_dim,
+             cfg.ssm_state_dim), f32)
+        cache["conv_state"] = jax.ShapeDtypeStruct((L, batch, 4, d_in), bf16)
+        return cache
+
     if cfg.family == "ssm":
         # RWKV6: per-layer matrix state (heads, head_dim, head_dim) + token-shift
         H = cfg.d_model // cfg.rwkv_head_dim

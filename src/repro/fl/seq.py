@@ -1,0 +1,111 @@
+"""Federated sequence-model (LM) tasks + context builder.
+
+The image protocol's counterpart for the sequence families
+(mamba2/rwkv6/zamba2/moe — docs/sequence_models.md): a synthetic
+next-token task with controllable signal, an IID shard container whose
+``client_batch`` speaks the LM batch contract ``{"tokens", "labels"}``,
+and :func:`build_lm_context`, which prices budgets with
+``core.memory_model.lm_memory`` instead of ``resnet_memory`` and threads
+``kernel_force`` into runner construction (``Context.kernel_force``).
+
+Task design: ``x_{t+1} = pi(x_t)`` with probability ``1 - noise``, else
+uniform, for a fixed random permutation ``pi``.  Any model that learns
+the bigram map reaches ~``(1 - noise)`` next-token accuracy; chance is
+``1 / vocab``, so learning tests have a wide, stable margin (the PR-1
+flakiness fix: assert on the mean of the last three evals).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.decomposition import decompose
+from repro.core.memory_model import lm_memory
+from repro.fl.engine import SimConfig, client_ratios, scenario_budgets
+from repro.fl.strategy import Context
+
+
+@dataclasses.dataclass
+class FederatedSeqData:
+    """IID token shards over a shared ``(N, T+1)`` sequence array.
+
+    ``x_test`` / ``y_test`` are the pre-shifted eval split — the same
+    attribute names the engines' shared eval fallback expects."""
+    seqs: np.ndarray                  # (N, T+1) int32
+    client_indices: List[np.ndarray]
+    x_test: np.ndarray                # (M, T) inputs
+    y_test: np.ndarray                # (M, T) next-token labels
+    vocab_size: int
+
+    @property
+    def num_classes(self) -> int:
+        return self.vocab_size
+
+    def client_batch(self, k: int, batch_size: int,
+                     rng: np.random.Generator):
+        idx = self.client_indices[k]
+        take = rng.choice(idx, size=min(batch_size, len(idx)), replace=False)
+        seq = self.seqs[take]
+        return {"tokens": seq[:, :-1], "labels": seq[:, 1:]}
+
+    def client_sizes(self) -> np.ndarray:
+        return np.array([len(i) for i in self.client_indices])
+
+
+def synth_tokens(n: int, vocab_size: int = 32, seq_len: int = 16,
+                 noise: float = 0.1, seed: int = 0,
+                 stream: int = 0) -> np.ndarray:
+    """``(n, seq_len+1)`` noisy-successor sequences.  ``seed`` fixes the
+    successor map ``pi`` (shared by every stream of the task); ``stream``
+    draws disjoint sample sets over the SAME map (train vs test)."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 17, stream]))
+    pi = np.random.default_rng(seed).permutation(vocab_size)
+    toks = np.empty((n, seq_len + 1), np.int32)
+    toks[:, 0] = rng.integers(0, vocab_size, size=n)
+    for t in range(1, seq_len + 1):
+        corrupt = rng.random(n) < noise
+        toks[:, t] = np.where(corrupt, rng.integers(0, vocab_size, size=n),
+                              pi[toks[:, t - 1]])
+    return toks
+
+
+def build_seq_data(num_clients: int, *, n_per_client: int = 64,
+                   n_test: int = 256, vocab_size: int = 32,
+                   seq_len: int = 16, noise: float = 0.1,
+                   seed: int = 0) -> FederatedSeqData:
+    train = synth_tokens(num_clients * n_per_client, vocab_size, seq_len,
+                         noise, seed, stream=0)
+    test = synth_tokens(n_test, vocab_size, seq_len, noise, seed, stream=1)
+    idx = np.arange(len(train))
+    shards = [idx[k * n_per_client:(k + 1) * n_per_client]
+              for k in range(num_clients)]
+    return FederatedSeqData(train, shards, test[:, :-1], test[:, 1:],
+                            vocab_size)
+
+
+def build_lm_context(data: FederatedSeqData, sim: SimConfig,
+                     model_cfg: ModelConfig, *,
+                     kernel_force: Optional[str] = None) -> Context:
+    """The LM analogue of ``engine.build_context``: same ratio/budget
+    protocol, priced by ``lm_memory`` at the task's sequence length."""
+    num_clients = len(data.client_indices)
+    ratios = client_ratios(num_clients, sim.scenario, sim.seed)
+    seq_len = int(data.x_test.shape[1])
+    mem = lm_memory(model_cfg, sim.mem_batch, seq_len)
+    budgets = scenario_budgets(mem, ratios)
+    # honest prefix contract for the systime model: tied embeddings and
+    # the hybrid shared block leak head updates into the prefix
+    stable = (not model_cfg.tie_embeddings
+              and model_cfg.family != "hybrid")
+    return Context(
+        sim=sim, num_clients=num_clients, sizes=data.client_sizes(),
+        rng=np.random.default_rng(sim.seed),
+        key=jax.random.PRNGKey(sim.seed), model_cfg=model_cfg, mem=mem,
+        ratios=ratios, budgets=budgets,
+        decomps=[decompose(mem, int(b)) for b in budgets],
+        surplus=np.where(ratios >= 2.0, 2, 1), data=data,
+        prefix_stable=stable, kernel_force=kernel_force)

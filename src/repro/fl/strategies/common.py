@@ -1,10 +1,13 @@
-"""Helpers shared by the built-in image-classification strategies."""
+"""Helpers shared by the built-in strategies (image + LM evals)."""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
+from repro.configs.base import ModelConfig
 from repro.configs.preresnet20 import ResNetConfig
 from repro.fl.strategy import accuracy
 from repro.models import resnet
@@ -18,3 +21,34 @@ def apply_jit(cfg: ResNetConfig):
 def resnet_accuracy(cfg: ResNetConfig, params, x, y) -> float:
     ap = apply_jit(cfg)
     return accuracy(lambda xb: ap(params, xb), x, y)
+
+
+@functools.lru_cache(maxsize=64)
+def lm_logits_jit(cfg: ModelConfig, kernel_force: Optional[str]):
+    from repro.models import build, common as mcommon
+    lm = build(cfg)
+
+    def logits(p, toks):
+        x, _ = lm.forward_hidden(p, toks, kernel_force=kernel_force)
+        x = mcommon.rms_norm(x, p["final_norm"], cfg.norm_eps)
+        w = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+        return x @ w
+
+    return jax.jit(logits)
+
+
+def lm_accuracy(cfg: ModelConfig, params, x, y, *,
+                kernel_force: Optional[str] = None, batch: int = 64) -> float:
+    """Next-token top-1 accuracy over ``(M, T)`` token/label arrays,
+    normalized by VALID positions (labels >= 0) — the LM counterpart of
+    ``strategy.accuracy``, which divides by rows."""
+    logits_fn = lm_logits_jit(cfg, kernel_force)
+    correct, total = 0, 0
+    for i in range(0, len(x), batch):
+        xb = jnp.asarray(x[i:i + batch])
+        yb = jnp.asarray(y[i:i + batch])
+        pred = jnp.argmax(logits_fn(params, xb), -1)
+        valid = yb >= 0
+        correct += int(((pred == yb) & valid).sum())
+        total += int(valid.sum())
+    return correct / max(total, 1)

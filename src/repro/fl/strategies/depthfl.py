@@ -3,12 +3,23 @@ auxiliary classifiers, reproduced to conform to memory budgets as the
 paper did (footnote 2).  Unlike FeDepth the prefix backpropagates as a
 whole, so its memory is the SUM over prefix blocks — the structural
 disadvantage under tight budgets.
+
+Two config families share the class:
+  * ``ResNetConfig`` — the paper's image protocol (aux classifiers,
+    per-block ``depth_aggregate``).
+  * ``ModelConfig`` (LM: mamba2/rwkv6/zamba2/moe) — the fixed-depth
+    prefix is a single FeDepth block ``[0, depth)`` over the family's
+    ``BlockRunner`` (docs/sequence_models.md); the shared LM head plays
+    the classifier role and aggregation masks by trained coverage.
 """
 from __future__ import annotations
 
 import jax
 import numpy as np
 
+from repro.configs.base import ModelConfig
+from repro.core import aggregation, blockwise
+from repro.core.decomposition import Decomposition
 from repro.fl.baselines import (depthfl_depth_for_budget, depthfl_init_aux,
                                 depthfl_local)
 from repro.fl.comm.payload import WireSpec
@@ -20,27 +31,58 @@ from repro.models import resnet
 
 @register("depthfl")
 class DepthFLStrategy:
+    runner = None  # BlockRunner for the LM path (set in setup)
+
+    def _is_lm(self, ctx) -> bool:
+        return isinstance(ctx.model_cfg, ModelConfig)
+
     def setup(self, ctx):
+        if self._is_lm(ctx):
+            from repro.models import build
+            if self.runner is None:
+                self.runner = blockwise.lm_runner(
+                    build(ctx.model_cfg), kernel_force=ctx.kernel_force)
+            n = self.runner.n_units
+            # deepest whole-prefix [0, d) whose one-shot backprop memory
+            # fits the budget (DepthFL trains the prefix as one block)
+            self.depths = [
+                max([d for d in range(1, n + 1)
+                     if ctx.mem.block_train_bytes(0, d) <= int(b)] or [1])
+                for b in ctx.budgets]
+            return
         self.depths = [depthfl_depth_for_budget(ctx.model_cfg, int(b),
                                                 ctx.sim.mem_batch)
                        for b in ctx.budgets]
 
     def init_state(self, ctx):
         cfg = ctx.model_cfg
+        if self._is_lm(ctx):
+            from repro.models import build
+            return build(cfg).init(ctx.key)
         params = resnet.init(ctx.key, cfg)
         aux = depthfl_init_aux(cfg, jax.random.fold_in(ctx.key, 7))
         return params, aux
 
+    def _depth(self, ctx, client_id) -> int:
+        floor = 1 if self._is_lm(ctx) else 2
+        return max(self.depths[client_id], floor)
+
     def client_work(self, ctx, client_id):
         """Systime pricing: one end-to-end prefix of ``depth`` blocks —
         exactly a single-block FeDepth schedule [0, depth)."""
-        from repro.core.decomposition import Decomposition
-        depth = max(self.depths[client_id], 2)
-        return Decomposition(((0, depth),), 0, 0)
+        return Decomposition(((0, self._depth(ctx, client_id)),), 0, 0)
 
     def client_update(self, ctx, state, client_id, batches):
+        depth = self._depth(ctx, client_id)
+        if self._is_lm(ctx):
+            local = blockwise.client_update(
+                self.runner, state, Decomposition(((0, depth),), 0, 0),
+                batches, lr=ctx.sim.lr, momentum=ctx.sim.momentum,
+                local_steps=ctx.sim.local_steps,
+                step_cache=ctx.caches.setdefault("depthfl_lm_step", {}),
+                prefix_cache=ctx.prefix_cache)
+            return ClientResult((local, depth), float(ctx.sizes[client_id]))
         params, aux = state
-        depth = max(self.depths[client_id], 2)
         cache = ctx.caches.setdefault("depthfl_step", {})
         p, a, _ = depthfl_local(ctx.model_cfg, params, aux, depth, batches,
                                 lr=ctx.sim.lr, momentum=ctx.sim.momentum,
@@ -50,27 +92,47 @@ class DepthFLStrategy:
 
     # ------------------------------------------------- wire contract
     def wire_parts(self, ctx, state, result):
-        """Delta-code (params, aux) against the server pair; blocks
+        """Delta-code the trained tree against the server copy; blocks
         beyond the client's depth equal the broadcast copy, so their
         deltas are exact zeros and sparsifying codecs skip them.  The
         coverage int rides along uncompressed (free)."""
+        if self._is_lm(ctx):
+            local, depth = result.payload
+            return WireSpec(local, ref=state,
+                            rebuild=lambda t, _d=depth: (t, _d))
         p, a, depth = result.payload
         return WireSpec((p, a), ref=state,
                         rebuild=lambda t, _d=depth: (t[0], t[1], _d))
 
     def downlink_tree(self, ctx, state, client_id):
         """Depth-wise downlink slice — the fixed-depth case where it
-        genuinely shrinks: a depth-d client needs only the stem, the
-        first d blocks, the head, and the aux exits at or below d."""
+        genuinely shrinks: a depth-d client needs only the prefix below
+        d plus the shared head (LM: the runner's trained subtree for
+        [0, d); image: stem + d blocks + head + covered aux exits)."""
+        depth = self._depth(ctx, client_id)
+        if self._is_lm(ctx):
+            return self.runner.split(state, 0, depth)
         params, aux = state
-        depth = max(self.depths[client_id], 2)
         sub = {k: params[k] for k in ("stem", "head_norm", "classifier")}
         sub["blocks"] = params["blocks"][:depth]
         sub_aux = {k: v for k, v in aux.items()
                    if int(k.split("_")[1]) <= depth}
         return (sub, sub_aux)
 
+    def _lm_mask(self, ctx, state, depth):
+        cache = ctx.caches.setdefault("depthfl_lm_masks", {})
+        if depth not in cache:
+            cache[depth] = aggregation.trained_mask_for(
+                state, Decomposition(((0, depth),), 0, 0), self.runner)
+        return cache[depth]
+
     def aggregate(self, ctx, state, results):
+        if self._is_lm(ctx):
+            locals_ = [r.payload[0] for r in results]
+            masks = [self._lm_mask(ctx, state, r.payload[1])
+                     for r in results]
+            ws = [r.weight for r in results]
+            return aggregation.aggregate_masked(state, locals_, ws, masks)
         params, aux = state
         locals_ = [r.payload[0] for r in results]
         auxs = [r.payload[1] for r in results]
@@ -81,6 +143,9 @@ class DepthFLStrategy:
         return params, aux
 
     def eval_model(self, ctx, state, x, y):
+        if self._is_lm(ctx):
+            return common.lm_accuracy(ctx.model_cfg, state, x, y,
+                                      kernel_force=ctx.kernel_force)
         return common.resnet_accuracy(ctx.model_cfg, state[0], x, y)
 
 

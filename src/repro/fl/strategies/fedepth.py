@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.base import ModelConfig
 from repro.core import aggregation, blockwise, mkd
 from repro.core.blockwise import BlockRunner
 from repro.fl.baselines import _ce
@@ -47,22 +48,46 @@ class FedepthStrategy:
 
     def setup(self, ctx):
         if self.runner is None:
-            self.runner = blockwise.resnet_runner(ctx.model_cfg,
-                                                  head=self.head)
+            if isinstance(ctx.model_cfg, ModelConfig):
+                from repro.models import build
+                self.runner = blockwise.lm_runner(
+                    build(ctx.model_cfg), head=self.head,
+                    kernel_force=ctx.kernel_force)
+            else:
+                self.runner = blockwise.resnet_runner(ctx.model_cfg,
+                                                      head=self.head)
 
     def init_state(self, ctx):
+        if isinstance(ctx.model_cfg, ModelConfig):
+            from repro.models import build
+            lm = build(ctx.model_cfg)
+            params = lm.init(ctx.key)
+            if self.head == "aux":
+                # m-FeDepth on LM families: per-block auxiliary rms-norm
+                # scales feeding the shared head (blockwise.lm_runner's
+                # head_loss selects aux_norms[block_idx])
+                params["aux_norms"] = jnp.ones(
+                    (lm.num_depth_units, ctx.model_cfg.d_model),
+                    jnp.float32)
+            return params
         params = resnet.init(ctx.key, ctx.model_cfg)
         if self.head == "aux":
             params["aux_heads"] = init_aux_heads(ctx.model_cfg, ctx.key)
         return params
 
+    def _mkd_available(self, ctx) -> bool:
+        """A surplus client needs an MKD implementation to exploit M > 1:
+        explicit ``mkd_fns`` (generic runner) or the jitted ResNet path.
+        LM configs have neither (the jitted path applies ``resnet.apply``
+        to image batches), so they degrade to the plain depth-wise
+        update — never silently mis-routed."""
+        return (self.mkd_fns is not None
+                or (ctx.model_cfg is not None
+                    and not isinstance(ctx.model_cfg, ModelConfig)))
+
     def client_update(self, ctx, state, client_id, batches):
         M = 1 if ctx.surplus is None else int(ctx.surplus[client_id])
-        # a surplus client needs an MKD implementation to exploit M > 1:
-        # explicit mkd_fns (generic runner) or the jitted ResNet path;
-        # with neither it degrades to the plain depth-wise update
-        if M > 1 and (self.mkd_fns is not None
-                      or ctx.model_cfg is not None):
+        if M > 1 and self._mkd_available(ctx):
             local = self._mkd_update(ctx, state, batches, M)
         else:
             local = blockwise.client_update(
@@ -87,8 +112,7 @@ class FedepthStrategy:
         computation and stack; MKD surplus clients (M > 1 with an MKD
         implementation available) keep the sequential path."""
         M = 1 if ctx.surplus is None else int(ctx.surplus[client_id])
-        if M > 1 and (self.mkd_fns is not None
-                      or ctx.model_cfg is not None):
+        if M > 1 and self._mkd_available(ctx):
             return None
         dec = ctx.decomps[client_id]
         return (dec.blocks, dec.skipped_prefix)
@@ -235,6 +259,9 @@ class FedepthStrategy:
         return aggregation.aggregate_masked(state, locals_, weights, masks)
 
     def eval_model(self, ctx, state, x, y):
+        if isinstance(ctx.model_cfg, ModelConfig):
+            return common.lm_accuracy(ctx.model_cfg, state, x, y,
+                                      kernel_force=ctx.kernel_force)
         return common.resnet_accuracy(ctx.model_cfg, state, x, y)
 
     # ---------------------------------------------------------- MKD local

@@ -88,6 +88,12 @@ class Context:
     # this field is the fallback for direct ``latency`` callers (True
     # matches ResNet/ViT/untied-LM runners).
     prefix_stable: bool = True
+    # kernel dispatch override threaded into runner construction for
+    # LM-family strategies (``blockwise.lm_runner(..., kernel_force=)``):
+    # None = auto (Pallas on TPU, jnp reference on CPU/GPU), "ref" pins
+    # the oracle, "interpret" runs the Pallas kernel bodies in interpret
+    # mode — see kernels/ops.py:_backend.
+    kernel_force: Optional[str] = None
 
 
 @runtime_checkable

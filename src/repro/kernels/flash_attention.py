@@ -62,6 +62,15 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         k = k_ref[0, 0].astype(jnp.float32)                  # (bk, D)
         v = v_ref[0, 0].astype(jnp.float32)                  # (bk, D)
 
+        # ragged tail: rows of the last kv tile beyond kv_len hold
+        # implementation-defined garbage (NaN under interpret mode).  The
+        # logit mask zeroes their probabilities, but 0 * NaN = NaN in
+        # p @ v — the garbage rows must be zeroed at the source.
+        valid_k = (ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_k, 1), 0)) < kv_len
+        k = jnp.where(valid_k, k, 0.0)
+        v = jnp.where(valid_k, v, 0.0)
+
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
 

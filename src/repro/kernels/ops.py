@@ -37,6 +37,13 @@ Mode = Optional[str]  # None (auto) | "ref" | "pallas" | "interpret" | "naive"
 def _backend(force: Mode) -> str:
     if force in ("ref", "pallas", "interpret", "naive"):
         return force
+    # Auto policy (asserted by tests/test_kernels.py::
+    # test_ops_backend_selection): Pallas compiles on TPU ONLY.  The
+    # kernels allocate ``pltpu.VMEM`` scratch and rely on TPU grid
+    # semantics, so "pallas" would fail to lower on GPU; CPU *and* GPU
+    # therefore get the jnp oracle, which carries exact semantics and is
+    # the same path the multi-device dry-run lowers.  A GPU Pallas port
+    # would change this line — and the regression test — together.
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
@@ -120,6 +127,48 @@ _fa_vjp.defvjp(_fa_fwd, _fa_bwd)
 
 
 # --------------------------------------------------------------------------
+# chunked-recompute backward shared by the linear-state scans
+# --------------------------------------------------------------------------
+def _scan_chunk_bwd(scan_ref, seq_args, bcast_args, s0, gy, gs, chunk):
+    """Generic VJP for a linear-state scan via the jnp reference.
+
+    ``scan_ref(*seq_chunks, *bcast, state) -> (y_chunk, state_out)`` must
+    chain exactly across time chunks (asserted for both references in
+    tests/test_kernels.py).  Pass 1 recomputes only the ``n`` chunk-entry
+    states; pass 2 walks chunks in reverse, running ``jax.vjp`` on one
+    chunk at a time with the state cotangent chained backward — live
+    memory is one chunk's activations, not the full sequence.
+    """
+    T = seq_args[0].shape[1]
+    n = -(-T // chunk)
+    bounds = [(i * chunk, min((i + 1) * chunk, T)) for i in range(n)]
+    entry = [s0]
+    s = s0
+    for lo, hi in bounds[:-1]:
+        _, s = scan_ref(*(a[:, lo:hi] for a in seq_args), *bcast_args, s)
+        entry.append(s)
+
+    def f(seq_c, bc, s_in):
+        return scan_ref(*seq_c, *bc, s_in)
+
+    dseq_chunks = []
+    dbcast = None
+    ds = gs
+    for idx in reversed(range(n)):
+        lo, hi = bounds[idx]
+        chunk_seq = tuple(a[:, lo:hi] for a in seq_args)
+        _, vjp = jax.vjp(f, chunk_seq, tuple(bcast_args), entry[idx])
+        dseq_c, dbc, ds = vjp((gy[:, lo:hi], ds))
+        dseq_chunks.append(dseq_c)
+        dbcast = dbc if dbcast is None else jax.tree.map(
+            jnp.add, dbcast, dbc)
+    dseq = tuple(
+        jnp.concatenate([c[i] for c in reversed(dseq_chunks)], axis=1)
+        for i in range(len(seq_args)))
+    return dseq, dbcast, ds
+
+
+# --------------------------------------------------------------------------
 # rwkv6
 # --------------------------------------------------------------------------
 def rwkv6(r, k, v, w, u, initial_state=None, *, block_t=128,
@@ -127,8 +176,34 @@ def rwkv6(r, k, v, w, u, initial_state=None, *, block_t=128,
     be = _backend(force)
     if be in ("ref", "naive"):
         return ref.rwkv6_scan(r, k, v, w, u, initial_state)
-    return _rwkv_pallas(r, k, v, w, u, initial_state, block_t=block_t,
-                        interpret=(be == "interpret"))
+    if initial_state is None:
+        B, _, H, D = r.shape
+        initial_state = jnp.zeros((B, H, D, D), jnp.float32)
+    return _rwkv_vjp(r, k, v, w, u, initial_state, block_t,
+                     be == "interpret")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def _rwkv_vjp(r, k, v, w, u, s0, block_t, interpret):
+    return _rwkv_pallas(r, k, v, w, u, s0, block_t=block_t,
+                        interpret=interpret)
+
+
+def _rwkv_fwd(r, k, v, w, u, s0, block_t, interpret):
+    out = _rwkv_vjp(r, k, v, w, u, s0, block_t, interpret)
+    return out, (r, k, v, w, u, s0)
+
+
+def _rwkv_bwd(block_t, interpret, res, g):
+    r, k, v, w, u, s0 = res
+    gy, gs = g
+    chunk = min(4 * block_t, r.shape[1])
+    (dr, dk, dv, dw), (du,), ds = _scan_chunk_bwd(
+        ref.rwkv6_scan, (r, k, v, w), (u,), s0, gy, gs, chunk)
+    return dr, dk, dv, dw, du, ds
+
+
+_rwkv_vjp.defvjp(_rwkv_fwd, _rwkv_bwd)
 
 
 # --------------------------------------------------------------------------
@@ -139,8 +214,38 @@ def mamba2(x, dt, A, Bm, Cm, D, initial_state=None, *, block_t=128,
     be = _backend(force)
     if be in ("ref", "naive"):
         return ref.mamba2_scan(x, dt, A, Bm, Cm, D, initial_state)
-    return _ssd_pallas(x, dt, A, Bm, Cm, D, initial_state, block_t=block_t,
-                       interpret=(be == "interpret"))
+    if initial_state is None:
+        B, _, H, P = x.shape
+        initial_state = jnp.zeros((B, H, P, Bm.shape[-1]), jnp.float32)
+    return _ssd_vjp(x, dt, A, Bm, Cm, D, initial_state, block_t,
+                    be == "interpret")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8))
+def _ssd_vjp(x, dt, A, Bm, Cm, D, s0, block_t, interpret):
+    return _ssd_pallas(x, dt, A, Bm, Cm, D, s0, block_t=block_t,
+                       interpret=interpret)
+
+
+def _ssd_fwd(x, dt, A, Bm, Cm, D, s0, block_t, interpret):
+    out = _ssd_vjp(x, dt, A, Bm, Cm, D, s0, block_t, interpret)
+    return out, (x, dt, A, Bm, Cm, D, s0)
+
+
+def _ssd_bwd(block_t, interpret, res, g):
+    x, dt, A, Bm, Cm, D, s0 = res
+    gy, gs = g
+
+    def scan_ref(x_, dt_, Bm_, Cm_, A_, D_, s_in):
+        return ref.mamba2_scan(x_, dt_, A_, Bm_, Cm_, D_, s_in)
+
+    chunk = min(4 * block_t, x.shape[1])
+    (dx, ddt, dBm, dCm), (dA, dD), ds = _scan_chunk_bwd(
+        scan_ref, (x, dt, Bm, Cm), (A, D), s0, gy, gs, chunk)
+    return dx, ddt, dA, dBm, dCm, dD, ds
+
+
+_ssd_vjp.defvjp(_ssd_fwd, _ssd_bwd)
 
 
 # --------------------------------------------------------------------------
@@ -153,10 +258,10 @@ def cross_entropy(hidden, lm_head, labels, *, block_t=256, block_v=2048,
         return ref.cross_entropy_logits(hidden, lm_head, labels)
     if be == "ref":
         return _ce_chunked_jnp(hidden, lm_head, labels)
-    if be == "interpret":
-        return _ce_pallas(hidden, lm_head, labels, block_t=block_t,
-                          block_v=block_v, interpret=True)
-    return _ce_custom(hidden, lm_head, labels, block_t, block_v)
+    # "interpret" routes through the same custom_vjp as "pallas" so CPU
+    # grad-parity tests exercise the deployed backward chunks
+    return _ce_custom(hidden, lm_head, labels, block_t, block_v,
+                      be == "interpret")
 
 
 def _ce_chunked_jnp(hidden, lm_head, labels, chunk=2048):
@@ -195,19 +300,19 @@ def _ce_chunked_jnp(hidden, lm_head, labels, chunk=2048):
     return total / n, n
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
-def _ce_custom(hidden, lm_head, labels, block_t, block_v):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _ce_custom(hidden, lm_head, labels, block_t, block_v, interpret):
     loss, _ = _ce_pallas(hidden, lm_head, labels, block_t=block_t,
-                         block_v=block_v)
+                         block_v=block_v, interpret=interpret)
     return loss, jnp.maximum((labels >= 0).sum(), 1)
 
 
-def _ce_fwd(hidden, lm_head, labels, block_t, block_v):
-    out = _ce_custom(hidden, lm_head, labels, block_t, block_v)
+def _ce_fwd(hidden, lm_head, labels, block_t, block_v, interpret):
+    out = _ce_custom(hidden, lm_head, labels, block_t, block_v, interpret)
     return out, (hidden, lm_head, labels)
 
 
-def _ce_bwd(block_t, block_v, res, g):
+def _ce_bwd(block_t, block_v, interpret, res, g):
     hidden, lm_head, labels = res
     gloss = g[0]
 

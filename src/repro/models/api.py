@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models import rwkv6, transformer, whisper, zamba2
+from repro.models import mamba2_lm, rwkv6, transformer, whisper, zamba2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,8 +65,8 @@ class LM:
             return zamba2.apply_group_range(params, cfg, x, lo, hi,
                                             kernel_force=kernel_force, **kw)
         if cfg.family == "ssm":
-            return rwkv6.apply_layer_range(params, cfg, x, lo, hi,
-                                           kernel_force=kernel_force, **kw)
+            return self.module.apply_layer_range(
+                params, cfg, x, lo, hi, kernel_force=kernel_force, **kw)
         if cfg.is_encoder_decoder:
             raise NotImplementedError(
                 "whisper blocks handled via core.blockwise enc/dec split")
@@ -81,7 +81,7 @@ def build(cfg: ModelConfig) -> LM:
     if cfg.family in ("dense", "moe", "vlm"):
         return LM(cfg, transformer)
     if cfg.family == "ssm":
-        return LM(cfg, rwkv6)
+        return LM(cfg, mamba2_lm if cfg.ssm_kind == "mamba2" else rwkv6)
     if cfg.family == "hybrid":
         return LM(cfg, zamba2)
     if cfg.family == "audio":

@@ -1,0 +1,101 @@
+"""Mamba2 LM — a pure stack of SSD-form mamba2 layers (arXiv:2405.21060).
+
+Structure: embed -> N x (residual ``models.mamba2`` layer) -> final
+rms-norm -> tied lm head.  Depth is scanned and FeDepth block ranges
+slice the stacked params, exactly like rwkv6.  Because the released
+checkpoints tie embedding and head, the FeDepth adapter for this family
+reports ``prefix_stable=False``: head updates flow into the embedding
+that feeds the frozen prefix, so buffered activations are re-buffered
+once per subproblem (see docs/sequence_models.md).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import common, mamba2
+
+Params = Dict[str, Any]
+
+
+def init(key, cfg: ModelConfig, dtype=common.DEFAULT_DTYPE) -> Params:
+    ks = jax.random.split(key, 3)
+    layer_keys = jax.random.split(ks[0], cfg.num_layers)
+    layers = jax.tree.map(lambda *xs: jnp.stack(xs),
+                          *[mamba2.init(k, cfg, dtype) for k in layer_keys])
+    p = {
+        "embed": common.embed_init(ks[1], (cfg.vocab_size, cfg.d_model),
+                                   dtype),
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = common.dense_init(ks[2], (cfg.d_model, cfg.vocab_size),
+                                         dtype=dtype)
+    return p
+
+
+def head_weight(p: Params, cfg: ModelConfig):
+    return p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+
+
+def apply_layer_range(p: Params, cfg: ModelConfig, x, lo: int, hi: int, *,
+                      kernel_force=None, remat: bool = True):
+    layers = jax.tree.map(lambda a: a[lo:hi], p["layers"])
+
+    def body(h, lp):
+        out, _, _ = mamba2.forward(lp, cfg, h, kernel_force=kernel_force)
+        return h + out, None
+
+    body = common.maybe_checkpoint(body, remat)
+    x, _ = common.scan(body, x, layers)
+    return x, jnp.float32(0.0)
+
+
+def forward_hidden(p: Params, cfg: ModelConfig, tokens, *, kernel_force=None,
+                   lo: int = 0, hi: Optional[int] = None, remat: bool = True,
+                   **_):
+    x = p["embed"][tokens]
+    hi = hi if hi is not None else cfg.num_layers
+    return apply_layer_range(p, cfg, x, lo, hi, kernel_force=kernel_force,
+                             remat=remat)
+
+
+def loss_fn(p: Params, cfg: ModelConfig, batch, *, kernel_force=None):
+    x, _ = forward_hidden(p, cfg, batch["tokens"], kernel_force=kernel_force)
+    x = common.rms_norm(x, p["final_norm"], cfg.norm_eps)
+    ce, n = ops.cross_entropy(x, head_weight(p, cfg), batch["labels"],
+                              force=kernel_force)
+    return ce, {"ce": ce, "aux": jnp.float32(0.0), "n_tokens": n}
+
+
+def prefill(p: Params, cfg: ModelConfig, batch, *, kernel_force=None):
+    x, _ = forward_hidden(p, cfg, batch["tokens"], kernel_force=kernel_force,
+                          remat=False)
+    x = common.rms_norm(x[:, -1:], p["final_norm"], cfg.norm_eps)
+    return x @ head_weight(p, cfg)
+
+
+def decode_step(p: Params, cfg: ModelConfig, tokens, cache, cache_index, *,
+                kernel_force=None, **_):
+    """cache: {"ssm_state": (L,B,nh,hd,N) fp32,
+               "conv_state": (L,B,K,d_inner)} — O(1) in sequence length."""
+    x = p["embed"][tokens]                      # (B,1,d)
+
+    def body(h, xs):
+        lp, conv, ssm = xs
+        out, new_conv, new_ssm = mamba2.forward(
+            lp, cfg, h, kernel_force=kernel_force,
+            conv_state=conv.astype(h.dtype), ssm_state=ssm)
+        return h + out, (new_conv, new_ssm)
+
+    x, (ncs, nss) = common.scan(
+        body, x, (p["layers"], cache["conv_state"], cache["ssm_state"]))
+    x = common.rms_norm(x, p["final_norm"], cfg.norm_eps)
+    logits = x @ head_weight(p, cfg)
+    return logits, {"conv_state": ncs.astype(cache["conv_state"].dtype),
+                    "ssm_state": nss}

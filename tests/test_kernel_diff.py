@@ -1,0 +1,235 @@
+"""Differential kernel-equivalence harness (ISSUE-7 centerpiece).
+
+Goes through the PUBLIC dispatch layer ``kernels.ops`` — the exact code
+path the sequence-model runners hit — and asserts that the Pallas kernel
+body (``force="interpret"`` on CPU; the same body the TPU path compiles)
+agrees with the pure-jnp oracle (``force="ref"``) on
+
+  * the FORWARD values, and
+  * the GRADIENTS through the deployed ``jax.custom_vjp`` backward
+    (chunked-recompute; this is what training actually differentiates),
+
+for every kernel the mamba2/rwkv6/zamba2/moe fast path uses: flash
+attention, the RWKV6 WKV scan, the Mamba2 SSD scan, and chunked
+cross-entropy.  Sweeps include non-divisible ``T`` versus the block size
+so the ragged-tail masking is covered.
+
+The deterministic sweeps below always run.  A second, hypothesis-driven
+layer samples shapes/seeds from a wider space; it is import-gated because
+``hypothesis`` is a dev-only extra (requirements-dev.txt — installed in
+CI, possibly absent locally).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+pytestmark = pytest.mark.kernel_diff
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _allclose(a, b, msg, atol, rtol=0.0):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               atol=atol, rtol=rtol, err_msg=msg)
+
+
+def _grad_parity(f, args, atol, rtol=0.0):
+    """Compare d f(mode, *args) / d args between interpret and ref."""
+    nums = tuple(range(len(args)))
+    g_int = jax.grad(lambda *a: f("interpret", *a), argnums=nums)(*args)
+    g_ref = jax.grad(lambda *a: f("ref", *a), argnums=nums)(*args)
+    for i, (gi, gr) in enumerate(zip(g_int, g_ref)):
+        _allclose(gi, gr, f"grad of arg {i} mismatch", atol, rtol)
+
+
+# ------------------------------------------------------------------ attention
+@pytest.mark.parametrize("B,T,Hq,Hkv,D", [
+    (1, 64, 2, 1, 16),
+    (2, 80, 4, 2, 32),   # T=80 ragged vs block 32
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 24)])
+def test_attention_interpret_vs_ref(B, T, Hq, Hkv, D, causal, window):
+    ks = jax.random.split(jax.random.PRNGKey(10), 3)
+    q = jax.random.normal(ks[0], (B, T, Hq, D))
+    k = jax.random.normal(ks[1], (B, T, Hkv, D))
+    v = jax.random.normal(ks[2], (B, T, Hkv, D))
+
+    def f(mode, q_, k_, v_):
+        return ops.attention(q_, k_, v_, causal=causal,
+                             sliding_window=window, block_q=32, block_k=32,
+                             force=mode).sum()
+
+    _allclose(ops.attention(q, k, v, causal=causal, sliding_window=window,
+                            block_q=32, block_k=32, force="interpret"),
+              ops.attention(q, k, v, causal=causal, sliding_window=window,
+                            force="ref"),
+              "attention forward", atol=2e-5, rtol=2e-5)
+    _grad_parity(f, (q, k, v), atol=2e-4, rtol=2e-4)
+
+
+# ------------------------------------------------------------------ rwkv6
+@pytest.mark.parametrize("B,T,H,D,bt", [
+    (1, 64, 2, 16, 16),
+    (2, 50, 1, 16, 16),   # T=50 ragged vs block 16; bwd chunk 64 > T
+])
+def test_rwkv6_interpret_vs_ref(B, T, H, D, bt):
+    ks = jax.random.split(jax.random.PRNGKey(11), 5)
+    r = jax.random.normal(ks[0], (B, T, H, D))
+    k = jax.random.normal(ks[1], (B, T, H, D))
+    v = jax.random.normal(ks[2], (B, T, H, D))
+    w = jax.random.normal(ks[3], (B, T, H, D)) * 0.3
+    u = jax.random.normal(ks[4], (H, D)) * 0.1
+
+    def f(mode, r_, k_, v_, w_, u_):
+        y, sT = ops.rwkv6(r_, k_, v_, w_, u_, block_t=bt, force=mode)
+        # touch BOTH outputs so the state cotangent path is exercised
+        return y.sum() + 0.5 * sT.sum()
+
+    y_i, s_i = ops.rwkv6(r, k, v, w, u, block_t=bt, force="interpret")
+    y_r, s_r = ops.rwkv6(r, k, v, w, u, force="ref")
+    _allclose(y_i, y_r, "rwkv6 forward y", atol=1e-4, rtol=1e-4)
+    _allclose(s_i, s_r, "rwkv6 final state", atol=1e-4, rtol=1e-4)
+    _grad_parity(f, (r, k, v, w, u), atol=2e-4, rtol=2e-4)
+
+
+# ------------------------------------------------------------------ mamba2
+@pytest.mark.parametrize("B,T,H,P,N,bt", [
+    (1, 64, 2, 16, 8, 16),
+    (2, 40, 1, 16, 16, 16),   # T=40 ragged vs block 16
+])
+def test_mamba2_interpret_vs_ref(B, T, H, P, N, bt):
+    ks = jax.random.split(jax.random.PRNGKey(12), 6)
+    x = jax.random.normal(ks[0], (B, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, T, N))
+    Cm = jax.random.normal(ks[4], (B, T, N))
+    D = jax.random.normal(ks[5], (H,))
+
+    def f(mode, x_, dt_, A_, Bm_, Cm_, D_):
+        y, hT = ops.mamba2(x_, dt_, A_, Bm_, Cm_, D_, block_t=bt, force=mode)
+        return y.sum() + 0.5 * hT.sum()
+
+    y_i, h_i = ops.mamba2(x, dt, A, Bm, Cm, D, block_t=bt, force="interpret")
+    y_r, h_r = ops.mamba2(x, dt, A, Bm, Cm, D, force="ref")
+    scale = max(float(jnp.abs(y_r).max()), 1.0)
+    _allclose(y_i / scale, y_r / scale, "mamba2 forward y", atol=2e-5,
+              rtol=2e-5)
+    _allclose(h_i, h_r, "mamba2 final state", atol=1e-4, rtol=1e-3)
+    _grad_parity(f, (x, dt, A, Bm, Cm, D), atol=5e-4, rtol=5e-4)
+
+
+# ------------------------------------------------------------------ chunked CE
+@pytest.mark.parametrize("B,T,D,V,bt,bv", [
+    (2, 16, 16, 64, 8, 32),
+    (1, 24, 8, 77, 16, 19),   # ragged T and V blocks
+])
+def test_cross_entropy_interpret_vs_ref(B, T, D, V, bt, bv):
+    ks = jax.random.split(jax.random.PRNGKey(13), 3)
+    h = jax.random.normal(ks[0], (B, T, D))
+    w = jax.random.normal(ks[1], (D, V)) * 0.2
+    lbl = jax.random.randint(ks[2], (B, T), 0, V)
+    lbl = lbl.at[0, :3].set(-100)    # masked positions
+
+    def f(mode, h_, w_):
+        return ops.cross_entropy(h_, w_, lbl, block_t=bt, block_v=bv,
+                                 force=mode)[0]
+
+    loss_i, n_i = ops.cross_entropy(h, w, lbl, block_t=bt, block_v=bv,
+                                    force="interpret")
+    loss_r, n_r = ops.cross_entropy(h, w, lbl, force="ref")
+    assert int(n_i) == int(n_r)
+    _allclose(loss_i, loss_r, "ce loss", atol=1e-5, rtol=1e-5)
+    _grad_parity(f, (h, w), atol=1e-5, rtol=1e-5)
+
+
+# ------------------------------------------------------------------ vjp shape
+def test_custom_vjp_grad_shapes_match_inputs():
+    """The chunked-recompute backwards must return cotangents shaped
+    exactly like their primals (a transposed or concat-misordered grad
+    would train silently wrong)."""
+    ks = jax.random.split(jax.random.PRNGKey(14), 5)
+    B, T, H, D = 1, 48, 2, 16
+    r, k, v = (jax.random.normal(ks[i], (B, T, H, D)) for i in range(3))
+    w = jax.random.normal(ks[3], (B, T, H, D)) * 0.3
+    u = jax.random.normal(ks[4], (H, D)) * 0.1
+    grads = jax.grad(
+        lambda *a: ops.rwkv6(*a, block_t=16, force="interpret")[0].sum(),
+        argnums=(0, 1, 2, 3, 4))(r, k, v, w, u)
+    for g, p in zip(grads, (r, k, v, w, u)):
+        assert g.shape == p.shape and g.dtype == p.dtype
+
+
+# ------------------------------------------------------------------ hypothesis
+if HAVE_HYPOTHESIS:
+    settings.register_profile("kernel_diff", max_examples=10, deadline=None)
+    settings.load_profile("kernel_diff")
+
+    @given(st.integers(0, 2 ** 16), st.integers(8, 96), st.integers(1, 3),
+           st.booleans())
+    def test_rwkv6_forward_property(seed, T, H, ragged):
+        """Any (seed, T, H): interpret == ref for the WKV scan, including
+        block-ragged tails."""
+        D, bt = 16, 16
+        ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+        shape = (1, T, H, D)
+        r, k, v = (jax.random.normal(ks[i], shape) for i in range(3))
+        w = jax.random.normal(ks[3], shape) * 0.3
+        u = jax.random.normal(ks[4], (H, D)) * 0.1
+        y_i, s_i = ops.rwkv6(r, k, v, w, u, block_t=bt, force="interpret")
+        y_r, s_r = ops.rwkv6(r, k, v, w, u, force="ref")
+        _allclose(y_i, y_r, f"rwkv6 fwd seed={seed} T={T}", atol=2e-4,
+                  rtol=2e-4)
+        _allclose(s_i, s_r, f"rwkv6 state seed={seed} T={T}", atol=2e-4,
+                  rtol=2e-4)
+
+    @given(st.integers(0, 2 ** 16), st.integers(8, 96), st.integers(1, 3))
+    def test_mamba2_forward_property(seed, T, H):
+        P, N, bt = 16, 8, 16
+        ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+        x = jax.random.normal(ks[0], (1, T, H, P))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (1, T, H)))
+        A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+        Bm = jax.random.normal(ks[3], (1, T, N))
+        Cm = jax.random.normal(ks[4], (1, T, N))
+        D = jax.random.normal(ks[5], (H,))
+        y_i, h_i = ops.mamba2(x, dt, A, Bm, Cm, D, block_t=bt,
+                              force="interpret")
+        y_r, h_r = ops.mamba2(x, dt, A, Bm, Cm, D, force="ref")
+        scale = max(float(jnp.abs(y_r).max()), 1.0)
+        _allclose(y_i / scale, y_r / scale, f"mamba2 fwd seed={seed} T={T}",
+                  atol=5e-5, rtol=5e-5)
+        _allclose(h_i, h_r, f"mamba2 state seed={seed} T={T}", atol=2e-4,
+                  rtol=1e-3)
+
+    @given(st.integers(0, 2 ** 16), st.integers(4, 32), st.integers(17, 99))
+    def test_cross_entropy_property(seed, T, V):
+        """CE loss parity holds for any vocab size vs block_v=19 (prime —
+        every non-divisible layout) and arbitrary mask patterns."""
+        D = 8
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        h = jax.random.normal(ks[0], (1, T, D))
+        w = jax.random.normal(ks[1], (D, V)) * 0.2
+        lbl = jax.random.randint(ks[2], (1, T), 0, V)
+        mask = jax.random.bernoulli(ks[3], 0.25, (1, T))
+        lbl = jnp.where(mask, -100, lbl)
+        loss_i, n_i = ops.cross_entropy(h, w, lbl, block_t=8, block_v=19,
+                                        force="interpret")
+        loss_r, n_r = ops.cross_entropy(h, w, lbl, force="ref")
+        assert int(n_i) == int(n_r)
+        if int(n_r) > 0:
+            _allclose(loss_i, loss_r, f"ce seed={seed} T={T} V={V}",
+                      atol=2e-5, rtol=2e-5)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed "
+                             "(pip install -r requirements-dev.txt)")
+    def test_kernel_diff_property_layer():
+        pass
