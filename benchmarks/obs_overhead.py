@@ -1,0 +1,193 @@
+"""Telemetry overhead: both engines with ``obs="on"`` vs off.
+
+The observability layer's contract (docs/observability.md) has two
+halves.  *Disabled is free*: ``obs=None`` is the pre-telemetry code
+path, guarded by one ``active()`` lookup per deep site — that half is
+asserted bitwise in tests/test_obs.py, not timed.  *Enabled is cheap*:
+tracing and metrics recording happen in plain python around the jitted
+work, so turning the capture on must not change what is measured — this
+benchmark times that half on the two cells where instrumentation is
+densest:
+
+* ``vectorized_vit`` — the Figure 7 depth-wise ViT fine-tune cell on
+  the vectorized scheduler (cohort-group spans + group-update
+  histograms + jit-cache probes every dispatch), scaled to a cross-
+  device cohort like ``round_engine.bench_cross_device_vit``.
+* ``async_straggler`` — ``AsyncEngine`` in async mode over a seeded
+  iot/phone/workstation mix (typed SysEvent per dispatch/finish,
+  per-phase lane attrs, staleness histograms), the trace-heaviest path
+  per unit of compute.
+
+Methodology mirrors ``benchmarks/round_engine``: per cell the SAME
+seeded round sequence runs warm, then is timed per obs setting (median
+per-round seconds, final state blocked); the off/on final params must
+stay bitwise identical — enabling telemetry must observe, never
+perturb.  Under ``REPRO_BENCH_STRICT=1`` the ``on/off`` ratio is
+enforced against :data:`STRICT_MAX_OVERHEAD` per cell.
+
+Emits ``BENCH_obs.json`` plus a real Chrome-trace artifact
+(``BENCH_obs_trace.json``, from the async cell's capture — load it at
+https://ui.perfetto.dev); CI uploads both and runs
+``tools/trace_report.py`` over the trace as a smoke check.
+"""
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.preresnet20 import reduced as rn_reduced
+from repro.configs.vit_t16 import reduced as vit_reduced
+from repro.core import blockwise
+from repro.core.decomposition import decompose
+from repro.core.memory_model import vit_memory
+from repro.fl.data import build_federated
+from repro.fl.engine import RoundEngine, SimConfig, build_context
+from repro.fl.registry import get_strategy
+from repro.fl.strategies.fedepth import FedepthStrategy
+from repro.fl.strategy import Context
+from repro.fl.systime import AsyncEngine, SystemModel, mixed_profiles
+from repro.models import vit
+
+from benchmarks.bench_lib import csv_row, rounds, write_json
+from benchmarks.round_engine import _timed_pass
+
+#: Strict-mode ceiling on ``seconds(obs=on) / seconds(obs=off)``.  The
+#: per-round python cost of the capture is microseconds against jitted
+#: work that takes milliseconds-to-seconds; the slack above 1.0 absorbs
+#: shared-runner timing noise, not telemetry cost.
+STRICT_MAX_OVERHEAD = 1.25
+
+#: The straggler mix the async cell simulates (seeded assignment).
+MIX = {"iot": 0.25, "phone": 0.5, "workstation": 0.25}
+
+
+def _assert_bitwise(a, b, cell: str) -> None:
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        if not np.array_equal(np.asarray(x), np.asarray(y)):
+            raise AssertionError(
+                f"[{cell}] obs=on perturbed the final params — telemetry "
+                f"must observe, never participate")
+
+
+def _cell_report(off_s: float, on_s: float, n_rounds: int) -> dict:
+    return {
+        "off_seconds": off_s,
+        "on_seconds": on_s,
+        "overhead": on_s / off_s,
+        "rounds_per_sec_off": n_rounds / off_s,
+        "rounds_per_sec_on": n_rounds / on_s,
+    }
+
+
+# ------------------------------------------------- fig7 ViT, vectorized
+def bench_vectorized_vit(n_rounds: int, seed: int = 0) -> dict:
+    clients, participation, batch = 100, 0.25, 8
+    cfg = vit_reduced(num_classes=10)
+    data = build_federated(num_clients=clients, alpha=1.0,
+                           n_train=clients * batch, n_test=400,
+                           image_size=cfg.image_size, seed=seed)
+    mem = vit_memory(cfg, batch=batch)
+    dec = decompose(mem, mem.block_train_bytes(0, max(1,
+                                                      len(mem.units) // 3)))
+    runner = blockwise.vit_runner(cfg)
+
+    def make(obs):
+        sim = SimConfig(rounds=n_rounds, participation=participation,
+                        lr=0.05, local_steps=2, batch_size=batch, seed=seed)
+        ctx = Context(sim=sim, num_clients=clients,
+                      sizes=data.client_sizes(),
+                      rng=np.random.default_rng(seed),
+                      key=jax.random.PRNGKey(seed), mem=mem,
+                      decomps=[dec] * clients, data=data)
+        engine = RoundEngine(FedepthStrategy(runner=runner), ctx,
+                             scheduler="vectorized", obs=obs)
+        return engine, vit.init(ctx.key, cfg), engine.default_batch_fn()
+
+    finals, secs = {}, {}
+    for label, obs in (("off", None), ("on", "on")):
+        engine, state0, batch_fn = make(obs)
+        _timed_pass(engine, state0, batch_fn, n_rounds, seed)     # warm jit
+        final, ts = _timed_pass(engine, state0, batch_fn, n_rounds, seed)
+        finals[label] = final
+        secs[label] = float(np.median(ts)) * n_rounds
+    _assert_bitwise(finals["off"], finals["on"], "vectorized_vit")
+    r = _cell_report(secs["off"], secs["on"], n_rounds)
+    r["config"] = {"clients": clients, "participation": participation,
+                   "rounds": n_rounds, "model": cfg.name,
+                   "batch_size": batch, "local_steps": 2,
+                   "method": "fedepth", "scheduler": "vectorized"}
+    return r
+
+
+# ------------------------------------------------- async straggler mix
+def bench_async_straggler(n_rounds: int, seed: int = 0):
+    clients = 16
+    data = build_federated(num_clients=clients, alpha=1.0,
+                           n_train=40 * clients, n_test=320,
+                           image_size=16, seed=seed)
+    cfg = rn_reduced(num_classes=10, image_size=16)
+    system = SystemModel(mixed_profiles(clients, MIX, seed=seed))
+
+    def run(obs):
+        sim = SimConfig(rounds=n_rounds, participation=0.5, lr=0.05,
+                        local_steps=1, batch_size=32, scenario="fair",
+                        seed=seed)
+        engine = AsyncEngine(get_strategy("fedepth"),
+                             build_context(data, sim, model_cfg=cfg),
+                             system=system, mode="async", obs=obs)
+        t0 = time.perf_counter()
+        state, _ = engine.run(eval_every=n_rounds)
+        jax.block_until_ready(state)
+        return engine, state, time.perf_counter() - t0
+
+    run(None)                                                     # warm jit
+    eng_off, state_off, off_s = run(None)
+    eng_on, state_on, on_s = run("on")
+    _assert_bitwise(state_off, state_on, "async_straggler")
+    assert repr(eng_off.trace) == repr(eng_on.trace), \
+        "obs=on changed the legacy trace"
+    r = _cell_report(off_s, on_s, n_rounds)
+    r["config"] = {"clients": clients, "mix": MIX, "rounds": n_rounds,
+                   "model": cfg.name, "method": "fedepth",
+                   "mode": "async"}
+    r["trace_events"] = len(eng_on.trace)
+    r["spans"] = len(eng_on.obs.tracer.spans)
+    return r, eng_on.obs
+
+
+def main() -> None:
+    t0 = time.time()
+    n_rounds = rounds(3)
+    strict = os.environ.get("REPRO_BENCH_STRICT") == "1"
+    print(f"# telemetry overhead ({n_rounds} timed rounds/cell, "
+          f"strict={'on' if strict else 'off'})")
+    vit_cell = bench_vectorized_vit(n_rounds)
+    async_cell, obs = bench_async_straggler(n_rounds)
+    payload = {"strict_max_overhead": STRICT_MAX_OVERHEAD,
+               "cells": {"vectorized_vit": vit_cell,
+                         "async_straggler": async_cell}}
+    for name, cell in payload["cells"].items():
+        print(f"  [{name}] off={cell['off_seconds']:.3f}s "
+              f"on={cell['on_seconds']:.3f}s "
+              f"overhead={cell['overhead']:.3f}x")
+        if strict and cell["overhead"] > STRICT_MAX_OVERHEAD:
+            raise AssertionError(
+                f"[{name}] obs overhead {cell['overhead']:.3f}x exceeds "
+                f"the strict bound {STRICT_MAX_OVERHEAD}x")
+    write_json("obs", payload)
+    # the real capture from the async cell, as a loadable Perfetto
+    # artifact next to the numbers (tools/trace_report.py consumes it)
+    out_dir = os.environ.get("REPRO_BENCH_DIR", ".")
+    trace_path = os.path.join(out_dir, "BENCH_obs_trace.json")
+    obs.export_chrome_trace(trace_path)
+    print(f"wrote {trace_path}")
+    us = (time.time() - t0) * 1e6
+    print(csv_row(
+        "obs_overhead", us,
+        ";".join(f"{n}_overhead={c['overhead']:.3f}"
+                 for n, c in payload["cells"].items())))
+
+
+if __name__ == "__main__":
+    main()

@@ -9,10 +9,10 @@ import sys
 import traceback
 
 from benchmarks import (async_sim, comm, fig5_partial_training,
-                        fig7_vit_finetune, kernel_microbench, prefix_cache,
-                        roofline_report, round_engine, scale, seq_fastpath,
-                        table1_memory, table2_budget_scenarios,
-                        table3_unbalanced)
+                        fig7_vit_finetune, kernel_microbench, obs_overhead,
+                        prefix_cache, roofline_report, round_engine, scale,
+                        seq_fastpath, table1_memory,
+                        table2_budget_scenarios, table3_unbalanced)
 
 BENCHES = {
     "table1_memory": table1_memory.main,
@@ -28,6 +28,7 @@ BENCHES = {
     "prefix_cache": prefix_cache.main,
     "comm": comm.main,
     "scale": scale.main,
+    "obs_overhead": obs_overhead.main,
 }
 
 

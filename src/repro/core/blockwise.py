@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 import jax
@@ -32,6 +33,30 @@ import jax.numpy as jnp
 from repro.core.decomposition import Decomposition
 from repro.core.jit_utils import donate, donation_supported
 from repro.models import common, resnet as resnet_mod, vit as vit_mod
+from repro.obs import active as obs_active
+
+
+def _jit_cache_probe(cache: dict, key, build, *, name: str):
+    """``cache.setdefault(key, build())`` with telemetry: when a capture
+    is active, count the hit/miss and time the builder (python trace
+    construction; XLA compile itself lands in the first dispatch, which
+    the scheduler's ``group_update_seconds`` covers).  The disabled path
+    is the bare two-line probe every jit cache in the repo already
+    uses."""
+    obs = obs_active()
+    if obs is None:
+        if key not in cache:
+            cache[key] = build()
+        return cache[key]
+    if key not in cache:
+        t0 = time.perf_counter()
+        cache[key] = build()
+        obs.metrics.counter("jit_cache_misses", cache=name).inc()
+        obs.metrics.histogram("jit_build_seconds", cache=name).observe(
+            time.perf_counter() - t0)
+    else:
+        obs.metrics.counter("jit_cache_hits", cache=name).inc()
+    return cache[key]
 
 
 # --------------------------------------------------------------------------
@@ -461,9 +486,7 @@ class PrefixCache:
         self._lo: Optional[int] = None   # prefix depth of the buffers
 
     def _jit(self, key, build):
-        if key not in self._jits:
-            self._jits[key] = build()
-        return self._jits[key]
+        return _jit_cache_probe(self._jits, key, build, name="prefix")
 
     def reset(self) -> None:
         """Drop the buffers (compiled prefix/advance fns are kept).
@@ -478,17 +501,30 @@ class PrefixCache:
         return the buffer list, aligned with ``batches``.  The advance
         only runs FORWARD (lo > the buffered depth, the just-trained
         range); any other transition re-buffers from scratch."""
+        obs = obs_active()
         if (self.zs is None or not self.runner.prefix_stable
                 or lo < self._lo):
+            fresh = self.zs is None
             fwd = self._jit(("prefix", lo),
                             lambda: make_prefix_forward(self.runner, lo))
             self.zs = [fwd(params, b) for b in batches]
+            if obs is not None:
+                # first buffering of an update vs a forced re-buffer
+                # (unstable prefix / backward transition)
+                obs.metrics.counter(
+                    "prefix_cache_buffer" if fresh
+                    else "prefix_cache_rebuffer").inc()
         elif lo != self._lo:
             adv = self._jit(("advance", self._lo, lo),
                             lambda: make_prefix_advance(self.runner,
                                                         self._lo, lo))
             self.zs = [adv(params, z) for z in self.zs]
+            if obs is not None:
+                obs.metrics.counter("prefix_cache_advance").inc()
         self._lo = lo
+        if obs is not None:
+            obs.metrics.gauge("prefix_cache_buffered_bytes").set(
+                self.buffered_bytes())
         return self.zs
 
     def buffered_bytes(self) -> int:
@@ -530,7 +566,10 @@ def client_update(runner: BlockRunner, params, dec: Decomposition, batches,
     elif prefix_cache:
         cache = PrefixCache(runner, jit_cache=step_cache)
 
+    obs = obs_active()
     for j, (lo, hi) in enumerate(dec.blocks):
+        block_span = None if obs is None else \
+            obs.tracer.begin("block", lo=lo, hi=hi, j=j)
         zs = cache.prepare(params, batches, lo) if cache is not None \
             else None
         train = runner.split(params, lo, hi)
@@ -545,12 +584,13 @@ def client_update(runner: BlockRunner, params, dec: Decomposition, batches,
 
         key = ("buffered" if cache is not None else "recompute",
                lo, hi, j, lr, momentum, prox_mu)
-        if key not in step_cache:
-            make = make_buffered_block_step if cache is not None \
-                else make_block_step
-            step_cache[key] = make(
-                runner, lo, hi, j, lr=lr, momentum=momentum, prox_mu=prox_mu)
-        step = step_cache[key]
+        make = make_buffered_block_step if cache is not None \
+            else make_block_step
+        step = _jit_cache_probe(
+            step_cache, key,
+            lambda: make(runner, lo, hi, j, lr=lr, momentum=momentum,
+                         prox_mu=prox_mu),
+            name="block_step")
 
         for _ in range(local_steps):
             if cache is not None:
@@ -561,6 +601,8 @@ def client_update(runner: BlockRunner, params, dec: Decomposition, batches,
                 for batch in batches:
                     train, vel = step(params, train, vel, anchor, batch)
         params = runner.merge(params, train, lo=lo, hi=hi)
+        if block_span is not None:
+            obs.tracer.end(block_span)
 
     return params
 
@@ -735,13 +777,13 @@ def group_update_for(runner: BlockRunner, dec: Decomposition, *,
     step_cache = step_cache if step_cache is not None else {}
     key = (dec.blocks, lr, momentum, local_steps, prox_mu,
            bool(prefix_cache))
-    if key not in step_cache:
-        step_cache[key] = make_group_update(runner, dec.blocks, lr=lr,
-                                            momentum=momentum,
-                                            local_steps=local_steps,
-                                            prox_mu=prox_mu,
-                                            prefix_cache=bool(prefix_cache))
-    return step_cache[key]
+    return _jit_cache_probe(
+        step_cache, key,
+        lambda: make_group_update(runner, dec.blocks, lr=lr,
+                                  momentum=momentum,
+                                  local_steps=local_steps, prox_mu=prox_mu,
+                                  prefix_cache=bool(prefix_cache)),
+        name="group")
 
 
 def client_update_batched(runner: BlockRunner, params, dec: Decomposition,

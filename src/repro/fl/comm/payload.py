@@ -41,6 +41,7 @@ error feedback repairs them.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Callable, Dict, Optional, Union
 
 import jax
@@ -51,6 +52,7 @@ from repro.fl.comm.codecs import (Codec, WirePayload, _is_float_array,
                                   get_codec, trees_congruent)
 from repro.fl.comm.error_feedback import ErrorFeedback
 from repro.fl.strategy import tree_bytes
+from repro.obs import active as obs_active
 
 DOWNLINK_MODES = ("full", "sliced", "delta")
 
@@ -177,6 +179,28 @@ class CommChannel:
         if self.ef:
             decoded = self.codec.decode(wire)
             self.ef.update(client_id, corrected, decoded, tag=spec.tag)
+        obs = obs_active()
+        if obs is not None:
+            raw = tree_bytes(spec.tree)
+            if raw > 0:
+                obs.metrics.histogram(
+                    "codec_encode_ratio",
+                    codec=self.codec.name).observe(wire.nbytes / raw)
+            obs.metrics.counter("codec_encoded_bytes",
+                                codec=self.codec.name).inc(wire.nbytes)
+            if decoded is not None:
+                # the residual the EF just stored: corrected − decoded
+                # on float leaves (telemetry-only host math — never on
+                # the training path)
+                sq = 0.0
+                for c, d in zip(jax.tree.leaves(corrected),
+                                jax.tree.leaves(decoded)):
+                    if _is_float_array(c):
+                        diff = (np.asarray(c, np.float64)
+                                - np.asarray(d, np.float64))
+                        sq += float(np.vdot(diff, diff))
+                obs.metrics.gauge("ef_residual_norm",
+                                  client=client_id).set(math.sqrt(sq))
         result.payload = WireUpdate(wire, self.codec, ref=spec.ref,
                                     rebuild=spec.rebuild, decoded=decoded)
         result.comm_bytes = wire.nbytes

@@ -39,6 +39,7 @@ from repro.fl.sampling import (CohortSampler, ClientScheduler,
                                VectorizedScheduler, make_scheduler)
 from repro.fl.strategy import (ClientResult, Context, FLStrategy,
                                wire_bytes)
+from repro.obs import make_obs, scope, span_if
 
 SCENARIOS: Dict[str, Tuple[float, ...]] = {
     "fair": (1 / 6, 1 / 3, 1 / 2, 1.0),
@@ -175,6 +176,19 @@ def _resolve_prefix_cache(spec) -> bool:
     return spec == "on"
 
 
+def resolve_history_sink(spec) -> Tuple[object, bool]:
+    """Resolve an engine's ``history_sink`` knob: ``None`` and sink
+    instances pass through caller-owned; a PATH becomes an engine-owned
+    ``JsonlHistorySink`` the engine closes when ``run()`` completes
+    (the deterministic flush+close contract — a caller-supplied instance
+    is only flushed, never closed, so it can outlive the run).  Returns
+    ``(sink, engine_owns_it)``."""
+    if spec is None or hasattr(spec, "write"):
+        return spec, False
+    from repro.fl.scale.history import JsonlHistorySink
+    return JsonlHistorySink(spec), True
+
+
 def apply_prefix_cache(ctx: Context, spec) -> Context:
     """Resolve a ``prefix_cache`` knob onto a context.  Returns ``ctx``
     unchanged when the contract already matches, else a SHALLOW COPY
@@ -199,7 +213,7 @@ class RoundEngine:
                  codec: Union[str, object, None] = "none",
                  downlink: str = "full",
                  channel: Optional[CommChannel] = None,
-                 history_sink=None):
+                 history_sink=None, obs=None):
         """``scheduler`` is an instance or a name from
         ``repro.fl.sampling.SCHEDULERS`` ("sequential" — the default — or
         "vectorized").  The vectorized scheduler stacks clients that share
@@ -225,17 +239,28 @@ class RoundEngine:
         share/ablate one (e.g. ``CommChannel(error_feedback=False)``);
         it wins over the two knobs.  See docs/comm.md.
 
-        ``history_sink`` (e.g. ``repro.fl.scale.JsonlHistorySink``)
-        streams each :class:`RoundRecord` to disk as it is produced
-        instead of accumulating the in-memory list; ``run`` then
-        returns an empty history (the stream IS the history).  Default
-        ``None`` keeps today's list behavior."""
+        ``history_sink`` (a ``repro.fl.scale.JsonlHistorySink``, or a
+        PATH the engine opens one at — then owned and closed when
+        ``run`` completes) streams each :class:`RoundRecord` to disk as
+        it is produced instead of accumulating the in-memory list;
+        ``run`` then returns an empty history (the stream IS the
+        history).  Default ``None`` keeps today's list behavior.
+
+        ``obs`` ("on"/"off"/bool, or a shared ``repro.obs.Obs``) enables
+        the telemetry layer: span tracing + the metrics registry,
+        activated for the dynamic extent of ``run``/``run_round`` so
+        every instrumented subsystem underneath (scheduler groups, jit
+        caches, the comm channel, PrefixCache, SpillStore) records into
+        it.  Default off = the pre-telemetry code path, bitwise
+        (docs/observability.md)."""
         self.strategy = strategy
         self.ctx = apply_prefix_cache(ctx, prefix_cache)
         self.sampler = sampler or UniformSampler()
         self.scheduler = make_scheduler(scheduler)
         self.channel = channel or CommChannel(codec, downlink)
-        self.history_sink = history_sink
+        self.history_sink, self._owns_sink = resolve_history_sink(
+            history_sink)
+        self.obs = make_obs(obs)
 
     # ------------------------------------------------------------------
     def default_batch_fn(self) -> Callable[[int], list]:
@@ -247,7 +272,26 @@ class RoundEngine:
                   batch_fn: Callable[[int], list]):
         """One communication round: broadcast (downlink accounting) ->
         sample -> local updates -> uplink encode -> decode ->
-        aggregate.  Returns (new_state, up_bytes, down_bytes)."""
+        aggregate.  Returns (new_state, up_bytes, down_bytes).
+
+        With ``obs`` enabled this is the telemetry activation boundary
+        for direct callers (benchmarks drive ``run_round`` without
+        ``run``): the round runs inside a ``round`` span with the
+        capture active, and the engine's byte counters accumulate."""
+        if self.obs is None:
+            return self._run_round(state, round_idx, batch_fn)
+        with scope(self.obs), \
+                self.obs.tracer.span("round", round=round_idx,
+                                     engine="round"):
+            state, comm, down = self._run_round(state, round_idx, batch_fn)
+        m = self.obs.metrics
+        m.counter("engine_rounds", engine="round").inc()
+        m.counter("engine_up_bytes", engine="round").inc(comm)
+        m.counter("engine_down_bytes", engine="round").inc(down)
+        return state, comm, down
+
+    def _run_round(self, state, round_idx: int,
+                   batch_fn: Callable[[int], list]):
         ctx, chan = self.ctx, self.channel
         cohort = self.sampler.sample(ctx, round_idx)
         down = sum(chan.downlink_bytes(self.strategy, ctx, state, int(k))
@@ -305,19 +349,33 @@ class RoundEngine:
         batch_fn = batch_fn or self.default_batch_fn()
         history: List[RoundRecord] = []
         t_last, bytes_acc, down_acc = time.perf_counter(), 0, 0
-        for rd in range(ctx.sim.rounds):
-            state, comm, down = self.run_round(state, rd, batch_fn)
-            bytes_acc += comm
-            down_acc += down
-            if (rd + 1) % eval_every == 0 or rd == ctx.sim.rounds - 1:
-                # eval_state keeps the record even with no eval source
-                acc = eval_state(self.strategy, ctx, state, eval_fn)
-                now = time.perf_counter()
-                rec = RoundRecord(rd + 1, acc, now - t_last,
-                                  bytes_acc, 0.0, down_acc)
-                if self.history_sink is not None:
-                    self.history_sink.write(rec)
-                else:
-                    history.append(rec)
-                t_last, bytes_acc, down_acc = now, 0, 0
+        try:
+            with scope(self.obs):
+                for rd in range(ctx.sim.rounds):
+                    state, comm, down = self.run_round(state, rd, batch_fn)
+                    bytes_acc += comm
+                    down_acc += down
+                    if (rd + 1) % eval_every == 0 \
+                            or rd == ctx.sim.rounds - 1:
+                        # eval_state keeps the record even with no
+                        # eval source
+                        with span_if(self.obs, "eval", round=rd + 1):
+                            acc = eval_state(self.strategy, ctx, state,
+                                             eval_fn)
+                        now = time.perf_counter()
+                        rec = RoundRecord(rd + 1, acc, now - t_last,
+                                          bytes_acc, 0.0, down_acc)
+                        if self.history_sink is not None:
+                            self.history_sink.write(rec)
+                        else:
+                            history.append(rec)
+                        t_last, bytes_acc, down_acc = now, 0, 0
+        finally:
+            # deterministic completion: engine-owned (path) sinks close,
+            # caller-supplied ones only flush — they may outlive the run
+            if self.history_sink is not None:
+                if self._owns_sink:
+                    self.history_sink.close()
+                elif hasattr(self.history_sink, "flush"):
+                    self.history_sink.flush()
         return state, history

@@ -17,6 +17,7 @@ from typing import Callable, List, Optional, Protocol, Sequence
 import numpy as np
 
 from repro.fl.strategy import ClientResult, Context, FLStrategy
+from repro.obs import active as obs_active
 
 
 class CohortSampler(Protocol):
@@ -95,8 +96,17 @@ class SequentialScheduler:
     always correct, never fast."""
 
     def run(self, ctx, strategy, state, cohort, batch_fn):
-        return [strategy.client_update(ctx, state, int(k), batch_fn(int(k)))
-                for k in cohort]
+        obs = obs_active()
+        if obs is None:
+            return [strategy.client_update(ctx, state, int(k),
+                                           batch_fn(int(k)))
+                    for k in cohort]
+        results = []
+        for k in cohort:
+            with obs.tracer.span("client-update", client=int(k)):
+                results.append(strategy.client_update(ctx, state, int(k),
+                                                      batch_fn(int(k))))
+        return results
 
 
 class VectorizedScheduler:
@@ -138,17 +148,47 @@ class VectorizedScheduler:
         for pos, cid in enumerate(ids):
             groups.setdefault(group_key(ctx, cid), []).append(pos)
 
+        obs = obs_active()
         results: List[Optional[ClientResult]] = [None] * len(ids)
         for key, positions in groups.items():
             group_batches = [batches[p] for p in positions]
             if (key is None or len(positions) < self.min_group
                     or not stackable(group_batches)):
                 for p in positions:
+                    if obs is not None:
+                        with obs.tracer.span("client-update",
+                                             client=ids[p], fallback=True):
+                            results[p] = strategy.client_update(
+                                ctx, state, ids[p], batches[p])
+                        continue
                     results[p] = strategy.client_update(
                         ctx, state, ids[p], batches[p])
+                if obs is not None:
+                    obs.metrics.counter("scheduler_fallback_clients",
+                                        scheduler="vectorized",
+                                        ).inc(len(positions))
                 continue
-            outs = update_batched(ctx, state, [ids[p] for p in positions],
-                                  group_batches)
+            if obs is None:
+                outs = update_batched(ctx, state,
+                                      [ids[p] for p in positions],
+                                      group_batches)
+            else:
+                # one span per stacked vmap dispatch; the observed
+                # seconds include XLA compile on the group's first call
+                # (jit_cache_* metrics tell the two apart)
+                with obs.tracer.span("cohort-group", size=len(positions),
+                                     signature=str(key)) as sp:
+                    outs = update_batched(ctx, state,
+                                          [ids[p] for p in positions],
+                                          group_batches)
+                obs.metrics.histogram("group_update_seconds",
+                                      signature=str(key),
+                                      ).observe(sp.wall_seconds)
+                obs.metrics.counter("group_dispatches",
+                                    scheduler="vectorized").inc()
+                obs.metrics.counter("group_clients",
+                                    scheduler="vectorized",
+                                    ).inc(len(positions))
             for p, res in zip(positions, outs):
                 results[p] = res
         return results

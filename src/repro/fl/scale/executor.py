@@ -60,6 +60,7 @@ from repro.core.blockwise import (batch_signature, broadcast_tree,
                                   stack_batches, stackable, unstack_tree)
 from repro.fl.sampling import VectorizedScheduler
 from repro.fl.strategy import ClientResult, wire_bytes
+from repro.obs import active as obs_active, span_if
 from repro.launch.mesh import make_data_mesh
 
 
@@ -311,19 +312,30 @@ class ShardedScheduler:
             by_sig: dict = {}
             for i, b in enumerate(gbatches):
                 by_sig.setdefault(batch_signature(b), []).append(i)
+            obs = obs_active()
             for idxs in by_sig.values():
                 s_ids = [gids[i] for i in idxs]
                 s_b = [gbatches[i] for i in idxs]
                 s_w = w[idxs]
                 if len(idxs) < 2:
+                    if obs is not None:
+                        obs.metrics.counter("scheduler_fallback_clients",
+                                            scheduler="sharded",
+                                            ).inc(len(idxs))
                     partials.append(self._host_partial(
                         ctx, strategy, state, s_ids, s_b, mask, s_w))
                     continue
                 step = cap or len(s_ids)
                 for s in range(0, len(s_ids), step):
-                    partials.append(self._mesh_partial(
-                        ctx, strategy, state, s_ids[s:s + step],
-                        s_b[s:s + step], mask, s_w[s:s + step]))
+                    with span_if(obs, "cohort-group",
+                                 size=len(s_ids[s:s + step]),
+                                 signature=str(key), scheduler="sharded"):
+                        partials.append(self._mesh_partial(
+                            ctx, strategy, state, s_ids[s:s + step],
+                            s_b[s:s + step], mask, s_w[s:s + step]))
+                    if obs is not None:
+                        obs.metrics.counter("group_dispatches",
+                                            scheduler="sharded").inc()
         comm = len(ids) * wire_bytes(state)
         return mesh_aggregate_masked(state, partials), comm
 

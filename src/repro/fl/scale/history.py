@@ -9,25 +9,57 @@ lists with an append-only JSONL stream: ``write(record)`` for round
 records, ``write_trace(event)`` for systime trace tuples, one JSON
 object per line, flushed per record so a crashed run keeps its history.
 
-Both engines accept ``history_sink=``; the default (``None``) keeps the
-in-memory lists bitwise-unchanged.  When a sink is set, ``run()``
-returns an EMPTY history list — the stream is the history.
+Both engines accept ``history_sink=`` (a sink instance, or a PATH — the
+engine then owns the sink and closes it when ``run`` completes); the
+default (``None``) keeps the in-memory lists bitwise-unchanged.  When a
+sink is set, ``run()`` returns an EMPTY history list — the stream is
+the history.
+
+Every line is valid JSON even when the simulation produces non-finite
+floats (a diverged run's ``accuracy=nan``): values are sanitized to
+``null`` before serialization and ``json.dumps`` runs with
+``allow_nan=False``, so a bare ``NaN``/``Infinity`` token — which
+``json.loads`` in spec-compliant readers rejects — can never reach the
+file (tests/test_obs.py).
 """
 from __future__ import annotations
 
 import json
+import math
 import os
 from typing import IO, Optional, Union
 
+import numpy as np
+
+
+def sanitize(obj):
+    """Recursively map non-finite floats to ``None`` and numpy scalars
+    to python scalars — the one normalization every line goes through
+    so the stream is always spec-compliant JSON."""
+    if isinstance(obj, float):
+        return obj if math.isfinite(obj) else None
+    if isinstance(obj, np.floating):
+        f = float(obj)
+        return f if math.isfinite(f) else None
+    if isinstance(obj, (np.integer, np.bool_)):
+        return obj.item()
+    if isinstance(obj, dict):
+        return {k: sanitize(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [sanitize(v) for v in obj]
+    return obj
+
 
 class JsonlHistorySink:
-    """JSONL writer for ``RoundRecord`` streams and systime traces.
+    """JSONL writer for ``RoundRecord`` streams, systime traces, and
+    telemetry exports.
 
     Records become ``{"kind": "round", ...fields}`` lines; trace events
     (heterogeneous tuples like ``("dispatch", t, client)``) become
-    ``{"kind": "trace", "event": [...]}``.  Accepts a path (parent dirs
-    created, file truncated) or an open text handle (left open on
-    ``close`` — the caller owns it)."""
+    ``{"kind": "trace", "event": [...]}``; :meth:`emit` writes any
+    other tagged line (the ``repro.obs`` JSONL exporter composes with
+    it).  Accepts a path (parent dirs created, file truncated) or an
+    open text handle (left open on ``close`` — the caller owns it)."""
 
     def __init__(self, path_or_file: Union[str, os.PathLike, IO[str]]):
         if hasattr(path_or_file, "write"):
@@ -47,7 +79,10 @@ class JsonlHistorySink:
     def _emit(self, obj: dict) -> None:
         if self._f is None:
             raise ValueError("history sink is closed")
-        self._f.write(json.dumps(obj) + "\n")
+        # allow_nan=False is the backstop: sanitize() already mapped
+        # non-finite values to None, so a raise here means a new
+        # unsanitized type snuck in — fail loudly, never write NaN
+        self._f.write(json.dumps(sanitize(obj), allow_nan=False) + "\n")
         self._f.flush()
 
     def write(self, record) -> None:
@@ -62,6 +97,17 @@ class JsonlHistorySink:
         """Stream one systime trace event (a plain tuple)."""
         self._emit({"kind": "trace", "event": list(event)})
         self.traces += 1
+
+    def emit(self, kind: str, **fields) -> None:
+        """Stream one arbitrary tagged line (``{"kind": kind, ...}``) —
+        the composition point for telemetry exporters."""
+        self._emit({"kind": kind, **fields})
+
+    def flush(self) -> None:
+        """Flush the underlying file (each line already flushes; this
+        is the explicit completion hook the engines call)."""
+        if self._f is not None:
+            self._f.flush()
 
     def close(self) -> None:
         if self._f is not None and self._owns:

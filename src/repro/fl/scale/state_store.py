@@ -34,6 +34,8 @@ from typing import Any, Iterator, Optional, Protocol, runtime_checkable
 
 import numpy as np
 
+from repro.obs import active as obs_active
+
 try:                                    # baked into the container image
     import msgpack
 except ImportError:                     # pragma: no cover - gated fallback
@@ -201,6 +203,11 @@ class SpillStore:
         return os.path.join(self._ensure_dir(), f"{h}.msgpack")
 
     # --------------------------------------------------------------- core
+    def _obs_counter(self, name: str):
+        obs = obs_active()
+        return None if obs is None else obs.metrics.counter(
+            name, store="spill")
+
     def _evict_to_capacity(self) -> None:
         while len(self._hot) > self.capacity:
             key, value = self._hot.popitem(last=False)     # LRU out
@@ -209,10 +216,16 @@ class SpillStore:
                 f.write(dumps(value))
             self._spilled[key] = path
             self.spill_count += 1
+            c = self._obs_counter("state_store_evictions")
+            if c is not None:
+                c.inc()
 
     def get(self, key, default=None):
         if key in self._hot:
             self._hot.move_to_end(key)
+            c = self._obs_counter("state_store_hot_hits")
+            if c is not None:
+                c.inc()
             return self._hot[key]
         path = self._spilled.pop(key, None)
         if path is None:
@@ -221,6 +234,9 @@ class SpillStore:
             value = loads(f.read())
         os.remove(path)
         self.load_count += 1
+        c = self._obs_counter("state_store_disk_loads")
+        if c is not None:
+            c.inc()
         self._hot[key] = value                              # promote
         self._evict_to_capacity()
         return value
@@ -241,6 +257,9 @@ class SpillStore:
 
     def pop(self, key, default=None):
         if key in self._hot:
+            c = self._obs_counter("state_store_hot_hits")
+            if c is not None:
+                c.inc()
             return self._hot.pop(key)
         path = self._spilled.pop(key, None)
         if path is None:
@@ -249,6 +268,9 @@ class SpillStore:
             value = loads(f.read())
         os.remove(path)
         self.load_count += 1
+        c = self._obs_counter("state_store_disk_loads")
+        if c is not None:
+            c.inc()
         return value
 
     def clear(self) -> None:

@@ -36,7 +36,8 @@ import numpy as np
 
 from repro.fl.comm import CommChannel
 from repro.fl.engine import (RoundRecord, apply_prefix_cache,
-                             default_batch_fn, eval_state)
+                             default_batch_fn, eval_state,
+                             resolve_history_sink)
 from repro.fl.sampling import (ClientScheduler, CohortSampler,
                                UniformSampler, make_scheduler)
 from repro.fl.strategy import (ClientResult, Context, FLStrategy,
@@ -45,6 +46,11 @@ from repro.fl.systime.availability import AvailabilityModel
 from repro.fl.systime.clock import EventLoop
 from repro.fl.systime.profiles import SystemModel, zero_latency_system
 from repro.fl.systime.staleness import default_aggregate_async
+from repro.obs import make_obs, scope, span_if
+
+#: Staleness is measured in whole server versions — integer buckets,
+#: not the seconds-scaled defaults.
+STALENESS_BUCKETS = (0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0)
 
 
 class AsyncEngine:
@@ -65,7 +71,7 @@ class AsyncEngine:
                  codec: Union[str, object, None] = "none",
                  downlink: str = "full",
                  channel: Optional[CommChannel] = None,
-                 history_sink=None, state_store=None):
+                 history_sink=None, state_store=None, obs=None):
         if mode not in ("sync", "async"):
             raise ValueError(f"mode must be 'sync' or 'async', got {mode!r}")
         self.strategy = strategy
@@ -115,17 +121,47 @@ class AsyncEngine:
         # SpillStore) parks async in-flight result snapshots so at most
         # its hot capacity stays resident however high the concurrency —
         # both default off (docs/scale.md).
-        self.history_sink = history_sink
+        self.history_sink, self._owns_sink = resolve_history_sink(
+            history_sink)
         self.state_store = state_store
         self._inflight_seq = 0
         self.trace: List[tuple] = []
+        # ``obs`` ("on"/"off"/bool, or a shared ``repro.obs.Obs``):
+        # telemetry capture for the run.  The legacy ``trace`` list
+        # becomes a thin projection of the typed SysEvents — same
+        # tuples, byte-identical per seed (tests/test_obs.py) — and the
+        # tracer's sim clock is this engine's virtual clock.
+        self.obs = make_obs(obs)
+        if self.obs is not None and self.obs.tracer.sim_clock is None:
+            self.obs.tracer.sim_clock = lambda: self.clock.now
 
-    def _trace(self, event: tuple) -> None:
+    def _trace(self, kind: str, t: float, client: int, version: int,
+               extra, attrs=None) -> None:
+        """Record one scheduling event.  The legacy tuple is what lands
+        in ``self.trace`` / the sink in ALL cases; with telemetry on it
+        is the projection of the typed event just recorded (``attrs`` —
+        the per-phase latency split — ride only on the typed side)."""
+        if self.obs is not None:
+            ev = self.obs.tracer.sys(kind, t, client, version, extra,
+                                     attrs=attrs)
+            event = ev.legacy()
+        else:
+            event = (kind, t, client, version, extra)
         if self.history_sink is not None \
                 and hasattr(self.history_sink, "write_trace"):
             self.history_sink.write_trace(event)
         else:
             self.trace.append(event)
+
+    def _phase_attrs(self, client: int, lat) -> dict:
+        """The Chrome-trace lane payload for one in-flight interval:
+        start time + the latency model's three phase durations + the
+        client's device tier (only built when telemetry is on)."""
+        return {"start": float(self.clock.now),
+                "tier": self.system.profiles[client].name,
+                "download": float(lat.download),
+                "compute": float(lat.compute),
+                "upload": float(lat.upload)}
 
     def _record(self, history: List[RoundRecord], rec: RoundRecord) -> None:
         if self.history_sink is not None:
@@ -191,9 +227,25 @@ class AsyncEngine:
         state = initial_state if initial_state is not None \
             else self.strategy.init_state(ctx)
         batch_fn = batch_fn or self.default_batch_fn()
-        if self.mode == "sync":
-            return self._run_sync(state, batch_fn, eval_fn, eval_every)
-        return self._run_async(state, batch_fn, eval_fn, eval_every)
+        if self.obs is not None:
+            # (re)bind in case one Obs is shared across engines — the
+            # RUNNING engine's virtual clock stamps sim time
+            self.obs.tracer.sim_clock = lambda: self.clock.now
+        try:
+            with scope(self.obs):
+                if self.mode == "sync":
+                    return self._run_sync(state, batch_fn, eval_fn,
+                                          eval_every)
+                return self._run_async(state, batch_fn, eval_fn,
+                                       eval_every)
+        finally:
+            # deterministic completion: engine-owned (path) sinks close,
+            # caller-supplied ones only flush — they may outlive the run
+            if self.history_sink is not None:
+                if self._owns_sink:
+                    self.history_sink.close()
+                elif hasattr(self.history_sink, "flush"):
+                    self.history_sink.flush()
 
     # ------------------------------------------------------------- sync mode
     def _sample_cohort(self, round_idx: int) -> np.ndarray:
@@ -211,6 +263,9 @@ class AsyncEngine:
         history: List[RoundRecord] = []
         t_last, bytes_acc, down_acc = time.perf_counter(), 0, 0
         for rd in range(ctx.sim.rounds):
+            round_span = None if self.obs is None else \
+                self.obs.tracer.begin("round", round=rd,
+                                      engine="systime-sync")
             cohort = [int(k) for k in self._sample_cohort(rd)]
             # broadcast: per-client encoded downlink (full model, or the
             # sliced/delta wire under the channel's downlink modes) —
@@ -237,33 +292,43 @@ class AsyncEngine:
                 ef_snap = chan.snapshot_uplink(k)
                 res = chan.encode_result(self.strategy, ctx, state, k, res)
                 lat, up = self._latency(k, res, n_drawn.get(k, 1), downs[k])
+                attrs = None if self.obs is None \
+                    else self._phase_attrs(k, lat)
                 if self.deadline_s is not None \
                         and lat.total > self.deadline_s:
                     chan.rollback_uplink(k, ef_snap)
                     # the miss is observed when the server gives up
-                    self._trace(("miss",
-                                       float(self.clock.now
-                                             + self.deadline_s), k, rd,
-                                       round(float(lat.total), 9)))
+                    self._trace("miss",
+                                float(self.clock.now + self.deadline_s),
+                                k, rd, round(float(lat.total), 9),
+                                attrs=attrs)
+                    if self.obs is not None:
+                        self.obs.metrics.counter(
+                            "deadline_misses",
+                            tier=self.system.profiles[k].name).inc()
                     continue
                 kept.append(chan.decode_result(res))
                 totals.append(lat.total)
                 bytes_acc += up
                 # stamp the client's virtual COMPLETION time, matching
                 # async-mode finish semantics
-                self._trace(("finish",
-                                   float(self.clock.now + lat.total), k,
-                                   rd, round(float(lat.total), 9)))
+                self._trace("finish",
+                            float(self.clock.now + lat.total), k,
+                            rd, round(float(lat.total), 9), attrs=attrs)
             round_time = max(totals) if totals else 0.0
             if self.deadline_s is not None and len(kept) < len(cohort):
                 round_time = self.deadline_s   # server waits out the deadline
             self.clock.advance(round_time)
             if kept:
                 state = self.strategy.aggregate(ctx, state, kept)
-            self._trace(("aggregate", float(self.clock.now), -1, rd,
-                               len(kept)))
+            self._trace("aggregate", float(self.clock.now), -1, rd,
+                        len(kept))
+            if round_span is not None:
+                self.obs.tracer.end(round_span, cohort=len(cohort),
+                                    merged=len(kept))
             if (rd + 1) % eval_every == 0 or rd == ctx.sim.rounds - 1:
-                acc = self._eval(state, eval_fn)
+                with span_if(self.obs, "eval", round=rd + 1):
+                    acc = self._eval(state, eval_fn)
                 now = time.perf_counter()
                 self._record(history,
                              RoundRecord(rd + 1, acc, now - t_last,
@@ -303,7 +368,8 @@ class AsyncEngine:
         batches = batch_fn(k)
         # the client trains on the CURRENT state — an eager snapshot; the
         # result just doesn't merge until its finish event fires
-        res = self.strategy.client_update(self.ctx, state, k, batches)
+        with span_if(self.obs, "client-update", client=k, version=version):
+            res = self.strategy.client_update(self.ctx, state, k, batches)
         res.client_id = k
         # encode against the snapshot: the WireUpdate carries that very
         # reference, so the server decodes correctly however many
@@ -323,9 +389,11 @@ class AsyncEngine:
             payload = key
         self.clock.schedule(lat.total, "finish", client=k,
                             payload=payload)
-        self._trace(("dispatch_forced" if forced else "dispatch",
-                           float(self.clock.now), k, version,
-                           round(float(lat.total), 9)))
+        self._trace("dispatch_forced" if forced else "dispatch",
+                    float(self.clock.now), k, version,
+                    round(float(lat.total), 9),
+                    attrs=None if self.obs is None
+                    else self._phase_attrs(k, lat))
         return True
 
     def _run_async(self, state, batch_fn, eval_fn, eval_every):
@@ -348,13 +416,20 @@ class AsyncEngine:
             staleness = version - v0
             buffered.append((res, staleness))
             bytes_acc += up
-            self._trace(("finish", float(self.clock.now), ev.client, version,
-                               staleness))
+            self._trace("finish", float(self.clock.now), ev.client, version,
+                        staleness)
+            if self.obs is not None:
+                self.obs.metrics.histogram(
+                    "staleness", buckets=STALENESS_BUCKETS,
+                    tier=self.system.profiles[ev.client].name,
+                ).observe(staleness)
             if len(buffered) >= self.buffer_size:
-                state = self._apply_async(state, buffered)
+                with span_if(self.obs, "aggregate", version=version + 1,
+                             merged=len(buffered)):
+                    state = self._apply_async(state, buffered)
                 version += 1
-                self._trace(("aggregate", float(self.clock.now), -1, version,
-                                   len(buffered)))
+                self._trace("aggregate", float(self.clock.now), -1, version,
+                            len(buffered))
                 buffered = []
                 if version % eval_every == 0 or version == ctx.sim.rounds:
                     acc = self._eval(state, eval_fn)

@@ -1,0 +1,138 @@
+#!/usr/bin/env python
+"""Summarize a Chrome-trace telemetry export into a round-time breakdown.
+
+Input: the JSON ``repro.obs.Obs.export_chrome_trace`` writes (the
+``traceEvents`` array; see docs/observability.md §Chrome trace).  The
+sim-time process carries one ``download``/``compute``/``upload`` slice
+triple per client in-flight interval, tier-tagged via ``args.tier`` —
+this report folds those slices into:
+
+* per device tier: total and mean seconds split into compute vs comm
+  (download + upload), interval counts, deadline-missed work;
+* overall: the same split across tiers, aggregate count, sim-time
+  makespan — i.e. where the simulated round time actually goes.
+
+    python tools/trace_report.py trace.json
+    python tools/trace_report.py trace.json --json report.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+#: Phase -> breakdown bucket: the latency model's link terms are "comm",
+#: its FLOP term is "compute".
+PHASE_BUCKET = {"download": "comm", "upload": "comm", "compute": "compute"}
+
+
+def load_events(path: str) -> list:
+    with open(path) as f:
+        doc = json.load(f)
+    if isinstance(doc, dict):
+        return doc.get("traceEvents", [])
+    return doc                       # bare-array Chrome traces are legal
+
+
+def summarize(events: list) -> dict:
+    """Fold phase slices into the per-tier breakdown (seconds)."""
+    tiers: dict = defaultdict(lambda: {
+        "compute_s": 0.0, "comm_s": 0.0, "intervals": 0, "missed": 0,
+        "missed_s": 0.0, "clients": set()})
+    aggregates = 0
+    t_max = 0.0
+    for ev in events:
+        ts = float(ev.get("ts", 0.0))
+        if ev.get("ph") == "i" and ev.get("name") == "aggregate":
+            aggregates += 1
+            t_max = max(t_max, ts / 1e6)
+            continue
+        if ev.get("ph") != "X":
+            continue
+        bucket = PHASE_BUCKET.get(ev.get("name"))
+        args = ev.get("args") or {}
+        if bucket is None or "tier" not in args:
+            continue                 # wall-clock spans, round markers
+        dur = float(ev.get("dur", 0.0)) / 1e6
+        rec = tiers[str(args["tier"])]
+        rec[f"{bucket}_s"] += dur
+        t_max = max(t_max, (ts + float(ev.get("dur", 0.0))) / 1e6)
+        if args.get("client") is not None:
+            rec["clients"].add(args["client"])
+        if args.get("interval_start"):       # one marked slice per interval
+            rec["intervals"] += 1
+            if args.get("missed"):
+                rec["missed"] += 1
+        if args.get("missed"):
+            rec["missed_s"] += dur
+    out_tiers = {}
+    for tier, rec in sorted(tiers.items()):
+        total = rec["compute_s"] + rec["comm_s"]
+        out_tiers[tier] = {
+            "compute_s": rec["compute_s"],
+            "comm_s": rec["comm_s"],
+            "total_s": total,
+            "compute_frac": rec["compute_s"] / total if total else 0.0,
+            "intervals": rec["intervals"],
+            "clients": len(rec["clients"]),
+            "missed_intervals": rec["missed"],
+            "missed_s": rec["missed_s"],
+        }
+    return {
+        "tiers": out_tiers,
+        "overall": {
+            "compute_s": sum(t["compute_s"] for t in out_tiers.values()),
+            "comm_s": sum(t["comm_s"] for t in out_tiers.values()),
+            "intervals": sum(t["intervals"] for t in out_tiers.values()),
+            "missed_intervals": sum(t["missed_intervals"]
+                                    for t in out_tiers.values()),
+            "aggregates": aggregates,
+            "sim_makespan_s": t_max,
+        },
+    }
+
+
+def render(report: dict) -> str:
+    lines = []
+    hdr = (f"{'tier':<14} {'total_s':>10} {'compute_s':>10} "
+           f"{'comm_s':>10} {'cmp%':>6} {'ivals':>6} {'miss':>5}")
+    lines.append(hdr)
+    lines.append("-" * len(hdr))
+    for tier, t in report["tiers"].items():
+        lines.append(
+            f"{tier:<14} {t['total_s']:>10.3f} {t['compute_s']:>10.3f} "
+            f"{t['comm_s']:>10.3f} {100 * t['compute_frac']:>5.1f}% "
+            f"{t['intervals']:>6d} {t['missed_intervals']:>5d}")
+    o = report["overall"]
+    lines.append("-" * len(hdr))
+    lines.append(
+        f"{'overall':<14} {o['compute_s'] + o['comm_s']:>10.3f} "
+        f"{o['compute_s']:>10.3f} {o['comm_s']:>10.3f} "
+        f"{'':>6} {o['intervals']:>6d} {o['missed_intervals']:>5d}")
+    lines.append(f"aggregates: {o['aggregates']}   "
+                 f"sim makespan: {o['sim_makespan_s']:.3f}s")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome-trace JSON "
+                    "(Obs.export_chrome_trace output)")
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="also write the report as JSON to this path")
+    args = ap.parse_args(argv)
+    report = summarize(load_events(args.trace))
+    if not report["tiers"]:
+        print("no tier-tagged phase slices found — was the trace "
+              "produced by a systime engine run with obs enabled?",
+              file=sys.stderr)
+    print(render(report))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
