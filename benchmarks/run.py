@@ -8,7 +8,7 @@ import argparse
 import sys
 import traceback
 
-from benchmarks import (async_sim, comm, fig5_partial_training,
+from benchmarks import (async_sim, comm, faults, fig5_partial_training,
                         fig7_vit_finetune, kernel_microbench, obs_overhead,
                         prefix_cache, roofline_report, round_engine, scale,
                         seq_fastpath, table1_memory,
@@ -29,6 +29,7 @@ BENCHES = {
     "comm": comm.main,
     "scale": scale.main,
     "obs_overhead": obs_overhead.main,
+    "faults": faults.main,
 }
 
 

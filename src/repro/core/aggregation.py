@@ -18,6 +18,8 @@ from typing import List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.obs import active as _obs_active
+
 # NOTE on buffer donation (core/jit_utils.py): the aggregation jits are
 # deliberately NOT donated.  Client payloads are not private buffers:
 # partial-training FeDepth clients pass the untouched prefix through
@@ -54,13 +56,53 @@ def _decoded(client_params: Sequence) -> tuple:
                  for p in client_params)
 
 
-def fedavg(client_params: Sequence, weights: Sequence[float]):
+@jax.jit
+def _all_finite_jit(tree):
+    flags = [jnp.all(jnp.isfinite(leaf)) for leaf in jax.tree.leaves(tree)
+             if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating)]
+    if not flags:
+        return jnp.bool_(True)
+    return jnp.all(jnp.stack(flags))
+
+
+def _finite_filter(client_params: tuple, *aligned: Sequence):
+    """The default non-finite guard at the aggregate boundary: one
+    NaN/Inf client payload used to poison the whole round's average
+    (NaN propagates through the weighted sum into every coordinate of
+    the new server state — from which no later round recovers).  Drop
+    non-finite payloads, keeping ``aligned`` sequences (weights, masks)
+    in step; when EVERY payload is non-finite the full set passes
+    through unchanged (nothing sane to average — the caller sees the
+    legacy behavior).  One jitted finiteness reduction per client; the
+    all-finite path returns the inputs untouched, so healthy rounds are
+    bitwise identical to the unguarded aggregator."""
+    flags = [bool(_all_finite_jit(p)) for p in client_params]
+    if all(flags):
+        return (client_params,) + aligned
+    obs = _obs_active()
+    if obs is not None:
+        obs.metrics.counter("aggregate_nonfinite_dropped").inc(
+            sum(1 for f in flags if not f))
+    keep = [i for i, f in enumerate(flags) if f]
+    if not keep:
+        return (client_params,) + aligned
+    return tuple(tuple(seq[i] for i in keep)
+                 for seq in (client_params,) + tuple(aligned))
+
+
+def fedavg(client_params: Sequence, weights: Sequence[float],
+           guard: bool = True):
     """Weighted average of client pytrees.  weights ~ p_k, renormalized
     over the sampled cohort.  Jitted: the whole tree-wide weighted sum is
     one dispatch, not one per (leaf, client).  Accepts wire-encoded
-    payloads (see :func:`_decoded`)."""
-    return _fedavg_jit(_decoded(client_params),
-                       jnp.asarray(weights, jnp.float32))
+    payloads (see :func:`_decoded`).  ``guard`` (default on) drops
+    non-finite client payloads before averaging (:func:`_finite_filter`
+    — a single diverged client no longer poisons the round)."""
+    params = _decoded(client_params)
+    weights = tuple(weights)
+    if guard:
+        params, weights = _finite_filter(params, weights)
+    return _fedavg_jit(params, jnp.asarray(weights, jnp.float32))
 
 
 def fedavg_delta(global_params, client_params: Sequence,
@@ -97,17 +139,23 @@ def _masked_jit(global_params, trees, masks, w):
 
 def aggregate_masked(global_params, client_params: Sequence,
                      weights: Sequence[float],
-                     trained_masks: Sequence) -> object:
+                     trained_masks: Sequence,
+                     guard: bool = True) -> object:
     """Per-parameter reweighting by who actually trained each leaf.
 
     ``trained_masks[k]`` is a pytree of {0,1} scalars (or arrays) marking
     which leaves client k trained (partial-training clients skip a
     prefix).  Leaves nobody trained keep the global value.  Jitted (one
     dispatch per round).  Accepts wire-encoded payloads (see
-    :func:`_decoded`).
+    :func:`_decoded`).  ``guard`` (default on) drops non-finite client
+    payloads — with their weights and masks — before merging
+    (:func:`_finite_filter`).
     """
-    return _masked_jit(global_params, _decoded(client_params),
-                       tuple(trained_masks),
+    params = _decoded(client_params)
+    weights, masks = tuple(weights), tuple(trained_masks)
+    if guard:
+        params, weights, masks = _finite_filter(params, weights, masks)
+    return _masked_jit(global_params, params, masks,
                        jnp.asarray(weights, jnp.float32))
 
 

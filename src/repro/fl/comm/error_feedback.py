@@ -88,6 +88,21 @@ class ErrorFeedback:
             - np.asarray(d, np.float32) if _is_float_array(c) else c,
             corrected, decoded))
 
+    # ------------------------------------------------ checkpoint/resume
+    def export_state(self) -> list:
+        """All residual entries as ``[client_id, (tag, residual)]``
+        pairs — the checkpointable form (docs/robustness.md §Resume).
+        Requires a store with ``keys()`` (dicts, PrefixedStore and
+        SpillStore all have one)."""
+        return [[k, self._residuals.get(k)]
+                for k in sorted(self._residuals.keys(), key=repr)]
+
+    def import_state(self, entries: list) -> None:
+        self._residuals.clear()
+        for k, entry in entries:
+            self._residuals[k] = tuple(entry) if isinstance(entry, list) \
+                else entry
+
     # ---------------------------------------------- delivery rollback
     def snapshot(self, client_id: int):
         """Opaque pre-encode state for :meth:`restore` — taken by the

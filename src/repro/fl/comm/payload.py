@@ -224,6 +224,27 @@ class CommChannel:
         if self.ef:
             self.ef.restore(client_id, snap)
 
+    # ------------------------------------------------ checkpoint/resume
+    def export_state(self) -> dict:
+        """The channel's per-client maps in checkpointable form: EF
+        residuals + the delta-downlink last-seen tracker.  Both are part
+        of the bitwise resume contract — byte accounting and residual
+        correction must continue exactly where the crashed run stopped
+        (docs/robustness.md §Resume)."""
+        last = [[k, self._last_sent.get(k)]
+                for k in sorted(self._last_sent.keys(), key=repr)] \
+            if hasattr(self._last_sent, "keys") else []
+        return {"ef": self.ef.export_state() if self.ef else None,
+                "last_sent": last}
+
+    def import_state(self, state: dict) -> None:
+        if self.ef and state.get("ef") is not None:
+            self.ef.import_state(state["ef"])
+        if hasattr(self._last_sent, "clear"):
+            self._last_sent.clear()
+        for k, v in state.get("last_sent", []):
+            self._last_sent[k] = v
+
     # ------------------------------------------------------------ downlink
     def downlink_bytes(self, strategy, ctx, state, client_id: int) -> int:
         """Wire size of what the server ships ``client_id`` this

@@ -176,17 +176,58 @@ def _resolve_prefix_cache(spec) -> bool:
     return spec == "on"
 
 
-def resolve_history_sink(spec) -> Tuple[object, bool]:
+def resolve_history_sink(spec, mode: str = "w") -> Tuple[object, bool]:
     """Resolve an engine's ``history_sink`` knob: ``None`` and sink
     instances pass through caller-owned; a PATH becomes an engine-owned
     ``JsonlHistorySink`` the engine closes when ``run()`` completes
     (the deterministic flush+close contract — a caller-supplied instance
     is only flushed, never closed, so it can outlive the run).  Returns
-    ``(sink, engine_owns_it)``."""
+    ``(sink, engine_owns_it)``.  ``mode="a"`` appends instead of
+    truncating — the checkpoint-resume path, where the stream already
+    holds the pre-crash records."""
     if spec is None or hasattr(spec, "write"):
         return spec, False
     from repro.fl.scale.history import JsonlHistorySink
-    return JsonlHistorySink(spec), True
+    return JsonlHistorySink(spec, mode=mode), True
+
+
+def resolve_faults(faults, resilience):
+    """Resolve the engines' ``faults=``/``resilience=`` knobs into one
+    ``FaultRuntime`` (or ``None`` when both are off — the single check
+    every fault-aware branch guards on, keeping ``faults=None`` bitwise
+    identical to the pre-robustness engines)."""
+    if faults is None and resilience is None:
+        return None
+    from repro.fl.faults import FaultRuntime
+    return FaultRuntime(faults, resilience)
+
+
+def resolve_checkpointing(every, ckpt_dir, keep, resume):
+    """Resolve the engines' checkpoint/resume knobs into
+    ``(EngineCheckpointer | None, resume_dir | None)``."""
+    if every is not None and ckpt_dir is None:
+        raise ValueError("checkpoint_every requires checkpoint_dir")
+    resume_dir = None
+    if resume:
+        resume_dir = resume if isinstance(resume, str) else ckpt_dir
+        if resume_dir is None:
+            raise ValueError("resume=True requires checkpoint_dir "
+                             "(or pass the directory as resume=)")
+    if every is None and resume_dir is None:
+        return None, None
+    from repro.fl.faults import EngineCheckpointer
+    ckpt = EngineCheckpointer(ckpt_dir, every, keep=keep) \
+        if every is not None else None
+    return ckpt, resume_dir
+
+
+def load_resume(resume_dir):
+    """Load the newest usable checkpoint pair from ``resume_dir`` —
+    ``(round_idx, server_state, aux)`` or ``None`` (fresh start when
+    the directory is empty: the very first run of a
+    checkpoint-and-restart loop needs no special casing)."""
+    from repro.fl.faults import EngineCheckpointer
+    return EngineCheckpointer(resume_dir, every=1).load_latest()
 
 
 def apply_prefix_cache(ctx: Context, spec) -> Context:
@@ -213,7 +254,12 @@ class RoundEngine:
                  codec: Union[str, object, None] = "none",
                  downlink: str = "full",
                  channel: Optional[CommChannel] = None,
-                 history_sink=None, obs=None):
+                 history_sink=None, obs=None,
+                 faults=None, resilience=None,
+                 checkpoint_every: Optional[int] = None,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_keep: int = 3,
+                 resume: Union[bool, str, None] = None):
         """``scheduler`` is an instance or a name from
         ``repro.fl.sampling.SCHEDULERS`` ("sequential" — the default — or
         "vectorized").  The vectorized scheduler stacks clients that share
@@ -252,14 +298,28 @@ class RoundEngine:
         every instrumented subsystem underneath (scheduler groups, jit
         caches, the comm channel, PrefixCache, SpillStore) records into
         it.  Default off = the pre-telemetry code path, bitwise
-        (docs/observability.md)."""
+        (docs/observability.md).
+
+        ``faults`` (a ``repro.fl.faults.FaultPlan``) injects seeded
+        client faults into every dispatch; ``resilience`` (a
+        ``ResiliencePolicy``) turns on retry-with-backoff, update
+        quarantine and cohort-shortfall degradation.  Both default
+        ``None`` = every pre-existing code path bitwise identical.
+        ``checkpoint_every``/``checkpoint_dir`` write a crash-safe
+        checkpoint pair every N rounds (server state + rng/EF/history
+        aux); ``resume`` (``True`` = from ``checkpoint_dir``, or an
+        explicit directory) continues a killed run bitwise — see
+        docs/robustness.md."""
         self.strategy = strategy
         self.ctx = apply_prefix_cache(ctx, prefix_cache)
         self.sampler = sampler or UniformSampler()
         self.scheduler = make_scheduler(scheduler)
         self.channel = channel or CommChannel(codec, downlink)
+        self._faultrt = resolve_faults(faults, resilience)
+        self._ckpt, self._resume_dir = resolve_checkpointing(
+            checkpoint_every, checkpoint_dir, checkpoint_keep, resume)
         self.history_sink, self._owns_sink = resolve_history_sink(
-            history_sink)
+            history_sink, mode="a" if self._resume_dir else "w")
         self.obs = make_obs(obs)
 
     # ------------------------------------------------------------------
@@ -278,12 +338,14 @@ class RoundEngine:
         for direct callers (benchmarks drive ``run_round`` without
         ``run``): the round runs inside a ``round`` span with the
         capture active, and the engine's byte counters accumulate."""
+        inner = self._run_round if self._faultrt is None \
+            else self._run_round_resilient
         if self.obs is None:
-            return self._run_round(state, round_idx, batch_fn)
+            return inner(state, round_idx, batch_fn)
         with scope(self.obs), \
                 self.obs.tracer.span("round", round=round_idx,
                                      engine="round"):
-            state, comm, down = self._run_round(state, round_idx, batch_fn)
+            state, comm, down = inner(state, round_idx, batch_fn)
         m = self.obs.metrics
         m.counter("engine_rounds", engine="round").inc()
         m.counter("engine_up_bytes", engine="round").inc(comm)
@@ -318,6 +380,72 @@ class RoundEngine:
         results = [chan.decode_result(r) for r in results]
         return self.strategy.aggregate(ctx, state, results), comm, down
 
+    def _run_round_resilient(self, state, round_idx: int,
+                             batch_fn: Callable[[int], list]):
+        """The fault-aware round (taken only when ``faults=`` or
+        ``resilience=`` is set — ``_run_round`` stays the bitwise
+        pre-robustness path).  Per client: local update -> fault
+        resolution (payload damage / retry loop / give up) -> EF
+        snapshot -> encode -> decode -> quarantine validation (rejected
+        updates roll the EF residual back, so their transmitted mass is
+        retransmitted later) -> aggregate the survivors.  Cohort
+        shortfall is handled by the policy's degradation mode
+        (docs/robustness.md §Policies); an empty surviving set leaves
+        the state untouched (a no-op round, never a crash)."""
+        ctx, chan, rt = self.ctx, self.channel, self._faultrt
+        cohort = [int(k) for k in self.sampler.sample(ctx, round_idx)]
+        target = len(cohort)
+        cohort = rt.overprovision(ctx, cohort)
+        down = sum(chan.downlink_bytes(self.strategy, ctx, state, k)
+                   for k in cohort)
+        comm = 0
+        kept: List[ClientResult] = []
+
+        def process(clients) -> int:
+            nonlocal comm
+            delivered = 0
+            results = self.scheduler.run(ctx, self.strategy, state,
+                                         clients, batch_fn)
+            for k, res in zip(clients, results):
+                res.client_id = k
+                outcome = rt.resolve(
+                    round_idx, k, res,
+                    lambda k=k: self.strategy.client_update(
+                        ctx, state, k, batch_fn(k)))
+                if not outcome.delivered:
+                    continue
+                ef_snap = chan.snapshot_uplink(k)
+                enc = chan.encode_result(self.strategy, ctx, state, k,
+                                         outcome.result)
+                up = enc.comm_bytes if enc.comm_bytes is not None \
+                    else wire_bytes(enc.payload)
+                dec = chan.decode_result(enc)
+                verdict = rt.validate_one(dec.payload, state)
+                if verdict is not None:
+                    # the garbage DID cross the wire — its bytes count;
+                    # its mass must not vanish from the EF residual
+                    chan.rollback_uplink(k, ef_snap)
+                    rt.record_quarantine(k, verdict)
+                    comm += up
+                    continue
+                comm += up
+                kept.append(dec)
+                delivered += 1
+            return delivered
+
+        delivered = process(cohort)
+        missing = target - delivered
+        if missing > 0:
+            rt.record_shortfall(missing)
+            extra = rt.resample(ctx, cohort, missing)
+            if extra:
+                down += sum(chan.downlink_bytes(self.strategy, ctx,
+                                                state, k) for k in extra)
+                process(extra)
+        if kept:
+            state = self.strategy.aggregate(ctx, state, kept)
+        return state, comm, down
+
     def run(self, *, initial_state=None,
             batch_fn: Optional[Callable[[int], list]] = None,
             eval_fn: Optional[Callable] = None,
@@ -339,19 +467,37 @@ class RoundEngine:
 
         With a ``history_sink``, each record streams to the sink as it
         is produced and the returned history list stays EMPTY — bounded
-        memory however many rounds run (docs/scale.md §History)."""
+        memory however many rounds run (docs/scale.md §History).
+
+        With ``resume=`` set and a usable checkpoint present, the run
+        CONTINUES from it: server state, rng stream, channel state and
+        history-so-far restore to the values of the checkpointed round
+        and the loop picks up at the next one, reproducing the
+        uninterrupted run bitwise (docs/robustness.md §Resume)."""
         ctx = self.ctx
         setup = getattr(self.strategy, "setup", None)
         if setup is not None:
             setup(ctx)
-        state = initial_state if initial_state is not None \
-            else self.strategy.init_state(ctx)
-        batch_fn = batch_fn or self.default_batch_fn()
+        resumed = load_resume(self._resume_dir) \
+            if self._resume_dir is not None else None
         history: List[RoundRecord] = []
-        t_last, bytes_acc, down_acc = time.perf_counter(), 0, 0
+        start_rd, bytes_acc, down_acc = 0, 0, 0
+        if resumed is not None:
+            rd0, state, aux = resumed
+            start_rd = rd0 + 1
+            bytes_acc = int(aux.get("bytes_acc", 0))
+            down_acc = int(aux.get("down_acc", 0))
+            if self.history_sink is None:
+                history = [RoundRecord(*r) for r in aux.get("history", [])]
+            self._import_aux(aux)
+        else:
+            state = initial_state if initial_state is not None \
+                else self.strategy.init_state(ctx)
+        batch_fn = batch_fn or self.default_batch_fn()
+        t_last = time.perf_counter()
         try:
             with scope(self.obs):
-                for rd in range(ctx.sim.rounds):
+                for rd in range(start_rd, ctx.sim.rounds):
                     state, comm, down = self.run_round(state, rd, batch_fn)
                     bytes_acc += comm
                     down_acc += down
@@ -370,6 +516,9 @@ class RoundEngine:
                         else:
                             history.append(rec)
                         t_last, bytes_acc, down_acc = now, 0, 0
+                    if self._ckpt is not None and self._ckpt.due(rd):
+                        self._ckpt.save(rd, state, self._export_aux(
+                            history, bytes_acc, down_acc))
         finally:
             # deterministic completion: engine-owned (path) sinks close,
             # caller-supplied ones only flush — they may outlive the run
@@ -379,3 +528,27 @@ class RoundEngine:
                 elif hasattr(self.history_sink, "flush"):
                     self.history_sink.flush()
         return state, history
+
+    # ------------------------------------------------ checkpoint/resume
+    def _export_aux(self, history, bytes_acc: int, down_acc: int) -> dict:
+        """Everything bitwise continuation needs beyond the server
+        state itself (docs/robustness.md §Resume): the shared rng
+        stream, the channel's EF residuals + downlink tracker, the
+        validator's norm calibration, and the history accumulated so
+        far (rows stay on disk when a sink streams them)."""
+        return {
+            "kind": "round",
+            "rng": self.ctx.rng.bit_generator.state,
+            "channel": self.channel.export_state(),
+            "faultrt": self._faultrt.export_state()
+            if self._faultrt is not None else None,
+            "history": [list(r) for r in history]
+            if self.history_sink is None else [],
+            "bytes_acc": int(bytes_acc), "down_acc": int(down_acc),
+        }
+
+    def _import_aux(self, aux: dict) -> None:
+        self.ctx.rng.bit_generator.state = aux["rng"]
+        self.channel.import_state(aux.get("channel") or {})
+        if self._faultrt is not None and aux.get("faultrt"):
+            self._faultrt.import_state(aux["faultrt"])

@@ -1,0 +1,32 @@
+"""Deterministic fault injection + engine resilience
+(docs/robustness.md).
+
+Public surface::
+
+    from repro.fl.faults import FaultPlan, ResiliencePolicy
+
+    eng = RoundEngine(strategy, ctx,
+                      faults=FaultPlan(seed=7, crash_rate=0.1),
+                      resilience=ResiliencePolicy(max_retries=2),
+                      checkpoint_dir="ckpts", checkpoint_every=5)
+    eng2 = RoundEngine(strategy, ctx, ..., resume="ckpts")
+
+``faults=None`` and ``resilience=None`` keep every pre-existing engine
+code path bitwise identical.
+"""
+from repro.fl.faults.checkpointing import EngineCheckpointer
+from repro.fl.faults.plan import (FAULT_KINDS, PAYLOAD_KINDS,
+                                  TRANSIENT_KINDS, Fault, FaultInjector,
+                                  FaultPlan, as_injector)
+from repro.fl.faults.quarantine import (UpdateValidator, Verdict,
+                                        tree_finite_max, update_norm)
+from repro.fl.faults.resilience import (DEGRADATION_MODES, AttemptOutcome,
+                                        FaultRuntime, ResiliencePolicy)
+
+__all__ = [
+    "FAULT_KINDS", "TRANSIENT_KINDS", "PAYLOAD_KINDS",
+    "Fault", "FaultPlan", "FaultInjector", "as_injector",
+    "UpdateValidator", "Verdict", "tree_finite_max", "update_norm",
+    "ResiliencePolicy", "AttemptOutcome", "FaultRuntime",
+    "DEGRADATION_MODES", "EngineCheckpointer",
+]

@@ -1,0 +1,100 @@
+"""Crash-safe engine checkpoint/resume (docs/robustness.md §Resume).
+
+A checkpoint is a PAIR of files per round, both written atomically:
+
+``round_NNNNNN.npz``
+    The server model state (strategy pytree) via
+    :mod:`repro.train.checkpoint` — structure manifest, dtypes, bf16
+    handling all inherited.
+``round_NNNNNN.aux``
+    Everything ELSE bitwise continuation needs, as one
+    :mod:`repro.fl.scale.state_store` msgpack blob: the shared
+    ``ctx.rng`` bit-generator state, comm-channel error-feedback
+    residuals and delta-downlink tracker, the history rows emitted so
+    far, byte accumulators, validator calibration, and (async) the
+    materialized event-loop — clock, heap, running set, version, trace.
+
+``load_latest`` walks retained rounds newest-first and requires BOTH
+halves to load; a torn pair (server died between the two writes, or a
+corrupt file) is skipped with a warning and the previous round is used.
+The resume contract — a killed-and-resumed run reproduces the
+uninterrupted run bitwise — is tests/test_faults.py's equivalence
+suite.
+"""
+from __future__ import annotations
+
+import os
+import re
+import warnings
+from typing import Any, Optional, Tuple
+
+from repro.fl.scale import state_store
+from repro.obs import active as obs_active
+from repro.train import checkpoint as ckpt
+
+
+def _aux_path(npz_path: str) -> str:
+    return npz_path[:-len(".npz")] + ".aux"
+
+
+class EngineCheckpointer:
+    """Periodic paired-file checkpoints for the FL engines."""
+
+    def __init__(self, ckpt_dir: str, every: int, *, keep: int = 3):
+        if every < 1:
+            raise ValueError(f"checkpoint_every must be >= 1, got {every}")
+        self.dir = ckpt_dir
+        self.every = int(every)
+        self.keep = int(keep)
+
+    def due(self, round_idx: int) -> bool:
+        """Rounds are 0-based; ``every=k`` checkpoints after rounds
+        k-1, 2k-1, ... (i.e. every k completed rounds)."""
+        return (round_idx + 1) % self.every == 0
+
+    # ------------------------------------------------------------------ io
+    def save(self, round_idx: int, server_tree: Any, aux: dict) -> str:
+        """Write the pair: aux blob first, npz second — ``load_latest``
+        requires both, so a crash between the writes leaves a torn pair
+        that resume skips (never a half-resumed run)."""
+        path = os.path.join(self.dir, f"round_{round_idx:06d}.npz")
+        state_store.dump_blob(_aux_path(path), aux)
+        ckpt.save_round(self.dir, round_idx, server_tree,
+                        keep=self.keep)
+        self._gc_aux()
+        obs = obs_active()
+        if obs is not None:
+            obs.metrics.counter("checkpoints_written").inc()
+        return path
+
+    def _gc_aux(self) -> None:
+        """Drop aux blobs whose npz half was retention-GC'd."""
+        if not os.path.isdir(self.dir):
+            return
+        for f in os.listdir(self.dir):
+            if re.fullmatch(r"round_\d+\.aux", f) \
+                    and not os.path.exists(os.path.join(
+                        self.dir, f[:-len(".aux")] + ".npz")):
+                os.remove(os.path.join(self.dir, f))
+
+    def load_latest(self) -> Optional[Tuple[int, Any, dict]]:
+        """Newest fully-loadable ``(round_idx, server_tree, aux)``, or
+        ``None`` when no usable checkpoint exists."""
+        if not os.path.isdir(self.dir):
+            return None
+        rounds = sorted((f for f in os.listdir(self.dir)
+                         if re.fullmatch(r"round_\d+\.npz", f)),
+                        reverse=True)
+        for f in rounds:
+            path = os.path.join(self.dir, f)
+            try:
+                tree, metadata = ckpt.load(path)
+                aux = state_store.load_blob(_aux_path(path))
+            except Exception as e:
+                warnings.warn(f"skipping unusable checkpoint {path}: {e}")
+                continue
+            obs = obs_active()
+            if obs is not None:
+                obs.metrics.counter("checkpoints_resumed").inc()
+            return int(metadata.get("round", -1)), tree, aux
+        return None

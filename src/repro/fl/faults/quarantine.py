@@ -1,0 +1,161 @@
+"""Pre-aggregation update validation / quarantine.
+
+The server's last line of defense: every client update is validated just
+after decode and just before the strategy's ``aggregate`` sees it.  A
+rejected ("quarantined") update never enters the average, and the
+engines roll the comm channel's error-feedback residual back to its
+pre-encode snapshot — the transmitted mass is retransmitted on the
+client's next participation instead of being silently dropped
+(``CommChannel.snapshot_uplink`` / ``rollback_uplink``).
+
+Three checks, in order (docs/robustness.md §Quarantine):
+
+1. **Non-finite** — any NaN/Inf in a float leaf of the payload.
+   Catches diverged clients exactly; zero false positives by
+   construction (healthy training never produces non-finite params).
+2. **Absolute magnitude** — any coordinate above ``abs_limit``
+   (default 1e12).  Bit-corrupted float32 payloads land around 1e38;
+   healthy parameters live many orders of magnitude below the limit.
+3. **Norm outlier** — the update norm ``||payload - state||`` exceeds
+   ``norm_factor`` times the median of recently ACCEPTED update norms.
+   Self-calibrating (no tuning per model), warm-up-gated (the first
+   ``min_history`` accepted updates are never norm-rejected), and only
+   applied when the payload is congruent with the server state — padded
+   / masked / structured payloads (HeteroFL, SplitMix) are covered by
+   checks 1-2 only.
+
+The zero-false-positive contract on healthy runs — across all
+registered strategies and both engines — is a property test
+(tests/test_faults.py::test_quarantine_zero_false_positives).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+from typing import Any, List, Optional, Sequence
+
+import numpy as np
+
+from repro.obs import active as obs_active
+
+
+@dataclasses.dataclass(frozen=True)
+class Verdict:
+    """Why one update was quarantined."""
+    reason: str            # "nonfinite" | "abs" | "norm"
+    detail: float = 0.0    # offending magnitude / norm ratio
+
+
+def _float_leaves(tree) -> List[np.ndarray]:
+    import jax
+    out = []
+    for leaf in jax.tree.leaves(tree):
+        if hasattr(leaf, "dtype") \
+                and np.issubdtype(np.asarray(leaf).dtype, np.floating):
+            out.append(np.asarray(leaf))
+    return out
+
+
+def tree_finite_max(tree):
+    """(all_finite, max_abs) over the float leaves of a pytree — one
+    host pass shared by the finiteness and magnitude checks."""
+    finite, mx = True, 0.0
+    for a in _float_leaves(tree):
+        if a.size == 0:
+            continue
+        m = float(np.max(np.abs(a)))
+        if not math.isfinite(m):
+            finite = False
+            # max over the finite part still informs the verdict detail
+            fin = a[np.isfinite(a)]
+            mx = max(mx, float(np.max(np.abs(fin))) if fin.size else 0.0)
+        else:
+            mx = max(mx, m)
+    return finite, mx
+
+
+def update_norm(payload, state) -> Optional[float]:
+    """L2 norm of (payload - state) over float leaves, or ``None`` when
+    the two trees are not congruent (structured payloads)."""
+    import jax
+
+    try:
+        p_leaves = jax.tree.leaves(payload)
+        s_leaves = jax.tree.leaves(state)
+        if jax.tree.structure(payload) != jax.tree.structure(state):
+            return None
+    except Exception:
+        return None
+    sq = 0.0
+    for p, s in zip(p_leaves, s_leaves):
+        pa, sa = np.asarray(p), np.asarray(s)
+        if not (np.issubdtype(pa.dtype, np.floating)
+                and pa.shape == sa.shape):
+            continue
+        d = pa.astype(np.float64) - sa.astype(np.float64)
+        sq += float(np.vdot(d, d))
+    return math.sqrt(sq)
+
+
+class UpdateValidator:
+    """Stateful validator: remembers recently accepted update norms so
+    the outlier threshold tracks the run's own scale (norms decay as
+    training converges — the median decays with them, so a shrinking
+    healthy update is never rejected, only an exploding one)."""
+
+    def __init__(self, *, abs_limit: float = 1e12,
+                 norm_factor: float = 100.0, min_history: int = 4,
+                 history: int = 64):
+        self.abs_limit = float(abs_limit)
+        self.norm_factor = float(norm_factor)
+        self.min_history = int(min_history)
+        self._norms: collections.deque = collections.deque(maxlen=history)
+
+    # ----------------------------------------------------------- export
+    def export_state(self) -> dict:
+        """Checkpointable state (the norm history IS the calibration —
+        a resumed run must reject exactly what the uninterrupted run
+        would)."""
+        return {"norms": list(self._norms)}
+
+    def import_state(self, state: dict) -> None:
+        self._norms.clear()
+        self._norms.extend(float(v) for v in state.get("norms", ()))
+
+    # --------------------------------------------------------- validate
+    def _median(self) -> Optional[float]:
+        if len(self._norms) < self.min_history:
+            return None
+        return float(np.median(np.asarray(self._norms)))
+
+    def validate_one(self, payload, state) -> Optional[Verdict]:
+        """Verdict for ONE decoded payload against the current server
+        state, updating the norm history on acceptance.  Used directly
+        by the async engine (updates arrive one at a time)."""
+        finite, mx = tree_finite_max(payload)
+        if not finite:
+            return Verdict("nonfinite", mx)
+        if mx > self.abs_limit:
+            return Verdict("abs", mx)
+        norm = update_norm(payload, state)
+        if norm is not None:
+            med = self._median()
+            if med is not None and med > 0.0 \
+                    and norm > self.norm_factor * med:
+                return Verdict("norm", norm / med)
+            self._norms.append(norm)
+        return None
+
+    def validate(self, payloads: Sequence[Any],
+                 state) -> List[Optional[Verdict]]:
+        """Batch form for the barrier engines: one verdict slot per
+        payload (``None`` = accepted), history updated with this
+        cohort's accepted norms."""
+        return [self.validate_one(p, state) for p in payloads]
+
+    def observe_rejection(self, verdict: Verdict, client_id: int) -> None:
+        obs = obs_active()
+        if obs is not None:
+            obs.metrics.counter("quarantined_updates",
+                                reason=verdict.reason).inc()

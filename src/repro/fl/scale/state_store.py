@@ -114,8 +114,15 @@ _ND, _TUPLE, _PICKLE = "__nd__", "__tuple__", "__pickle__"
 def _encode(obj):
     """Recursive pytree -> msgpack-able structure.  Tuples and array
     leaves are tagged so structure survives the round trip exactly."""
-    if obj is None or isinstance(obj, (bool, int, float, str, bytes)):
+    if isinstance(obj, bool) or obj is None \
+            or isinstance(obj, (float, str, bytes)):
         return obj
+    if isinstance(obj, int):
+        # msgpack ints are capped at 64 bits; numpy PCG64 rng state
+        # carries 128-bit ints, so big ints take the pickle escape hatch
+        if -(2 ** 63) <= obj < 2 ** 64:
+            return obj
+        return {_PICKLE: pickle.dumps(obj)}
     if isinstance(obj, (np.ndarray, np.generic)):
         a = np.asarray(obj)
         return {_ND: [a.dtype.str, list(a.shape), a.tobytes()]}
@@ -162,6 +169,29 @@ def loads(blob: bytes):
     if msgpack is None:                  # pragma: no cover - gated fallback
         return pickle.loads(blob)
     return _decode(msgpack.unpackb(blob, raw=False, strict_map_key=False))
+
+
+def dump_blob(path: str, value) -> None:
+    """Atomically write one serialized value to ``path`` (tmp file +
+    ``os.replace`` so a crash mid-write never leaves a partial blob —
+    the checkpoint/resume contract in docs/robustness.md)."""
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(dumps(value))
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
+def load_blob(path: str):
+    with open(path, "rb") as f:
+        return loads(f.read())
 
 
 # --------------------------------------------------------------------------

@@ -37,7 +37,8 @@ import numpy as np
 from repro.fl.comm import CommChannel
 from repro.fl.engine import (RoundRecord, apply_prefix_cache,
                              default_batch_fn, eval_state,
-                             resolve_history_sink)
+                             load_resume, resolve_checkpointing,
+                             resolve_faults, resolve_history_sink)
 from repro.fl.sampling import (ClientScheduler, CohortSampler,
                                UniformSampler, make_scheduler)
 from repro.fl.strategy import (ClientResult, Context, FLStrategy,
@@ -71,7 +72,12 @@ class AsyncEngine:
                  codec: Union[str, object, None] = "none",
                  downlink: str = "full",
                  channel: Optional[CommChannel] = None,
-                 history_sink=None, state_store=None, obs=None):
+                 history_sink=None, state_store=None, obs=None,
+                 faults=None, resilience=None,
+                 checkpoint_every: Optional[int] = None,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_keep: int = 3,
+                 resume: Union[bool, str, None] = None):
         if mode not in ("sync", "async"):
             raise ValueError(f"mode must be 'sync' or 'async', got {mode!r}")
         self.strategy = strategy
@@ -121,8 +127,16 @@ class AsyncEngine:
         # SpillStore) parks async in-flight result snapshots so at most
         # its hot capacity stays resident however high the concurrency —
         # both default off (docs/scale.md).
+        # ``faults``/``resilience``/checkpoint/resume: the robustness
+        # layer (docs/robustness.md).  All default off = every
+        # pre-existing code path bitwise identical; fault decisions are
+        # keyed on (round|version, client, attempt) so the SAME plan
+        # reproduces across engines, modes and resumes.
+        self._faultrt = resolve_faults(faults, resilience)
+        self._ckpt, self._resume_dir = resolve_checkpointing(
+            checkpoint_every, checkpoint_dir, checkpoint_keep, resume)
         self.history_sink, self._owns_sink = resolve_history_sink(
-            history_sink)
+            history_sink, mode="a" if self._resume_dir else "w")
         self.state_store = state_store
         self._inflight_seq = 0
         self.trace: List[tuple] = []
@@ -219,13 +233,28 @@ class AsyncEngine:
             eval_every: int = 5) -> Tuple[object, List[RoundRecord]]:
         """History contract matches ``RoundEngine.run`` (one record per
         eval checkpoint, never fewer), with ``sim_seconds`` stamped from
-        the virtual clock."""
+        the virtual clock.  With ``resume=`` set and a usable
+        checkpoint present the run continues from it bitwise — server
+        state, rng, channel, virtual clock, trace, and (async mode) the
+        in-flight event heap all restore (docs/robustness.md
+        §Resume)."""
         ctx = self.ctx
         setup = getattr(self.strategy, "setup", None)
         if setup is not None:
             setup(ctx)
-        state = initial_state if initial_state is not None \
-            else self.strategy.init_state(ctx)
+        resumed = load_resume(self._resume_dir) \
+            if self._resume_dir is not None else None
+        if resumed is not None:
+            rd0, state, aux = resumed
+            self.ctx.rng.bit_generator.state = aux["rng"]
+            self.channel.import_state(aux.get("channel") or {})
+            if self._faultrt is not None and aux.get("faultrt"):
+                self._faultrt.import_state(aux["faultrt"])
+            resume_at = (rd0, aux)
+        else:
+            state = initial_state if initial_state is not None \
+                else self.strategy.init_state(ctx)
+            resume_at = None
         batch_fn = batch_fn or self.default_batch_fn()
         if self.obs is not None:
             # (re)bind in case one Obs is shared across engines — the
@@ -235,9 +264,9 @@ class AsyncEngine:
             with scope(self.obs):
                 if self.mode == "sync":
                     return self._run_sync(state, batch_fn, eval_fn,
-                                          eval_every)
+                                          eval_every, resume_at)
                 return self._run_async(state, batch_fn, eval_fn,
-                                       eval_every)
+                                       eval_every, resume_at)
         finally:
             # deterministic completion: engine-owned (path) sinks close,
             # caller-supplied ones only flush — they may outlive the run
@@ -258,15 +287,28 @@ class AsyncEngine:
         k = min(k, len(avail))
         return self.ctx.rng.choice(avail, size=k, replace=False)
 
-    def _run_sync(self, state, batch_fn, eval_fn, eval_every):
-        ctx, chan = self.ctx, self.channel
+    def _run_sync(self, state, batch_fn, eval_fn, eval_every,
+                  resume_at=None):
+        ctx, chan, rt = self.ctx, self.channel, self._faultrt
         history: List[RoundRecord] = []
         t_last, bytes_acc, down_acc = time.perf_counter(), 0, 0
-        for rd in range(ctx.sim.rounds):
+        start_rd = 0
+        if resume_at is not None:
+            rd0, aux = resume_at
+            start_rd = rd0 + 1
+            bytes_acc = int(aux.get("bytes_acc", 0))
+            down_acc = int(aux.get("down_acc", 0))
+            self.clock.now = float(aux.get("clock_now", 0.0))
+            if self.history_sink is None:
+                history = [RoundRecord(*r) for r in aux.get("history", [])]
+                self.trace = [tuple(e) for e in aux.get("trace", [])]
+        for rd in range(start_rd, ctx.sim.rounds):
             round_span = None if self.obs is None else \
                 self.obs.tracer.begin("round", round=rd,
                                       engine="systime-sync")
             cohort = [int(k) for k in self._sample_cohort(rd)]
+            if rt is not None:
+                cohort = rt.overprovision(ctx, cohort)
             # broadcast: per-client encoded downlink (full model, or the
             # sliced/delta wire under the channel's downlink modes) —
             # even a future deadline-misser pays for its download
@@ -281,43 +323,76 @@ class AsyncEngine:
                 batches = _fn(k)
                 _n[k] = len(batches)
                 return batches
-            results = self.scheduler.run(ctx, self.strategy, state, cohort,
-                                         counting_batch_fn)
             kept, totals = [], []
-            for k, res in zip(cohort, results):
-                res.client_id = k
-                # delivery can still fail at the deadline below: snapshot
-                # the error-feedback residual so a discarded payload's
-                # transmitted mass is NOT dropped from it
-                ef_snap = chan.snapshot_uplink(k)
-                res = chan.encode_result(self.strategy, ctx, state, k, res)
-                lat, up = self._latency(k, res, n_drawn.get(k, 1), downs[k])
-                attrs = None if self.obs is None \
-                    else self._phase_attrs(k, lat)
-                if self.deadline_s is not None \
-                        and lat.total > self.deadline_s:
-                    chan.rollback_uplink(k, ef_snap)
-                    # the miss is observed when the server gives up
-                    self._trace("miss",
-                                float(self.clock.now + self.deadline_s),
-                                k, rd, round(float(lat.total), 9),
+            if rt is None:
+                results = self.scheduler.run(ctx, self.strategy, state,
+                                             cohort, counting_batch_fn)
+                for k, res in zip(cohort, results):
+                    res.client_id = k
+                    # delivery can still fail at the deadline below:
+                    # snapshot the error-feedback residual so a
+                    # discarded payload's transmitted mass is NOT
+                    # dropped from it
+                    ef_snap = chan.snapshot_uplink(k)
+                    res = chan.encode_result(self.strategy, ctx, state,
+                                             k, res)
+                    lat, up = self._latency(k, res, n_drawn.get(k, 1),
+                                            downs[k])
+                    attrs = None if self.obs is None \
+                        else self._phase_attrs(k, lat)
+                    if self.deadline_s is not None \
+                            and lat.total > self.deadline_s:
+                        chan.rollback_uplink(k, ef_snap)
+                        # the miss is observed when the server gives up
+                        self._trace("miss",
+                                    float(self.clock.now
+                                          + self.deadline_s),
+                                    k, rd, round(float(lat.total), 9),
+                                    attrs=attrs)
+                        if self.obs is not None:
+                            self.obs.metrics.counter(
+                                "deadline_misses",
+                                tier=self.system.profiles[k].name).inc()
+                        continue
+                    kept.append(chan.decode_result(res))
+                    totals.append(lat.total)
+                    bytes_acc += up
+                    # stamp the client's virtual COMPLETION time,
+                    # matching async-mode finish semantics
+                    self._trace("finish",
+                                float(self.clock.now + lat.total), k,
+                                rd, round(float(lat.total), 9),
                                 attrs=attrs)
-                    if self.obs is not None:
-                        self.obs.metrics.counter(
-                            "deadline_misses",
-                            tier=self.system.profiles[k].name).inc()
-                    continue
-                kept.append(chan.decode_result(res))
-                totals.append(lat.total)
-                bytes_acc += up
-                # stamp the client's virtual COMPLETION time, matching
-                # async-mode finish semantics
-                self._trace("finish",
-                            float(self.clock.now + lat.total), k,
-                            rd, round(float(lat.total), 9), attrs=attrs)
-            round_time = max(totals) if totals else 0.0
-            if self.deadline_s is not None and len(kept) < len(cohort):
-                round_time = self.deadline_s   # server waits out the deadline
+                round_time = max(totals) if totals else 0.0
+                if self.deadline_s is not None \
+                        and len(kept) < len(cohort):
+                    round_time = self.deadline_s   # wait out the deadline
+            else:
+                n_failed, bts = self._sync_wave(rd, cohort, state, downs,
+                                                counting_batch_fn,
+                                                n_drawn, kept, totals)
+                bytes_acc += bts
+                round_time = max(totals) if totals else 0.0
+                if n_failed > 0:
+                    rt.record_shortfall(n_failed)
+                    extra = [int(k) for k in
+                             rt.resample(ctx, cohort, n_failed)]
+                    if extra:
+                        # one replacement wave, sequenced AFTER the
+                        # failures are known: its slowest client adds
+                        # to the barrier on top of the first wave
+                        downs2 = {k: chan.downlink_bytes(
+                            self.strategy, ctx, state, k) for k in extra}
+                        down_acc += sum(downs2.values())
+                        totals2: List[float] = []
+                        _, bts2 = self._sync_wave(rd, extra, state,
+                                                  downs2,
+                                                  counting_batch_fn,
+                                                  n_drawn, kept, totals2)
+                        bytes_acc += bts2
+                        round_time += max(totals2) if totals2 else 0.0
+                if self.deadline_s is not None:
+                    round_time = min(round_time, self.deadline_s)
             self.clock.advance(round_time)
             if kept:
                 state = self.strategy.aggregate(ctx, state, kept)
@@ -335,7 +410,157 @@ class AsyncEngine:
                                          bytes_acc, self.clock.now,
                                          down_acc))
                 t_last, bytes_acc, down_acc = now, 0, 0
+            if self._ckpt is not None and self._ckpt.due(rd):
+                # the checkpoint event is traced BEFORE the aux export
+                # so the saved trace contains it — a resumed run then
+                # reproduces the uninterrupted trace exactly
+                self._trace("checkpoint", float(self.clock.now), -1,
+                            rd, rd)
+                self._ckpt.save(rd, state, self._export_aux_sync(
+                    history, bytes_acc, down_acc))
         return state, history
+
+    def _sync_wave(self, rd: int, clients, state, downs, batch_fn,
+                   n_drawn, kept, times) -> Tuple[int, int]:
+        """One fault-aware sync wave over ``clients`` (taken only when
+        the robustness layer is on — the rt=None loop above stays the
+        bitwise pre-robustness path).  Appends surviving decoded
+        results to ``kept`` and per-client completion times (retries,
+        backoff and slowdowns priced in, docs/robustness.md §Pricing)
+        to ``times``; returns ``(n_failed, uplink_bytes)`` where
+        ``n_failed`` counts clients lost for good (retries exhausted or
+        deadline-missed) — the shortfall the degradation policy may
+        resample.  Quarantined clients finished on time, so they extend
+        the barrier and their garbage bytes count, but their update
+        never reaches the aggregate and their EF residual rolls back."""
+        ctx, chan, rt = self.ctx, self.channel, self._faultrt
+        results = self.scheduler.run(ctx, self.strategy, state, clients,
+                                     batch_fn)
+        n_failed, bts = 0, 0
+        for k, res in zip(clients, results):
+            res.client_id = k
+            outcome = rt.resolve(
+                rd, k, res,
+                lambda k=k: self.strategy.client_update(ctx, state, k,
+                                                        batch_fn(k)))
+            if not outcome.delivered:
+                lat, _ = self._latency(k, res, n_drawn.get(k, 1),
+                                       downs[k])
+                t_fail = float(outcome.total_seconds(lat))
+                times.append(t_fail)
+                n_failed += 1
+                self._trace("fail", float(self.clock.now + t_fail), k,
+                            rd, "|".join(outcome.kinds))
+                continue
+            ef_snap = chan.snapshot_uplink(k)
+            enc = chan.encode_result(self.strategy, ctx, state, k,
+                                     outcome.result)
+            lat, up = self._latency(k, enc, n_drawn.get(k, 1), downs[k])
+            total = float(outcome.total_seconds(lat))
+            attrs = None if self.obs is None else self._phase_attrs(k, lat)
+            if self.deadline_s is not None and total > self.deadline_s:
+                chan.rollback_uplink(k, ef_snap)
+                self._trace("miss",
+                            float(self.clock.now + self.deadline_s), k,
+                            rd, round(total, 9), attrs=attrs)
+                if self.obs is not None:
+                    self.obs.metrics.counter(
+                        "deadline_misses",
+                        tier=self.system.profiles[k].name).inc()
+                # the server only learns of the miss at the deadline, so
+                # the barrier waits it out (mirrors the rt=None path)
+                times.append(float(self.deadline_s))
+                n_failed += 1
+                continue
+            dec = chan.decode_result(enc)
+            verdict = rt.validate_one(dec.payload, state)
+            if verdict is not None:
+                chan.rollback_uplink(k, ef_snap)
+                rt.record_quarantine(k, verdict)
+                bts += up
+                times.append(total)
+                self._trace("quarantine", float(self.clock.now + total),
+                            k, rd, verdict.reason, attrs=attrs)
+                continue
+            kept.append(dec)
+            times.append(total)
+            bts += up
+            self._trace("finish", float(self.clock.now + total), k, rd,
+                        round(total, 9), attrs=attrs)
+        return n_failed, bts
+
+    # ------------------------------------------------ checkpoint/resume
+    def _aux_common(self, history, bytes_acc: int, down_acc: int) -> dict:
+        return {
+            "rng": self.ctx.rng.bit_generator.state,
+            "channel": self.channel.export_state(),
+            "faultrt": self._faultrt.export_state()
+            if self._faultrt is not None else None,
+            "history": [list(r) for r in history]
+            if self.history_sink is None else [],
+            "trace": [list(e) for e in self.trace]
+            if self.history_sink is None else [],
+            "bytes_acc": int(bytes_acc), "down_acc": int(down_acc),
+        }
+
+    def _export_aux_sync(self, history, bytes_acc, down_acc) -> dict:
+        aux = self._aux_common(history, bytes_acc, down_acc)
+        aux.update(kind="systime-sync", clock_now=float(self.clock.now))
+        return aux
+
+    def _export_aux_async(self, history, bytes_acc, version,
+                          running) -> dict:
+        """Async checkpoints additionally persist the live event loop —
+        clock time, tie-break sequence, and every scheduled finish/fail
+        event WITH its in-flight payload (snapshots parked in a
+        ``state_store`` are materialized into the blob and re-parked on
+        resume).  Only taken at buffer-empty points, so the merge
+        buffer itself never needs to travel.  Limitation: in-flight
+        payloads serialize via pickle — lossy-codec ``WireUpdate``s
+        whose strategies attach rebuild CLOSURES (masked fedepth wire
+        parts) are not picklable; checkpoint async runs with such
+        strategies under ``codec="none"`` (docs/robustness.md)."""
+        aux = self._aux_common(history, bytes_acc, 0)
+        events = []
+        for e in sorted(self.clock._heap):
+            p = e.payload
+            if self.state_store is not None and isinstance(p, tuple) \
+                    and p and p[0] == "inflight":
+                p = ("__parked__", p, self.state_store.get(p))
+            events.append((float(e.time), int(e.seq), e.kind,
+                           int(e.client), p))
+        aux.update(kind="systime-async",
+                   clock_now=float(self.clock.now),
+                   clock_seq=int(self.clock._seq),
+                   events=events,
+                   running=sorted(int(k) for k in running),
+                   version=int(version),
+                   down_acc=int(self._down_acc),
+                   inflight_seq=int(self._inflight_seq))
+        return aux
+
+    def _import_clock_async(self, aux) -> None:
+        import heapq
+
+        from repro.fl.systime.clock import Event
+        self.clock = EventLoop()
+        self.clock.now = float(aux["clock_now"])
+        self.clock._seq = int(aux["clock_seq"])
+        heap = []
+        for t, seq, kind, client, p in aux["events"]:
+            if isinstance(p, tuple) and p and p[0] == "__parked__":
+                _, key, value = p
+                if self.state_store is not None:
+                    self.state_store[key] = value
+                    p = key
+                else:
+                    p = value          # resumed without a store: inline
+            heap.append(Event(float(t), int(seq), str(kind),
+                              int(client), p))
+        heapq.heapify(heap)
+        self.clock._heap = heap
+        if self.obs is not None:
+            self.obs.tracer.sim_clock = lambda: self.clock.now
 
     # ------------------------------------------------------------ async mode
     def _free_clients(self, running, *, ignore_availability=False):
@@ -371,14 +596,38 @@ class AsyncEngine:
         with span_if(self.obs, "client-update", client=k, version=version):
             res = self.strategy.client_update(self.ctx, state, k, batches)
         res.client_id = k
-        # encode against the snapshot: the WireUpdate carries that very
-        # reference, so the server decodes correctly however many
-        # versions land before this result does
-        res = self.channel.encode_result(self.strategy, self.ctx, state,
-                                         k, res)
-        lat, up = self._latency(k, res, len(batches), down)
+        rt = self._faultrt
+        if rt is None:
+            # encode against the snapshot: the WireUpdate carries that
+            # very reference, so the server decodes correctly however
+            # many versions land before this result does
+            res = self.channel.encode_result(self.strategy, self.ctx,
+                                             state, k, res)
+            lat, up = self._latency(k, res, len(batches), down)
+            total = lat.total
+            payload = (res, version, up)
+        else:
+            # fault resolution keys on the dispatch-time server version
+            # (the async notion of a round); a lost dispatch still
+            # occupies the client until its failure time, then frees it
+            # via a "__fail__" event the main loop turns into a trace
+            # entry + replacement dispatch
+            outcome = rt.resolve(
+                version, k, res,
+                lambda: self.strategy.client_update(self.ctx, state, k,
+                                                    batch_fn(k)))
+            if outcome.delivered:
+                ef_snap = self.channel.snapshot_uplink(k)
+                enc = self.channel.encode_result(self.strategy, self.ctx,
+                                                 state, k, outcome.result)
+                lat, up = self._latency(k, enc, len(batches), down)
+                total = float(outcome.total_seconds(lat))
+                payload = ("__ok__", enc, version, up, ef_snap)
+            else:
+                lat, _ = self._latency(k, res, len(batches), down)
+                total = float(outcome.total_seconds(lat))
+                payload = ("__fail__", "|".join(outcome.kinds))
         running.add(k)
-        payload = (res, version, up)
         if self.state_store is not None:
             # park the in-flight snapshot in the store (a bounded
             # SpillStore keeps at most its hot capacity resident); the
@@ -387,59 +636,110 @@ class AsyncEngine:
             self._inflight_seq += 1
             self.state_store[key] = payload
             payload = key
-        self.clock.schedule(lat.total, "finish", client=k,
+        self.clock.schedule(total, "finish", client=k,
                             payload=payload)
         self._trace("dispatch_forced" if forced else "dispatch",
                     float(self.clock.now), k, version,
-                    round(float(lat.total), 9),
+                    round(float(total), 9),
                     attrs=None if self.obs is None
                     else self._phase_attrs(k, lat))
         return True
 
-    def _run_async(self, state, batch_fn, eval_fn, eval_every):
-        ctx = self.ctx
+    def _run_async(self, state, batch_fn, eval_fn, eval_every,
+                   resume_at=None):
+        ctx, rt = self.ctx, self._faultrt
         history: List[RoundRecord] = []
         version = 0
         running: set = set()
         buffered: List[tuple] = []
         t_last, bytes_acc = time.perf_counter(), 0
         self._down_acc = 0              # downlink accrues at dispatch time
-        for _ in range(self.concurrency):
-            self._dispatch(state, version, running, batch_fn)
-        if not running:   # nobody reachable at t=0: force one start
-            self._dispatch(state, version, running, batch_fn, force=True)
+        if resume_at is not None:
+            # re-enter at the top of the loop: checkpoints are taken at
+            # buffer-empty points, so only the event heap (with its
+            # in-flight payloads), the running set and the accumulators
+            # need to come back — the buffer is empty by construction
+            _, aux = resume_at
+            version = int(aux["version"])
+            running = set(int(k) for k in aux["running"])
+            bytes_acc = int(aux.get("bytes_acc", 0))
+            self._down_acc = int(aux.get("down_acc", 0))
+            self._inflight_seq = int(aux.get("inflight_seq", 0))
+            self._import_clock_async(aux)
+            if self.history_sink is None:
+                history = [RoundRecord(*r) for r in aux.get("history", [])]
+                self.trace = [tuple(e) for e in aux.get("trace", [])]
+        else:
+            for _ in range(self.concurrency):
+                self._dispatch(state, version, running, batch_fn)
+            if not running:   # nobody reachable at t=0: force one start
+                self._dispatch(state, version, running, batch_fn,
+                               force=True)
         while version < ctx.sim.rounds and len(self.clock):
             ev = self.clock.pop()
-            res, v0, up = self.state_store.pop(ev.payload) \
-                if self.state_store is not None else ev.payload
+            payload = ev.payload
+            if self.state_store is not None and isinstance(payload, tuple) \
+                    and payload and payload[0] == "inflight":
+                payload = self.state_store.pop(payload)
             running.discard(ev.client)
-            staleness = version - v0
-            buffered.append((res, staleness))
-            bytes_acc += up
-            self._trace("finish", float(self.clock.now), ev.client, version,
-                        staleness)
-            if self.obs is not None:
-                self.obs.metrics.histogram(
-                    "staleness", buckets=STALENESS_BUCKETS,
-                    tier=self.system.profiles[ev.client].name,
-                ).observe(staleness)
-            if len(buffered) >= self.buffer_size:
-                with span_if(self.obs, "aggregate", version=version + 1,
-                             merged=len(buffered)):
-                    state = self._apply_async(state, buffered)
-                version += 1
-                self._trace("aggregate", float(self.clock.now), -1, version,
-                            len(buffered))
-                buffered = []
-                if version % eval_every == 0 or version == ctx.sim.rounds:
-                    acc = self._eval(state, eval_fn)
-                    now = time.perf_counter()
-                    self._record(history,
-                                 RoundRecord(version, acc, now - t_last,
-                                             bytes_acc, self.clock.now,
-                                             self._down_acc))
-                    t_last, bytes_acc = now, 0
-                    self._down_acc = 0
+            did_agg = False
+            dropped = False
+            if rt is not None and payload[0] == "__fail__":
+                # the dispatch was lost for good (retries exhausted):
+                # the client frees up, nothing merges
+                dropped = True
+                self._trace("fail", float(self.clock.now), ev.client,
+                            version, payload[1])
+            elif rt is not None:
+                _, res, v0, up, ef_snap = payload
+            else:
+                res, v0, up = payload
+            if not dropped:
+                staleness = version - v0
+                if rt is not None:
+                    # quarantine at the merge boundary, against the
+                    # CURRENT server state; rejected mass rolls the EF
+                    # residual back to its dispatch-time snapshot
+                    res = self.channel.decode_result(res)
+                    verdict = rt.validate_one(res.payload, state)
+                    if verdict is not None:
+                        self.channel.rollback_uplink(ev.client, ef_snap)
+                        rt.record_quarantine(ev.client, verdict)
+                        bytes_acc += up     # garbage still crossed the wire
+                        dropped = True
+                        self._trace("quarantine", float(self.clock.now),
+                                    ev.client, version, verdict.reason)
+            if not dropped:
+                buffered.append((res, staleness))
+                bytes_acc += up
+                self._trace("finish", float(self.clock.now), ev.client,
+                            version, staleness)
+                if self.obs is not None:
+                    self.obs.metrics.histogram(
+                        "staleness", buckets=STALENESS_BUCKETS,
+                        tier=self.system.profiles[ev.client].name,
+                    ).observe(staleness)
+                if len(buffered) >= self.buffer_size:
+                    with span_if(self.obs, "aggregate",
+                                 version=version + 1,
+                                 merged=len(buffered)):
+                        state = self._apply_async(state, buffered)
+                    version += 1
+                    did_agg = True
+                    self._trace("aggregate", float(self.clock.now), -1,
+                                version, len(buffered))
+                    buffered = []
+                    if version % eval_every == 0 \
+                            or version == ctx.sim.rounds:
+                        acc = self._eval(state, eval_fn)
+                        now = time.perf_counter()
+                        self._record(history,
+                                     RoundRecord(version, acc,
+                                                 now - t_last, bytes_acc,
+                                                 self.clock.now,
+                                                 self._down_acc))
+                        t_last, bytes_acc = now, 0
+                        self._down_acc = 0
             if version < ctx.sim.rounds:
                 self._dispatch(state, version, running, batch_fn)
                 if not running and not len(self.clock):
@@ -447,6 +747,15 @@ class AsyncEngine:
                     # can only advance through work — force a dispatch
                     self._dispatch(state, version, running, batch_fn,
                                    force=True)
+            if did_agg and self._ckpt is not None \
+                    and self._ckpt.due(version - 1):
+                # after the post-aggregate dispatches, at a buffer-empty
+                # point; the checkpoint event is traced BEFORE the aux
+                # export so the saved trace contains it (bitwise resume)
+                self._trace("checkpoint", float(self.clock.now), -1,
+                            version, version - 1)
+                self._ckpt.save(version - 1, state, self._export_aux_async(
+                    history, bytes_acc, version, running))
         if not history or history[-1].round != version:
             acc = self._eval(state, eval_fn)
             now = time.perf_counter()

@@ -5,7 +5,14 @@ jit-cache hits/misses and build seconds per signature, codec encode
 ratios and error-feedback residual norms, ``PrefixCache``
 buffer/advance/re-buffer counts and buffered bytes, deadline misses and
 the staleness distribution, ``SpillStore`` hot-set hits/evictions — is
-documented in docs/observability.md §Metrics catalog.
+documented in docs/observability.md §Metrics catalog.  The robustness
+layer (docs/robustness.md) adds: ``faults_injected{kind=}`` /
+``fault_retries{kind=}`` / ``client_failures`` (injector + retry
+policy), ``retry_backoff_s`` (histogram of per-retry backoff),
+``quarantined_updates{reason=}`` / ``aggregate_nonfinite_dropped``
+(update validation at the two defense lines), ``cohort_shortfall``
+(sync clients lost for good after retries), and
+``checkpoints_written`` / ``checkpoints_resumed``.
 
 Design points:
 

@@ -40,9 +40,15 @@ LEGACY_FIELDS = ("kind", "t", "client", "version", "extra")
 
 #: Every kind a systime engine emits.  ``dispatch_forced`` is the
 #: deadlock-escape dispatch (nobody available, nothing in flight);
-#: ``miss`` is a sync-mode deadline miss (discarded update).
+#: ``miss`` is a sync-mode deadline miss (discarded update).  The
+#: robustness layer (docs/robustness.md) adds ``fail`` (a client's
+#: dispatch exhausted its retries — ``extra`` is the "|"-joined fault
+#: kinds drawn), ``quarantine`` (a delivered update was rejected
+#: pre-aggregation — ``extra`` is the verdict reason), and
+#: ``checkpoint`` (the engine persisted a resumable checkpoint —
+#: ``extra`` is the round/version saved).
 SYS_EVENT_KINDS = ("dispatch", "dispatch_forced", "finish", "miss",
-                   "aggregate")
+                   "aggregate", "fail", "quarantine", "checkpoint")
 
 
 @dataclasses.dataclass

@@ -8,6 +8,8 @@ from __future__ import annotations
 import json
 import os
 import re
+import tempfile
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -49,11 +51,27 @@ def _structure(tree):
 
 
 def save(path: str, tree: Any, metadata: Optional[dict] = None) -> None:
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    """Atomic: writes a tmp file in the target directory and
+    ``os.replace``s it into place, so a crash mid-write can never leave
+    a truncated ``.npz`` under the final name (docs/robustness.md
+    §Resume contract)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"           # np.savez appends it to bare paths
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
     flat = _flatten(tree)
     manifest = {"structure": _structure(tree), "metadata": metadata or {}}
-    np.savez(path, __manifest__=np.frombuffer(
-        json.dumps(manifest).encode(), dtype=np.uint8), **flat)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".npz.tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, __manifest__=np.frombuffer(
+                json.dumps(manifest).encode(), dtype=np.uint8), **flat)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
 
 
 def load(path: str):
@@ -97,6 +115,25 @@ def latest(ckpt_dir: str) -> Optional[str]:
     rounds = sorted(f for f in os.listdir(ckpt_dir)
                     if re.fullmatch(r"round_\d+\.npz", f))
     return os.path.join(ckpt_dir, rounds[-1]) if rounds else None
+
+
+def load_latest(ckpt_dir: str):
+    """Newest loadable round checkpoint: ``(path, tree, metadata)`` or
+    ``None``.  A corrupt/partial ``.npz`` (killed server, torn disk) is
+    skipped with a warning and the previous retained round is used
+    instead of crashing the resume."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    rounds = sorted((f for f in os.listdir(ckpt_dir)
+                     if re.fullmatch(r"round_\d+\.npz", f)), reverse=True)
+    for f in rounds:
+        path = os.path.join(ckpt_dir, f)
+        try:
+            tree, metadata = load(path)
+            return path, tree, metadata
+        except Exception as e:
+            warnings.warn(f"skipping corrupt checkpoint {path}: {e}")
+    return None
 
 
 def _gc(ckpt_dir: str, keep: int) -> None:

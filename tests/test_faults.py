@@ -1,0 +1,407 @@
+"""Robustness layer: deterministic fault injection, retry/backoff
+pricing, quarantine (zero false positives on healthy runs), the
+aggregation non-finite guard, crash-safe checkpoint atomicity, and the
+kill-and-resume bitwise-equivalence contract (docs/robustness.md)."""
+import os
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.configs.preresnet20 import reduced as rn_reduced
+from repro.core import aggregation
+from repro.fl.data import build_federated
+from repro.fl.engine import (RoundEngine, SimConfig, build_context,
+                             resolve_checkpointing)
+from repro.fl.faults import (AttemptOutcome, EngineCheckpointer, Fault,
+                             FaultInjector, FaultPlan, ResiliencePolicy,
+                             UpdateValidator)
+from repro.fl.registry import available, get_strategy
+from repro.fl.scale.history import JsonlHistorySink, read_jsonl
+from repro.fl.scale.state_store import dump_blob, load_blob
+from repro.fl.systime import (DEVICE_TIERS, AsyncEngine, SystemModel,
+                              uniform_profiles)
+from repro.obs import make_obs, scope
+
+CFG = rn_reduced(num_classes=10, image_size=16)
+_DATA = {}
+
+
+def _data(n=8, seed=0):
+    if (n, seed) not in _DATA:
+        _DATA[(n, seed)] = build_federated(
+            num_clients=n, alpha=1.0, n_train=40 * n, n_test=160,
+            image_size=16, seed=seed)
+    return _DATA[(n, seed)]
+
+
+def _sim(**kw):
+    base = dict(rounds=4, participation=0.5, lr=0.05, local_steps=1,
+                batch_size=32, scenario="fair", seed=0)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def _ctx(sim=None):
+    return build_context(_data(), sim or _sim(), model_cfg=CFG)
+
+
+def _tree_eq(a, b):
+    # SplitMixState is a plain container, not a pytree — compare its
+    # ensemble of base nets
+    a = getattr(a, "bases", a)
+    b = getattr(b, "bases", b)
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+def _hist_rows(h):
+    # wall seconds can never be bitwise; everything else must be
+    return [(r.round, r.accuracy, r.comm_bytes, r.sim_seconds,
+             r.down_bytes) for r in h]
+
+
+SYS = SystemModel(uniform_profiles(8, DEVICE_TIERS["phone"]))
+HEAVY = FaultPlan(seed=7, crash_rate=0.1, drop_rate=0.1,
+                  corrupt_rate=0.15, diverge_rate=0.1, slowdown_rate=0.1)
+
+
+# ---------------------------------------------------------------- plan
+def test_fault_plan_validation():
+    with pytest.raises(ValueError):
+        FaultPlan(crash_rate=-0.1)
+    with pytest.raises(ValueError):
+        FaultPlan(crash_rate=0.6, drop_rate=0.6)
+    with pytest.raises(ValueError):
+        ResiliencePolicy(degradation="nope")
+    with pytest.raises(ValueError):
+        RoundEngine(get_strategy("fedavg"), _ctx(), checkpoint_every=2)
+    with pytest.raises(ValueError):
+        resolve_checkpointing(None, None, 3, True)
+
+
+def test_fault_decisions_deterministic_and_order_independent():
+    """A decision is a pure function of (seed, round, client, attempt) —
+    two injectors over the same plan agree whatever the query order."""
+    plan = FaultPlan(seed=3, crash_rate=0.2, drop_rate=0.2,
+                     corrupt_rate=0.2, diverge_rate=0.2)
+    a, b = FaultInjector(plan), FaultInjector(plan)
+    ids = [(r, k, t) for r in range(6) for k in range(8)
+           for t in range(2)]
+    fwd = [a.decide(*i) for i in ids]
+    rev = [b.decide(*i) for i in reversed(ids)][::-1]
+    assert fwd == rev
+    assert any(f is not None for f in fwd)          # rates actually fire
+    # a different seed draws a different sequence
+    c = FaultInjector(FaultPlan(seed=4, crash_rate=0.2, drop_rate=0.2,
+                                corrupt_rate=0.2, diverge_rate=0.2))
+    assert [c.decide(*i) for i in ids] != fwd
+
+
+def test_damage_corrupt_is_finite_huge_and_diverge_is_nan():
+    inj = FaultInjector(FaultPlan(seed=0, corrupt_frac=0.01))
+    tree = {"w": np.full((64, 64), 0.5, np.float32),
+            "n": np.arange(4, dtype=np.int32)}
+    orig = tree["w"].copy()
+    bad = inj.damage_tree(tree, Fault("corrupt", 1, 0, 0))
+    hit = bad["w"] != orig
+    assert hit.any()
+    assert np.all(np.isfinite(bad["w"]))            # sails past NaN checks
+    assert float(np.abs(bad["w"][hit]).min()) > 1e30  # but is huge
+    assert np.array_equal(tree["w"], orig)          # original untouched
+    assert np.array_equal(bad["n"], tree["n"])      # non-float untouched
+    nan = inj.damage_tree(tree, Fault("diverge", 1, 0, 0))
+    assert np.isnan(nan["w"]).any()
+    assert np.array_equal(tree["w"], orig)
+    # same fault identity -> same damage (replay/resume contract)
+    again = inj.damage_tree(tree, Fault("corrupt", 1, 0, 0))
+    assert np.array_equal(bad["w"], again["w"])
+
+
+# ------------------------------------------------------------- pricing
+class _Lat:
+    download, compute, upload = 2.0, 10.0, 3.0
+
+
+def test_retry_backoff_pricing():
+    pol = ResiliencePolicy(backoff_base_s=5.0, backoff_mult=2.0)
+    assert pol.backoff_s(1) == 5.0 and pol.backoff_s(2) == 10.0
+    # one 40%-crash, one drop, then delivery, with 5+10s of backoff
+    out = AttemptOutcome(result=object(), attempts=3,
+                         kinds=("crash", "drop"), crash_fracs=(0.4,),
+                         drops=1, backoff_s=15.0, slowdown=1.0)
+    # download + backoff + 0.4*compute + (compute+upload) + (compute+upload)
+    assert out.total_seconds(_Lat()) == pytest.approx(
+        2.0 + 15.0 + 4.0 + 13.0 + 13.0)
+    # undelivered: no final upload
+    out = AttemptOutcome(result=None, attempts=3, kinds=("drop",) * 3,
+                         drops=3, backoff_s=15.0)
+    assert out.total_seconds(_Lat()) == pytest.approx(
+        2.0 + 15.0 + 3 * 13.0)
+    # slowdown multiplies every compute second
+    out = AttemptOutcome(result=object(), kinds=("slowdown",),
+                         slowdown=4.0)
+    assert out.total_seconds(_Lat()) == pytest.approx(2.0 + 40.0 + 3.0)
+
+
+# ---------------------------------------------------------- validator
+def test_validator_three_checks_in_order():
+    v = UpdateValidator(abs_limit=1e6, norm_factor=10.0, min_history=2)
+    state = {"w": np.zeros(4, np.float32)}
+    ok = {"w": np.full(4, 0.1, np.float32)}
+    assert v.validate_one({"w": np.array([np.nan] * 4, np.float32)},
+                          state).reason == "nonfinite"
+    assert v.validate_one({"w": np.full(4, 1e9, np.float32)},
+                          state).reason == "abs"
+    # warm-up: the first min_history accepted norms are never rejected
+    assert v.validate_one(ok, state) is None
+    assert v.validate_one(ok, state) is None
+    big = {"w": np.full(4, 50.0, np.float32)}       # 500x the median
+    verdict = v.validate_one(big, state)
+    assert verdict is not None and verdict.reason == "norm"
+    assert v.validate_one(ok, state) is None        # calibration intact
+    # calibration survives a checkpoint round-trip
+    v2 = UpdateValidator(abs_limit=1e6, norm_factor=10.0, min_history=2)
+    v2.import_state(v.export_state())
+    assert v2.validate_one(big, state).reason == "norm"
+    # incongruent payloads skip the norm check (checks 1-2 only)
+    assert v.validate_one({"other": np.ones(2, np.float32)}, state) is None
+
+
+# ------------------------------------------ zero false positives (prop)
+@pytest.mark.parametrize("method", available())
+def test_quarantine_zero_false_positives_round_engine(method):
+    """Healthy runs with the full resilience stack on: nothing is ever
+    quarantined, and the aggregate stays bitwise identical to the plain
+    engine (all registered strategies)."""
+    obs = make_obs("on")
+    plain = RoundEngine(get_strategy(method), _ctx())
+    s0, h0 = plain.run(eval_every=10)
+    guarded = RoundEngine(get_strategy(method), _ctx(),
+                          resilience=ResiliencePolicy(), obs=obs)
+    s1, h1 = guarded.run(eval_every=10)
+    assert obs.metrics.value("quarantined_updates", reason="nonfinite") \
+        is None
+    assert obs.metrics.value("quarantined_updates", reason="abs") is None
+    assert obs.metrics.value("quarantined_updates", reason="norm") is None
+    assert _tree_eq(s0, s1)
+    assert _hist_rows(h0) == _hist_rows(h1)
+
+
+@pytest.mark.parametrize("method", available())
+def test_quarantine_zero_false_positives_systime(method):
+    """Same contract on the systime engine (sync mode, real latency
+    model): no quarantine / fail / miss events on a healthy run."""
+    eng = AsyncEngine(get_strategy(method), _ctx(), mode="sync",
+                      system=SYS, resilience=ResiliencePolicy())
+    eng.run(eval_every=10)
+    kinds = {t[0] for t in eng.trace}
+    assert "quarantine" not in kinds and "fail" not in kinds
+    finishes = sum(t[0] == "finish" for t in eng.trace)
+    assert finishes > 0
+
+
+# ------------------------------------------------------- faulted runs
+def test_faulted_runs_stay_finite_and_observable():
+    obs = make_obs("on")
+    eng = RoundEngine(get_strategy("fedavg"), _ctx(), faults=HEAVY,
+                      resilience=ResiliencePolicy(degradation="resample"),
+                      obs=obs)
+    s, _ = eng.run(eval_every=10)
+    assert all(np.all(np.isfinite(np.asarray(l)))
+               for l in jax.tree_util.tree_leaves(s))
+    injected = sum(m.value for m in obs.metrics
+                   if m.name == "faults_injected")
+    assert injected > 0
+
+
+def test_async_faulted_run_traces_quarantine():
+    eng = AsyncEngine(get_strategy("fedavg"), _ctx(), mode="async",
+                      system=SYS, faults=HEAVY,
+                      resilience=ResiliencePolicy())
+    s, _ = eng.run(eval_every=10)
+    assert all(np.all(np.isfinite(np.asarray(l)))
+               for l in jax.tree_util.tree_leaves(s))
+    assert any(t[0] == "quarantine" for t in eng.trace)
+
+
+def test_overprovision_enlarges_cohort():
+    ctx = _ctx()
+    from repro.fl.faults import FaultRuntime
+    rt = FaultRuntime(None, ResiliencePolicy(degradation="overprovision",
+                                             over_frac=0.5))
+    cohort = [0, 1, 2, 3]
+    grown = rt.overprovision(ctx, cohort)
+    assert grown[:4] == cohort and len(grown) == 6
+    assert len(set(grown)) == 6                     # distinct clients
+
+
+# ------------------------------------------------- checkpoint/resume
+def _kill_latest(d):
+    top = sorted(f for f in os.listdir(d) if f.endswith(".npz"))[-1]
+    os.remove(os.path.join(d, top))
+    os.remove(os.path.join(d, top[:-4] + ".aux"))
+
+
+def test_round_engine_kill_resume_bitwise(tmp_path):
+    """Checkpointing must not perturb, and a killed-then-resumed run
+    reproduces the uninterrupted one bitwise — with a lossy codec, so
+    the error-feedback residuals travel through the aux blob."""
+    kw = dict(codec="fp16", eval_fn=None)
+    sA, hA = RoundEngine(get_strategy("fedavg"), _ctx(),
+                         codec="fp16").run(eval_every=2)
+    d = str(tmp_path / "ck")
+    os.makedirs(d)
+    sB, hB = RoundEngine(get_strategy("fedavg"), _ctx(), codec="fp16",
+                         checkpoint_every=1, checkpoint_dir=d,
+                         checkpoint_keep=10).run(eval_every=2)
+    assert _tree_eq(sA, sB) and _hist_rows(hA) == _hist_rows(hB)
+    _kill_latest(d)                                 # "crash" after rd 2
+    sC, hC = RoundEngine(get_strategy("fedavg"), _ctx(), codec="fp16",
+                         checkpoint_every=1, checkpoint_dir=d,
+                         checkpoint_keep=10, resume=True).run(eval_every=2)
+    assert _tree_eq(sA, sC)
+    assert _hist_rows(hA) == _hist_rows(hC)
+
+
+def test_async_inflight_kill_resume_bitwise(tmp_path):
+    """Async mode checkpoints the live event heap: resuming restores
+    the in-flight dispatches and replays the tail bitwise — history,
+    params AND the scheduling trace."""
+    eA = AsyncEngine(get_strategy("fedavg"), _ctx(), mode="async",
+                     system=SYS)
+    sA, hA = eA.run(eval_every=2)
+    d = str(tmp_path / "ck")
+    os.makedirs(d)
+    eB = AsyncEngine(get_strategy("fedavg"), _ctx(), mode="async",
+                     system=SYS, checkpoint_every=2, checkpoint_dir=d)
+    sB, hB = eB.run(eval_every=2)
+    no_ck = [t for t in eB.trace if t[0] != "checkpoint"]
+    assert _tree_eq(sA, sB) and _hist_rows(hA) == _hist_rows(hB)
+    assert eA.trace == no_ck
+    _kill_latest(d)
+    eC = AsyncEngine(get_strategy("fedavg"), _ctx(), mode="async",
+                     system=SYS, checkpoint_every=2, checkpoint_dir=d,
+                     resume=True)
+    sC, hC = eC.run(eval_every=2)
+    assert _tree_eq(sA, sC)
+    assert _hist_rows(hA) == _hist_rows(hC)
+    assert eB.trace == eC.trace
+
+
+def test_sync_faulted_kill_resume_bitwise(tmp_path):
+    """The hardest case: faults + resilience + latency model, killed and
+    resumed — fault draws key on dispatch identity, the validator's
+    calibration travels in the aux blob, so the tail replays bitwise."""
+    kw = dict(mode="sync", system=SYS, faults=HEAVY,
+              resilience=ResiliencePolicy(degradation="resample"))
+    eA = AsyncEngine(get_strategy("fedavg"), _ctx(), **kw)
+    sA, hA = eA.run(eval_every=2)
+    d = str(tmp_path / "ck")
+    os.makedirs(d)
+    eB = AsyncEngine(get_strategy("fedavg"), _ctx(), **kw,
+                     checkpoint_every=2, checkpoint_dir=d)
+    sB, hB = eB.run(eval_every=2)
+    assert _tree_eq(sA, sB)
+    _kill_latest(d)
+    eC = AsyncEngine(get_strategy("fedavg"), _ctx(), **kw,
+                     checkpoint_every=2, checkpoint_dir=d, resume=True)
+    sC, hC = eC.run(eval_every=2)
+    assert _tree_eq(sA, sC)
+    assert _hist_rows(hA) == _hist_rows(hC)
+    assert eB.trace == eC.trace
+
+
+def test_checkpointer_atomic_and_corrupt_fallback(tmp_path):
+    d = str(tmp_path)
+    tree1 = {"w": np.ones(3, np.float32)}
+    tree2 = {"w": np.full(3, 2.0, np.float32)}
+    ck = EngineCheckpointer(d, every=1, keep=10)
+    ck.save(0, tree1, {"rng": 1})
+    ck.save(1, tree2, {"rng": 2})
+    assert not [f for f in os.listdir(d) if f.startswith("tmp")]
+    # corrupt the newest npz: load_latest falls back to round 0
+    with open(os.path.join(d, "round_000001.npz"), "wb") as f:
+        f.write(b"not a zipfile")
+    with pytest.warns(UserWarning, match="skipping unusable"):
+        rd, tree, aux = ck.load_latest()
+    assert rd == 0 and aux["rng"] == 1
+    assert np.array_equal(tree["w"], tree1["w"])
+    # torn pair (aux half missing) is skipped the same way
+    os.remove(os.path.join(d, "round_000000.aux"))
+    with pytest.warns(UserWarning):
+        assert ck.load_latest() is None
+
+
+def test_state_store_blob_handles_128bit_ints(tmp_path):
+    """The rng bit-generator state carries 128-bit ints — past msgpack's
+    64-bit cap; the blob codec must round-trip them exactly."""
+    rng = np.random.default_rng(9)
+    rng.integers(0, 10, size=100)
+    state = rng.bit_generator.state
+    p = str(tmp_path / "x.aux")
+    dump_blob(p, {"rng": state, "big": 2 ** 100})
+    back = load_blob(p)
+    assert back["big"] == 2 ** 100
+    r2 = np.random.default_rng(0)
+    r2.bit_generator.state = back["rng"]
+    assert np.array_equal(rng.integers(0, 10, 5), r2.integers(0, 10, 5))
+
+
+# ------------------------------------------------------ history sink
+def test_jsonl_reader_tolerates_truncated_final_line(tmp_path):
+    p = str(tmp_path / "h.jsonl")
+    sink = JsonlHistorySink(p, fsync_every=1)
+    from repro.fl.engine import RoundRecord
+    sink.write(RoundRecord(1, 0.5, 0.1, 10, 0.0, 5))
+    sink.write_trace(("finish", 1.0, 3, 1, 0))
+    sink.close()
+    with open(p, "a") as f:                         # simulated torn write
+        f.write('{"kind": "round", "round": 2, "acc')
+    with pytest.warns(UserWarning, match="malformed"):
+        rows = read_jsonl(p)
+    assert len(rows) == 2
+    assert read_jsonl(p, kind="round")[0]["round"] == 1
+    with pytest.raises(ValueError):
+        JsonlHistorySink(p, mode="rb")
+
+
+# ------------------------------------------------- aggregation guard
+def test_fedavg_guard_drops_nonfinite_client():
+    """Regression: a diverged client used to poison the global average
+    with NaN; the default guard now excludes it (and only it)."""
+    import jax.numpy as jnp
+    good1 = {"w": jnp.ones(4)}
+    good2 = {"w": jnp.full(4, 3.0)}
+    bad = {"w": jnp.array([1.0, jnp.nan, 1.0, 1.0])}
+    obs = make_obs("on")
+    with scope(obs):
+        out = aggregation.fedavg([good1, bad, good2], [1.0, 1.0, 1.0])
+    assert np.allclose(np.asarray(out["w"]), 2.0)   # mean of the two good
+    assert obs.metrics.value("aggregate_nonfinite_dropped") == 1
+    # guard off reproduces the raw (poisoned) math
+    raw = aggregation.fedavg([good1, bad, good2], [1.0] * 3, guard=False)
+    assert np.isnan(np.asarray(raw["w"])).any()
+    # all-finite input is returned through the bitwise-identical path
+    ok = aggregation.fedavg([good1, good2], [1.0, 1.0])
+    assert np.allclose(np.asarray(ok["w"]), 2.0)
+    # every client non-finite: pass through unchanged rather than crash
+    out = aggregation.fedavg([bad], [1.0])
+    assert np.isnan(np.asarray(out["w"])).any()
+
+
+def test_aggregate_masked_guard_drops_nonfinite_client():
+    import jax.numpy as jnp
+    glob = {"w": jnp.zeros(4)}
+    mask = {"w": jnp.ones(4)}
+    good = {"w": jnp.full(4, 2.0)}
+    bad = {"w": jnp.array([jnp.inf, 0.0, 0.0, 0.0])}
+    out = aggregation.aggregate_masked(glob, [good, bad], [1.0, 1.0],
+                                       [mask, mask])
+    assert np.allclose(np.asarray(out["w"]), 2.0)
+    raw = aggregation.aggregate_masked(glob, [good, bad], [1.0, 1.0],
+                                       [mask, mask], guard=False)
+    assert not np.all(np.isfinite(np.asarray(raw["w"])))
