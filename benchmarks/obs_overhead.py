@@ -29,6 +29,15 @@ Emits ``BENCH_obs.json`` plus a real Chrome-trace artifact
 (``BENCH_obs_trace.json``, from the async cell's capture — load it at
 https://ui.perfetto.dev); CI uploads both and runs
 ``tools/trace_report.py`` over the trace as a smoke check.
+
+A third, UNTIMED pass then reruns the async cell with the full
+diagnostics stack (``Obs(audit=..., dynamics=...)`` + a streaming
+history sink) to emit ``BENCH_obs_history.jsonl`` and
+``BENCH_obs_telemetry.jsonl`` — the inputs ``tools/run_report.py``
+folds into the CI HTML run report.  It stays outside the timed cells
+on purpose: the auditor AOT-compiles every block cell a second time
+for XLA memory stats, a fixed cost that would swamp the
+:data:`STRICT_MAX_OVERHEAD` ratio without measuring telemetry at all.
 """
 import os
 import time
@@ -46,8 +55,10 @@ from repro.fl.engine import RoundEngine, SimConfig, build_context
 from repro.fl.registry import get_strategy
 from repro.fl.strategies.fedepth import FedepthStrategy
 from repro.fl.strategy import Context
+from repro.fl.scale.history import JsonlHistorySink
 from repro.fl.systime import AsyncEngine, SystemModel, mixed_profiles
 from repro.models import vit
+from repro.obs import DynamicsAnalyzer, MemoryAuditor, Obs
 
 from benchmarks.bench_lib import csv_row, rounds, write_json
 from benchmarks.round_engine import _timed_pass
@@ -156,6 +167,35 @@ def bench_async_straggler(n_rounds: int, seed: int = 0):
     return r, eng_on.obs
 
 
+# ------------------------------------------ untimed diagnostics capture
+def capture_full_run(n_rounds: int, out_dir: str, seed: int = 0) -> None:
+    """Rerun the async cell with the full diagnostics stack and stream
+    the run-report inputs to ``out_dir`` (see module docstring)."""
+    clients = 16
+    data = build_federated(num_clients=clients, alpha=1.0,
+                           n_train=40 * clients, n_test=320,
+                           image_size=16, seed=seed)
+    cfg = rn_reduced(num_classes=10, image_size=16)
+    sim = SimConfig(rounds=n_rounds, participation=0.5, lr=0.05,
+                    local_steps=1, batch_size=32, scenario="fair",
+                    seed=seed)
+    obs = Obs(audit=MemoryAuditor(), dynamics=DynamicsAnalyzer())
+    hist_path = os.path.join(out_dir, "BENCH_obs_history.jsonl")
+    sink = JsonlHistorySink(hist_path)
+    engine = AsyncEngine(get_strategy("fedepth"),
+                         build_context(data, sim, model_cfg=cfg),
+                         system=SystemModel(
+                             mixed_profiles(clients, MIX, seed=seed)),
+                         mode="async", obs=obs, history_sink=sink)
+    engine.run(eval_every=1)
+    telem_path = os.path.join(out_dir, "BENCH_obs_telemetry.jsonl")
+    obs.export_jsonl(telem_path)
+    cells = obs.audit.table() if obs.audit is not None else []
+    print(f"wrote {hist_path}")
+    print(f"wrote {telem_path} ({len(cells)} audit cells, "
+          f"{len(obs.dynamics.rounds)} dynamics rounds)")
+
+
 def main() -> None:
     t0 = time.time()
     n_rounds = rounds(3)
@@ -182,6 +222,7 @@ def main() -> None:
     trace_path = os.path.join(out_dir, "BENCH_obs_trace.json")
     obs.export_chrome_trace(trace_path)
     print(f"wrote {trace_path}")
+    capture_full_run(n_rounds, out_dir)
     us = (time.time() - t0) * 1e6
     print(csv_row(
         "obs_overhead", us,

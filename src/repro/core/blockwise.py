@@ -36,17 +36,26 @@ from repro.models import common, resnet as resnet_mod, vit as vit_mod
 from repro.obs import active as obs_active
 
 
-def _jit_cache_probe(cache: dict, key, build, *, name: str):
+def _jit_cache_probe(cache: dict, key, build, *, name: str, audit=None):
     """``cache.setdefault(key, build())`` with telemetry: when a capture
     is active, count the hit/miss and time the builder (python trace
     construction; XLA compile itself lands in the first dispatch, which
     the scheduler's ``group_update_seconds`` covers).  The disabled path
     is the bare two-line probe every jit cache in the repo already
-    uses."""
+    uses.
+
+    ``audit`` is the memory-conformance hook
+    (:class:`repro.obs.audit.MemoryAuditor`): a callback invoked with
+    the cached callable on every probe — call sites only construct one
+    when the active capture carries an auditor, so the default path
+    never pays for it.  The auditor dedupes per cell, so probing a
+    warm shared cache still records each executable once per capture."""
     obs = obs_active()
     if obs is None:
         if key not in cache:
             cache[key] = build()
+        if audit is not None:
+            audit(cache[key])
         return cache[key]
     if key not in cache:
         t0 = time.perf_counter()
@@ -56,6 +65,8 @@ def _jit_cache_probe(cache: dict, key, build, *, name: str):
             time.perf_counter() - t0)
     else:
         obs.metrics.counter("jit_cache_hits", cache=name).inc()
+    if audit is not None:
+        audit(cache[key])
     return cache[key]
 
 
@@ -82,6 +93,10 @@ class BlockRunner:
     # hybrid's shared attention) — there :class:`PrefixCache` re-buffers
     # once per subproblem instead (still once, never once per step).
     prefix_stable: bool = True
+    # model-family tag keying the memory auditor's conformance cells
+    # ("resnet" / "vit" / the LM config family) — label-only, no
+    # behavioral meaning
+    family: str = "?"
 
 
 # ---- LM adapter -----------------------------------------------------------
@@ -157,7 +172,8 @@ def lm_runner(lm, head: str = "skip", kernel_force=None) -> BlockRunner:
     # subproblem rather than advanced incrementally
     stable = not cfg.tie_embeddings and cfg.family != "hybrid"
     return BlockRunner(lm.num_depth_units, embed, apply_units, head_loss,
-                       split, merge, prefix_stable=stable)
+                       split, merge, prefix_stable=stable,
+                       family=cfg.family)
 
 
 def _whisper_runner(lm, kernel_force):
@@ -259,7 +275,7 @@ def _whisper_runner(lm, kernel_force):
     # inside apply_units) train with the head, so the prefix forward
     # drifts between subproblems — re-buffer instead of advancing
     return BlockRunner(E + cfg.num_layers, embed, apply_units, head_loss,
-                       split, merge, prefix_stable=False)
+                       split, merge, prefix_stable=False, family="whisper")
 
 
 # ---- ResNet adapter -------------------------------------------------------
@@ -308,7 +324,8 @@ def resnet_runner(cfg, head: str = "skip") -> BlockRunner:
                 out[k] = train[k]
         return out
 
-    return BlockRunner(n, embed, apply_units, head_loss, split, merge)
+    return BlockRunner(n, embed, apply_units, head_loss, split, merge,
+                       family="resnet")
 
 
 # ---- ViT adapter ----------------------------------------------------------
@@ -342,7 +359,7 @@ def vit_runner(cfg, head: str = "skip") -> BlockRunner:
         return out
 
     return BlockRunner(cfg.num_layers, embed, apply_units, head_loss,
-                       split, merge)
+                       split, merge, family="vit")
 
 
 def _ce_logits(logits, labels):
@@ -586,11 +603,20 @@ def client_update(runner: BlockRunner, params, dec: Decomposition, batches,
                lo, hi, j, lr, momentum, prox_mu)
         make = make_buffered_block_step if cache is not None \
             else make_block_step
+        audit = None
+        if obs is not None and obs.audit is not None:
+            step_args = (params, train, vel, anchor) \
+                + ((zs[0],) if cache is not None else ()) + (batches[0],)
+            audit = (lambda fn, a=step_args, lo=lo, hi=hi:
+                     obs.audit.audit_block_step(
+                         fn, a, family=runner.family, lo=lo, hi=hi,
+                         variant="buffered" if cache is not None
+                         else "recompute", n_batches=len(batches)))
         step = _jit_cache_probe(
             step_cache, key,
             lambda: make(runner, lo, hi, j, lr=lr, momentum=momentum,
                          prox_mu=prox_mu),
-            name="block_step")
+            name="block_step", audit=audit)
 
         for _ in range(local_steps):
             if cache is not None:

@@ -93,6 +93,32 @@ class ModelMemory:
                 + sum(u.train_bytes(optimizer_slots) for u in self.units)
                 + self.head.train_bytes(optimizer_slots))
 
+    def param_bytes(self) -> int:
+        """Total parameter bytes (embed + units + head) — the frozen
+        full-model argument every block step carries alongside its
+        trained slice."""
+        return (self.embed.params + self.head.params
+                + sum(u.params for u in self.units))
+
+    def rescaled(self, batch: int) -> "ModelMemory":
+        """This model priced at a different batch size: parameter bytes
+        are batch-invariant, activation/output bytes scale linearly.
+        The engines price budgets at ``sim.mem_batch`` while training
+        runs at ``sim.batch_size`` — the memory auditor uses this to
+        compare XLA's measured footprint against the prediction at the
+        batch size that actually compiled."""
+        if batch == self.batch:
+            return self
+
+        def scale(u: UnitCost) -> UnitCost:
+            return UnitCost(u.name, u.params,
+                            u.activations * batch // max(1, self.batch),
+                            u.output * batch // max(1, self.batch),
+                            flops=u.flops)
+
+        return ModelMemory([scale(u) for u in self.units],
+                           scale(self.embed), scale(self.head), batch=batch)
+
 
 # --------------------------------------------------------------------------
 # transformer families

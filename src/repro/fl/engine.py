@@ -321,6 +321,10 @@ class RoundEngine:
         self.history_sink, self._owns_sink = resolve_history_sink(
             history_sink, mode="a" if self._resume_dir else "w")
         self.obs = make_obs(obs)
+        if self.obs is not None:
+            # attach the diagnostics layer (memory auditor / dynamics
+            # analyzer) to this experiment — a no-op on plain captures
+            self.obs.bind(self.ctx)
 
     # ------------------------------------------------------------------
     def default_batch_fn(self) -> Callable[[int], list]:
@@ -378,7 +382,12 @@ class RoundEngine:
         comm = sum(r.comm_bytes if r.comm_bytes is not None
                    else wire_bytes(r.payload) for r in results)
         results = [chan.decode_result(r) for r in results]
-        return self.strategy.aggregate(ctx, state, results), comm, down
+        new_state = self.strategy.aggregate(ctx, state, results)
+        if self.obs is not None and self.obs.dynamics is not None:
+            self.obs.dynamics.record_round(
+                round_idx, state, results, new_state,
+                clients=[int(k) for k in cohort], engine="round")
+        return new_state, comm, down
 
     def _run_round_resilient(self, state, round_idx: int,
                              batch_fn: Callable[[int], list]):
@@ -426,6 +435,10 @@ class RoundEngine:
                     # its mass must not vanish from the EF residual
                     chan.rollback_uplink(k, ef_snap)
                     rt.record_quarantine(k, verdict)
+                    if self.obs is not None \
+                            and self.obs.dynamics is not None:
+                        self.obs.dynamics.record_rejection(
+                            round_idx, k, verdict.reason, engine="round")
                     comm += up
                     continue
                 comm += up
@@ -443,7 +456,11 @@ class RoundEngine:
                                                 state, k) for k in extra)
                 process(extra)
         if kept:
-            state = self.strategy.aggregate(ctx, state, kept)
+            new_state = self.strategy.aggregate(ctx, state, kept)
+            if self.obs is not None and self.obs.dynamics is not None:
+                self.obs.dynamics.record_round(round_idx, state, kept,
+                                               new_state, engine="round")
+            state = new_state
         return state, comm, down
 
     def run(self, *, initial_state=None,

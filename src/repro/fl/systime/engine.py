@@ -148,6 +148,10 @@ class AsyncEngine:
         self.obs = make_obs(obs)
         if self.obs is not None and self.obs.tracer.sim_clock is None:
             self.obs.tracer.sim_clock = lambda: self.clock.now
+        if self.obs is not None:
+            # attach the diagnostics layer (memory auditor / dynamics
+            # analyzer) to this experiment — a no-op on plain captures
+            self.obs.bind(self.ctx)
 
     def _trace(self, kind: str, t: float, client: int, version: int,
                extra, attrs=None) -> None:
@@ -213,18 +217,24 @@ class AsyncEngine:
     def _eval(self, state, eval_fn):
         return eval_state(self.strategy, self.ctx, state, eval_fn)
 
-    def _apply_async(self, state, buffered):
+    def _apply_async(self, state, buffered, version: int = -1):
         # results travel encoded (WireUpdate payloads) and decode only
         # here, at the aggregate boundary
         results = [self.channel.decode_result(r) for r, _ in buffered]
         stale = [s for _, s in buffered]
         agg = getattr(self.strategy, "aggregate_async", None)
         if agg is not None:
-            return agg(self.ctx, state, results, stale,
-                       alpha=self.staleness_alpha)
-        return default_aggregate_async(self.strategy, self.ctx, state,
-                                       results, stale,
-                                       alpha=self.staleness_alpha)
+            new_state = agg(self.ctx, state, results, stale,
+                            alpha=self.staleness_alpha)
+        else:
+            new_state = default_aggregate_async(self.strategy, self.ctx,
+                                                state, results, stale,
+                                                alpha=self.staleness_alpha)
+        if self.obs is not None and self.obs.dynamics is not None:
+            self.obs.dynamics.record_round(
+                version, state, results, new_state, staleness=stale,
+                alpha=self.staleness_alpha, engine="systime-async")
+        return new_state
 
     # ------------------------------------------------------------------ run
     def run(self, *, initial_state=None,
@@ -395,7 +405,11 @@ class AsyncEngine:
                     round_time = min(round_time, self.deadline_s)
             self.clock.advance(round_time)
             if kept:
-                state = self.strategy.aggregate(ctx, state, kept)
+                new_state = self.strategy.aggregate(ctx, state, kept)
+                if self.obs is not None and self.obs.dynamics is not None:
+                    self.obs.dynamics.record_round(
+                        rd, state, kept, new_state, engine="systime-sync")
+                state = new_state
             self._trace("aggregate", float(self.clock.now), -1, rd,
                         len(kept))
             if round_span is not None:
@@ -477,6 +491,9 @@ class AsyncEngine:
             if verdict is not None:
                 chan.rollback_uplink(k, ef_snap)
                 rt.record_quarantine(k, verdict)
+                if self.obs is not None and self.obs.dynamics is not None:
+                    self.obs.dynamics.record_rejection(
+                        rd, k, verdict.reason, engine="systime-sync")
                 bts += up
                 times.append(total)
                 self._trace("quarantine", float(self.clock.now + total),
@@ -705,6 +722,11 @@ class AsyncEngine:
                     if verdict is not None:
                         self.channel.rollback_uplink(ev.client, ef_snap)
                         rt.record_quarantine(ev.client, verdict)
+                        if self.obs is not None \
+                                and self.obs.dynamics is not None:
+                            self.obs.dynamics.record_rejection(
+                                version, ev.client, verdict.reason,
+                                engine="systime-async")
                         bytes_acc += up     # garbage still crossed the wire
                         dropped = True
                         self._trace("quarantine", float(self.clock.now),
@@ -723,7 +745,8 @@ class AsyncEngine:
                     with span_if(self.obs, "aggregate",
                                  version=version + 1,
                                  merged=len(buffered)):
-                        state = self._apply_async(state, buffered)
+                        state = self._apply_async(state, buffered,
+                                                  version + 1)
                     version += 1
                     did_agg = True
                     self._trace("aggregate", float(self.clock.now), -1,

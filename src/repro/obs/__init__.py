@@ -37,6 +37,8 @@ import contextvars
 import dataclasses
 from typing import Optional, Union
 
+from repro.obs.audit import MemoryAuditor  # noqa: F401
+from repro.obs.dynamics import DynamicsAnalyzer  # noqa: F401
 from repro.obs.metrics import (Counter, Gauge, Histogram,  # noqa: F401
                                MetricsRegistry)
 from repro.obs.trace import (LEGACY_FIELDS, SYS_EVENT_KINDS,  # noqa: F401
@@ -45,10 +47,37 @@ from repro.obs.trace import (LEGACY_FIELDS, SYS_EVENT_KINDS,  # noqa: F401
 
 @dataclasses.dataclass
 class Obs:
-    """One telemetry capture: a tracer + a metrics registry."""
+    """One telemetry capture: a tracer + a metrics registry, plus the
+    opt-in diagnostics layer — a memory-conformance auditor and a
+    learning-dynamics analyzer (both default ``None`` = off, keeping
+    the plain-telemetry path bitwise identical)."""
     tracer: Tracer = dataclasses.field(default_factory=Tracer)
     metrics: MetricsRegistry = dataclasses.field(
         default_factory=MetricsRegistry)
+    audit: Optional[MemoryAuditor] = None
+    dynamics: Optional[DynamicsAnalyzer] = None
+
+    # ---------------------------------------------------------- lifecycle
+    def bind(self, ctx) -> "Obs":
+        """Attach an experiment context to the diagnostics (engines call
+        this at construction; a no-op without audit/dynamics)."""
+        if self.audit is not None:
+            self.audit.bind(ctx, self.metrics)
+        if self.dynamics is not None:
+            self.dynamics.bind(self.metrics)
+        return self
+
+    def reset(self) -> "Obs":
+        """Fresh capture in place: clear spans/metrics/diagnostics so
+        back-to-back runs sharing this ``Obs`` don't accumulate stale
+        counters (audit keeps its experiment binding)."""
+        self.tracer.reset()
+        self.metrics.reset()
+        if self.audit is not None:
+            self.audit.reset()
+        if self.dynamics is not None:
+            self.dynamics.reset()
+        return self
 
     # ------------------------------------------------------ exporters
     def export_jsonl(self, sink_or_path) -> int:
@@ -66,17 +95,20 @@ class Obs:
 
 def make_obs(spec: Union[None, bool, str, Obs]) -> Optional[Obs]:
     """Resolve the engines' ``obs=`` knob: ``None``/``False``/``"off"``
-    -> disabled (``None``); ``True``/``"on"`` -> a fresh capture; an
-    :class:`Obs` instance passes through (sharing one capture across
-    engines)."""
+    -> disabled (``None``); ``True``/``"on"`` -> a fresh capture;
+    ``"full"`` -> a capture with the diagnostics layer (memory auditor +
+    dynamics analyzer) enabled; an :class:`Obs` instance passes through
+    (sharing one capture across engines)."""
     if spec is None or spec is False or spec == "off":
         return None
     if spec is True or spec == "on":
         return Obs()
+    if spec == "full":
+        return Obs(audit=MemoryAuditor(), dynamics=DynamicsAnalyzer())
     if isinstance(spec, Obs):
         return spec
-    raise ValueError(f"obs must be 'on', 'off', None, a bool, or an Obs "
-                     f"instance, got {spec!r}")
+    raise ValueError(f"obs must be 'on', 'off', 'full', None, a bool, or "
+                     f"an Obs instance, got {spec!r}")
 
 
 # --------------------------------------------------------------------------
@@ -125,4 +157,5 @@ __all__ = [
     "Tracer", "Span", "Event", "SysEvent", "LEGACY_FIELDS",
     "SYS_EVENT_KINDS",
     "MetricsRegistry", "Counter", "Gauge", "Histogram",
+    "MemoryAuditor", "DynamicsAnalyzer",
 ]

@@ -1,0 +1,262 @@
+"""Learning-dynamics analytics at the aggregation boundary
+(docs/observability.md §Dynamics).
+
+Both engines call :meth:`DynamicsAnalyzer.record_round` right where
+they merge client results into the new global state — obs-gated and
+opt-in within the capture (``Obs(dynamics=DynamicsAnalyzer())``), so
+the default paths stay bitwise-identical.  Per merge the analyzer
+computes, on host numpy and strictly read-only:
+
+* per-client update norms ``||payload - state||`` and per-block norms
+  of the aggregate delta (top-level parameter subtrees, list-valued
+  subtrees split per depth index),
+* update-vs-aggregate cosine drift (how aligned each client's update
+  is with what was actually applied),
+* staleness-weighted contribution fractions
+  ``w_i * (1 + tau_i)^-alpha / sum`` (the FedBuff discount — mirrors
+  :func:`repro.fl.systime.staleness.polynomial_discount`, asserted
+  equal in tests), and
+* participation equity: per-client merge counts and their Gini
+  coefficient.
+
+Quarantine/rejection events from the robustness layer (PR 9) are
+overlaid via :meth:`record_rejection`, so "who got rejected and why"
+is one :meth:`client_summary` query next to "who contributed what".
+
+Payloads that are not congruent with the global state (heterofl's
+``(padded, mask)`` pairs, fedepth's masked tuples) are skipped per
+client with a ``dynamics_skipped{reason=}`` counter — the analyzer
+never raises into the training path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Sequence
+
+#: Cosine values live in [-1, 1]; give the histogram matching buckets.
+COSINE_BUCKETS = (-1.0, -0.5, -0.25, 0.0, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0)
+
+
+def _discount(staleness: float, alpha: float) -> float:
+    # FedBuff's polynomial rule — keep in lockstep with
+    # repro.fl.systime.staleness.polynomial_discount (obs cannot import
+    # fl without inverting the layering; equality is regression-tested).
+    return float((1.0 + max(0.0, staleness)) ** -alpha)
+
+
+def _gini(values: Sequence[float]) -> float:
+    vals = sorted(float(v) for v in values)
+    n, tot = len(vals), sum(vals)
+    if n == 0 or tot <= 0:
+        return 0.0
+    cum = sum(i * v for i, v in enumerate(vals, 1))
+    return (2.0 * cum) / (n * tot) - (n + 1) / n
+
+
+def _leaves_with_structure(tree):
+    import jax
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def _delta_stats(a_leaves, b_leaves, agg_leaves=None):
+    """Accumulated ||a - b||, and optionally the dot of (a - b) with the
+    aggregate delta plus its norm — all leaf-wise, never concatenated."""
+    import numpy as np
+    sq = dot = agg_sq = 0.0
+    for i, (la, lb) in enumerate(zip(a_leaves, b_leaves)):
+        da = np.asarray(la, dtype=np.float64) - np.asarray(lb,
+                                                          dtype=np.float64)
+        sq += float(np.sum(da * da))
+        if agg_leaves is not None:
+            ga = np.asarray(agg_leaves[i], dtype=np.float64)
+            dot += float(np.sum(da * ga))
+            agg_sq += float(np.sum(ga * ga))
+    return math.sqrt(sq), dot, math.sqrt(agg_sq)
+
+
+def _congruent(leaves, ref_leaves) -> bool:
+    if len(leaves) != len(ref_leaves):
+        return False
+    return all(getattr(a, "shape", None) == getattr(b, "shape", None)
+               for a, b in zip(leaves, ref_leaves))
+
+
+class DynamicsAnalyzer:
+    """Aggregation-boundary training diagnostics for one capture."""
+
+    def __init__(self):
+        self.rounds: List[dict] = []
+        self.rejections: List[dict] = []
+        self.participation: Dict[int, int] = {}
+        self.rejected_counts: Dict[int, int] = {}
+        self._contrib_sum: Dict[int, float] = {}
+        self._metrics = None
+
+    def bind(self, metrics) -> "DynamicsAnalyzer":
+        self._metrics = metrics
+        return self
+
+    def reset(self) -> None:
+        self.rounds.clear()
+        self.rejections.clear()
+        self.participation.clear()
+        self.rejected_counts.clear()
+        self._contrib_sum.clear()
+
+    # ---------------------------------------------------------- recording
+    def record_round(self, round_idx: int, state, results: Sequence,
+                     new_state, *, clients: Optional[Sequence[int]] = None,
+                     staleness: Optional[Sequence[float]] = None,
+                     alpha: float = 0.5, engine: str = "round") -> None:
+        """Analyze one merge: ``state`` is the pre-aggregate global
+        params, ``results`` the merged ``ClientResult``s, ``new_state``
+        what the strategy produced.  Client ids come from
+        ``result.client_id`` when stamped, else ``clients`` by position.
+        Never raises."""
+        try:
+            self._record_round(round_idx, state, results, new_state,
+                               clients=clients, staleness=staleness,
+                               alpha=alpha, engine=engine)
+        except Exception:
+            self._count("dynamics_skipped", reason="error")
+
+    def _record_round(self, round_idx, state, results, new_state, *,
+                      clients, staleness, alpha, engine) -> None:
+        state_leaves, state_def = _leaves_with_structure(state)
+        new_leaves, new_def = _leaves_with_structure(new_state)
+        if new_def != state_def or not _congruent(new_leaves, state_leaves):
+            self._count("dynamics_skipped", reason="state_structure")
+            return
+        agg_leaves = new_leaves_minus(state_leaves, new_leaves)
+        agg_norm, _, _ = _delta_stats(new_leaves, state_leaves)
+
+        # staleness-weighted contribution denominator over parseable rows
+        rows, skipped = [], 0
+        discounts, weights = [], []
+        for i, res in enumerate(results):
+            s = float(staleness[i]) if staleness is not None else 0.0
+            discounts.append(_discount(s, alpha))
+            weights.append(float(getattr(res, "weight", 1.0)))
+        denom = sum(w * d for w, d in zip(weights, discounts)) or 1.0
+
+        for i, res in enumerate(results):
+            cid = getattr(res, "client_id", None)
+            if cid is None:
+                cid = int(clients[i]) if clients is not None \
+                    and i < len(clients) else i
+            payload = getattr(res, "payload", None)
+            p_leaves, p_def = _leaves_with_structure(payload)
+            if p_def != state_def or not _congruent(p_leaves, state_leaves):
+                skipped += 1
+                self._count("dynamics_skipped", reason="payload_structure")
+                continue
+            norm, dot, a_norm = _delta_stats(p_leaves, state_leaves,
+                                             agg_leaves)
+            cosine = dot / (norm * a_norm) if norm > 0 and a_norm > 0 \
+                else 0.0
+            s = float(staleness[i]) if staleness is not None else 0.0
+            contribution = weights[i] * discounts[i] / denom
+            cid = int(cid)
+            self.participation[cid] = self.participation.get(cid, 0) + 1
+            self._contrib_sum[cid] = (self._contrib_sum.get(cid, 0.0)
+                                      + contribution)
+            rows.append({"client": cid, "weight": weights[i],
+                         "staleness": s, "discount": discounts[i],
+                         "contribution": contribution, "norm": norm,
+                         "cosine": cosine})
+            if self._metrics is not None:
+                self._metrics.histogram("update_norm",
+                                        engine=engine).observe(norm)
+                self._metrics.histogram("update_cosine",
+                                        buckets=COSINE_BUCKETS,
+                                        engine=engine).observe(cosine)
+
+        gini = _gini(self.participation.values())
+        self.rounds.append({
+            "round": int(round_idx), "engine": engine,
+            "merged": len(results), "skipped_clients": skipped,
+            "agg_norm": agg_norm,
+            "block_norms": _block_norms(state, new_state),
+            "participation_gini": gini, "clients": rows})
+        if self._metrics is not None:
+            self._metrics.counter("dynamics_rounds", engine=engine).inc()
+            self._metrics.gauge("participation_gini").set(gini)
+
+    def record_rejection(self, round_idx: int, client: int, reason: str,
+                         *, engine: str = "round") -> None:
+        """Overlay one quarantine/rejection event (PR 9's defense line)
+        onto the dynamics timeline.  Never raises."""
+        try:
+            cid = int(client)
+            self.rejections.append({"round": int(round_idx), "client": cid,
+                                    "reason": str(reason), "engine": engine})
+            self.rejected_counts[cid] = self.rejected_counts.get(cid, 0) + 1
+            self._count("dynamics_rejections", reason=str(reason))
+        except Exception:
+            self._count("dynamics_skipped", reason="error")
+
+    def _count(self, name: str, **labels) -> None:
+        if self._metrics is not None:
+            self._metrics.counter(name, **labels).inc()
+
+    # ----------------------------------------------------------- queries
+    def client_summary(self) -> List[dict]:
+        """Per-client equity + rejection rollup — the "who got rejected
+        and why, and who contributed what" query, one row per client."""
+        ids = sorted(set(self.participation) | set(self.rejected_counts))
+        out = []
+        for cid in ids:
+            merged = self.participation.get(cid, 0)
+            reasons: Dict[str, int] = {}
+            for rej in self.rejections:
+                if rej["client"] == cid:
+                    reasons[rej["reason"]] = reasons.get(rej["reason"], 0) + 1
+            out.append({"client": cid, "merged": merged,
+                        "rejected": self.rejected_counts.get(cid, 0),
+                        "reasons": reasons,
+                        "total_contribution": self._contrib_sum.get(cid,
+                                                                    0.0)})
+        return out
+
+
+def new_leaves_minus(state_leaves, new_leaves):
+    """The aggregate-delta leaves (new - state), materialized once per
+    call site for the cosine computation."""
+    import numpy as np
+    return [np.asarray(n, dtype=np.float64)
+            - np.asarray(s, dtype=np.float64)
+            for s, n in zip(state_leaves, new_leaves)]
+
+
+def _block_norms(state, new_state) -> Dict[str, float]:
+    """Aggregate-delta norm per top-level parameter subtree; list-valued
+    subtrees (resnet's per-block param list) split per depth index."""
+    import numpy as np
+
+    def tree_norm(a, b) -> float:
+        import jax
+        sq = 0.0
+        for la, lb in zip(jax.tree_util.tree_leaves(a),
+                          jax.tree_util.tree_leaves(b)):
+            d = np.asarray(lb, dtype=np.float64) \
+                - np.asarray(la, dtype=np.float64)
+            sq += float(np.sum(d * d))
+        return math.sqrt(sq)
+
+    if not (isinstance(state, dict) and isinstance(new_state, dict)
+            and set(state) == set(new_state)):
+        return {"all": tree_norm(state, new_state)}
+    out: Dict[str, float] = {}
+    for k in sorted(state, key=str):
+        sv, nv = state[k], new_state[k]
+        if (isinstance(sv, (list, tuple)) and isinstance(nv, (list, tuple))
+                and len(sv) == len(nv)):
+            for i, (a, b) in enumerate(zip(sv, nv)):
+                out[f"{k}[{i}]"] = tree_norm(a, b)
+        else:
+            out[str(k)] = tree_norm(sv, nv)
+    return out
+
+
+__all__ = ["DynamicsAnalyzer", "COSINE_BUCKETS"]

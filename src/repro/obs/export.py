@@ -52,7 +52,9 @@ def to_jsonl(obs, sink_or_path: Union[str, "object"]) -> int:
     """Stream the whole capture through a
     :class:`~repro.fl.scale.history.JsonlHistorySink` (an open sink, or
     a path one is created for and closed).  Returns the line count.
-    Line kinds: ``span`` / ``event`` / ``sys_event`` / ``metric``."""
+    Line kinds: ``span`` / ``event`` / ``sys_event`` / ``metric``, plus
+    ``audit_cell`` / ``dynamics_round`` / ``dynamics_rejection`` when
+    the capture's diagnostics layer is enabled."""
     from repro.fl.scale.history import JsonlHistorySink
     own = not isinstance(sink_or_path, JsonlHistorySink)
     sink = JsonlHistorySink(sink_or_path) if own else sink_or_path
@@ -77,6 +79,19 @@ def to_jsonl(obs, sink_or_path: Union[str, "object"]) -> int:
         for m in obs.metrics.snapshot():
             sink.emit("metric", **m)
             n += 1
+        audit = getattr(obs, "audit", None)
+        if audit is not None:
+            for row in audit.table():
+                sink.emit("audit_cell", **row)
+                n += 1
+        dyn = getattr(obs, "dynamics", None)
+        if dyn is not None:
+            for row in dyn.rounds:
+                sink.emit("dynamics_round", **row)
+                n += 1
+            for row in dyn.rejections:
+                sink.emit("dynamics_rejection", **row)
+                n += 1
     finally:
         if own:
             sink.close()
@@ -177,11 +192,18 @@ def _prom_name(name: str) -> str:
     return "repro_" + re.sub(r"[^a-zA-Z0-9_]", "_", name)
 
 
+def _prom_escape(value) -> str:
+    """Escape a label value per the Prometheus text exposition format:
+    backslash, double-quote, and newline must be backslash-escaped."""
+    return (str(value).replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
 def _prom_labels(labels, extra: Optional[dict] = None) -> str:
     items = list(labels) + sorted((extra or {}).items())
     if not items:
         return ""
-    body = ",".join(f'{k}="{str(v)}"' for k, v in items)
+    body = ",".join(f'{k}="{_prom_escape(v)}"' for k, v in items)
     return "{" + body + "}"
 
 

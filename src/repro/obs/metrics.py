@@ -123,6 +123,12 @@ class MetricsRegistry:
     def __init__(self):
         self._metrics: Dict[Tuple[str, Tuple[Tuple[str, str], ...]], Any] = {}
 
+    def reset(self) -> None:
+        """Drop every metric — back-to-back runs sharing one capture
+        call ``Obs.reset()`` between them so counters don't accumulate
+        stale state across runs (tests/test_diagnostics.py)."""
+        self._metrics.clear()
+
     def _get(self, cls, name: str, labels: Dict[str, Any], **kw):
         key = (name, _label_key(labels))
         metric = self._metrics.get(key)

@@ -148,6 +148,16 @@ class Tracer:
         self._stack: List[int] = []
         self._next_id = 0
 
+    def reset(self) -> None:
+        """Drop every recorded span/event and restart ids — part of
+        ``Obs.reset()`` between back-to-back runs (keeps ``sim_clock``,
+        which the owning engine rebinds anyway)."""
+        self.spans.clear()
+        self.events.clear()
+        self.sys_events.clear()
+        self._stack.clear()
+        self._next_id = 0
+
     # ------------------------------------------------------------- clocks
     def _sim_now(self) -> float:
         return float(self.sim_clock()) if self.sim_clock is not None else 0.0

@@ -1,0 +1,537 @@
+"""Conformance & diagnostics layer (docs/observability.md §Auditing /
+§Dynamics / §Run reports / §Bench baselines): XLA memory-model auditing
+(error-ratio envelope, budget violations, graceful ``unavailable``),
+aggregation-boundary dynamics with the quarantine overlay, full-obs
+bitwise non-perturbation on both engines, registry reset semantics, the
+trace/run-report tools' failure modes, Prometheus text-format edge
+cases, and the bench regression gate."""
+import json
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.preresnet20 import reduced as rn_reduced
+from repro.configs.vit_t16 import reduced as vit_reduced
+from repro.core import blockwise
+from repro.core.decomposition import decompose
+from repro.core.memory_model import vit_memory
+from repro.fl.data import build_federated
+from repro.fl.engine import RoundEngine, SimConfig, build_context
+from repro.fl.faults import FaultPlan, ResiliencePolicy
+from repro.fl.registry import get_strategy
+from repro.fl.scale.history import JsonlHistorySink
+from repro.fl.strategies.fedepth import FedepthStrategy
+from repro.fl.strategy import Context
+from repro.fl.systime import (AsyncEngine, SystemModel, mixed_profiles)
+from repro.fl.systime.staleness import polynomial_discount
+from repro.models import vit
+from repro.obs import DynamicsAnalyzer, MemoryAuditor, Obs, make_obs
+from repro.obs.audit import ERROR_RATIO_BOUNDS
+from repro.obs.dynamics import _discount, _gini
+from repro.obs.export import _prom_name, to_prometheus
+from repro.obs.metrics import MetricsRegistry
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "tools"))
+import bench_compare  # noqa: E402
+import run_report  # noqa: E402
+import trace_report  # noqa: E402
+
+CFG = rn_reduced(num_classes=10, image_size=16)
+MIX = {"iot": 0.25, "phone": 0.5, "workstation": 0.25}
+DATA = build_federated(num_clients=8, alpha=1.0, n_train=320, n_test=160,
+                       image_size=16, seed=0)
+
+
+def _sim(**kw):
+    base = dict(rounds=2, participation=0.5, lr=0.05, local_steps=1,
+                batch_size=32, scenario="fair", seed=0)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def _ctx(sim=None):
+    return build_context(DATA, sim or _sim(), model_cfg=CFG)
+
+
+def _strip(history):
+    return [(r.round, r.accuracy, r.comm_bytes, r.sim_seconds,
+             r.down_bytes) for r in history]
+
+
+def _same_params(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+# --------------------------------------------------------- full capture
+@pytest.fixture(scope="module")
+def capture(tmp_path_factory):
+    """One real systime run with the full diagnostics stack + a history
+    sink; exports all three run-report inputs.  Shared by the resnet
+    conformance, dynamics, and run-report tests."""
+    out = tmp_path_factory.mktemp("capture")
+    obs = Obs(audit=MemoryAuditor(), dynamics=DynamicsAnalyzer())
+    sink = JsonlHistorySink(str(out / "history.jsonl"))
+    eng = AsyncEngine(get_strategy("fedepth"), _ctx(),
+                      system=SystemModel(mixed_profiles(8, MIX, seed=0)),
+                      mode="async", obs=obs, history_sink=sink)
+    eng.run(eval_every=1)
+    obs.export_jsonl(str(out / "telemetry.jsonl"))
+    obs.export_chrome_trace(str(out / "trace.json"))
+    return {"obs": obs, "eng": eng, "dir": out,
+            "history": str(out / "history.jsonl"),
+            "telemetry": str(out / "telemetry.jsonl"),
+            "trace": str(out / "trace.json")}
+
+
+# ------------------------------------------------------------- auditing
+def test_make_obs_full_attaches_diagnostics():
+    obs = make_obs("full")
+    assert obs.audit is not None and obs.dynamics is not None
+    assert make_obs("on").audit is None
+
+
+def test_audit_conformance_resnet(capture):
+    """Acceptance: measured-vs-predicted recorded for resnet cells with
+    the error ratio inside the documented envelope — or the cell is
+    ``unavailable``, never a crash."""
+    cells = capture["obs"].audit.query(family="resnet")
+    assert cells, "fedepth on blockwise resnet must audit block cells"
+    ok = [c for c in cells if c["status"] == "ok"]
+    for c in cells:
+        assert c["status"] in ("ok", "unavailable")
+        if c["status"] != "ok":
+            assert c["detail"]          # reason is recorded
+            continue
+        assert c["measured_bytes"] == (c["temp_bytes"]
+                                       + c["argument_bytes"]
+                                       + c["output_bytes"])
+        assert c["predicted_bytes"] > 0
+        lo, hi = ERROR_RATIO_BOUNDS
+        assert lo <= c["error_ratio"] <= hi, \
+            f"cell {c['family']}/{c['block']} ratio {c['error_ratio']}"
+        assert c["block"] == f"{c['lo']}:{c['hi']}"
+    # this CPU backend exposes memory_analysis(): cells must be measured
+    assert ok, [c["detail"] for c in cells]
+    m = capture["obs"].metrics
+    assert m.value("audit_cells", status="ok") == len(ok)
+    assert m.value("memory_model_error_ratio", family="resnet",
+                   block=ok[0]["block"], batch=ok[0]["batch"]) \
+        == pytest.approx(ok[0]["error_ratio"])
+
+
+def test_audit_conformance_vit():
+    """Same acceptance on the ViT family (fig7 fine-tune cell shape)."""
+    clients, batch = 4, 4
+    cfg = vit_reduced(num_classes=10)
+    data = build_federated(num_clients=clients, alpha=1.0,
+                           n_train=clients * batch * 2, n_test=40,
+                           image_size=cfg.image_size, seed=0)
+    mem = vit_memory(cfg, batch=batch)
+    dec = decompose(mem, mem.block_train_bytes(
+        0, max(1, len(mem.units) // 3)))
+    sim = SimConfig(rounds=1, participation=1.0, lr=0.05, local_steps=1,
+                    batch_size=batch, seed=0)
+    ctx = Context(sim=sim, num_clients=clients, sizes=data.client_sizes(),
+                  rng=np.random.default_rng(0), key=jax.random.PRNGKey(0),
+                  mem=mem, decomps=[dec] * clients, data=data)
+    obs = Obs(audit=MemoryAuditor())
+    eng = RoundEngine(FedepthStrategy(runner=blockwise.vit_runner(cfg)),
+                      ctx, obs=obs)
+    eng.run(initial_state=vit.init(ctx.key, cfg), eval_every=10,
+            eval_fn=lambda state: 0.0)    # generic-runner path: no
+    # strategy eval on the vit param tree
+    cells = obs.audit.query(family="vit")
+    assert cells
+    for c in cells:
+        assert c["status"] in ("ok", "unavailable")
+        if c["status"] == "ok":
+            lo, hi = ERROR_RATIO_BOUNDS
+            assert lo <= c["error_ratio"] <= hi, c
+    assert any(c["status"] == "ok" for c in cells)
+
+
+def test_audit_unavailable_never_crashes():
+    """A function without AOT lowering (or a backend without memory
+    stats) degrades the cell to ``unavailable`` — no exception."""
+    aud = MemoryAuditor().bind(object(), MetricsRegistry())
+    batch = {"x": np.ones((16, 3), np.float32)}
+    aud.audit_block_step(lambda p, b: p, (np.ones(4), batch),
+                         family="resnet", lo=0, hi=1, variant="buffered")
+    (cell,) = aud.table()
+    assert cell["status"] == "unavailable"
+    assert "AttributeError" in cell["detail"]
+    assert cell["batch"] == 16
+    assert aud._metrics.value("audit_cells", status="unavailable") == 1
+
+
+def test_audit_budget_violations_and_query():
+    """Tiny declared budgets: every bound client whose decomposition
+    schedules the audited block range counts a violation under its
+    tier label; ``query(violated_only=True)`` surfaces the cells."""
+    ctx = _ctx()
+    assert ctx.decomps, "fair scenario still builds decompositions"
+
+    class Duck:                      # Context duck-type with 1-byte budgets
+        mem = ctx.mem
+        ratios = ctx.ratios
+        budgets = np.ones(ctx.num_clients, dtype=np.int64)
+        decomps = ctx.decomps
+
+    metrics = MetricsRegistry()
+    aud = MemoryAuditor().bind(Duck(), metrics)
+    lo, hi = tuple(ctx.decomps[0].blocks)[0]
+    f = jax.jit(lambda p, b: p * jnp.sum(b["x"]))
+    args = (jnp.ones((8, 8), jnp.float32),
+            {"x": jnp.ones((32, 4), jnp.float32)})
+    aud.audit_block_step(f, args, family="resnet", lo=lo, hi=hi,
+                         variant="recompute")
+    (cell,) = aud.query(violated_only=True)
+    assert cell["status"] == "ok"
+    assert cell["budget_bytes"] == 1
+    assert cell["violated_tiers"]
+    total = sum(m.value for m in metrics
+                if m.name == "budget_violations")
+    # every client scheduling this block violates the 1-byte budget
+    n_bound = sum(1 for d in ctx.decomps if (lo, hi) in tuple(d.blocks))
+    assert total == n_bound > 0
+    assert aud.query(family="whisper") == []
+    assert aud.query(status="unavailable") == []
+
+
+def test_audit_dedupes_cells_per_signature():
+    aud = MemoryAuditor()
+    f = jax.jit(lambda p, b: p + jnp.sum(b["x"]))
+    args = (jnp.ones(4), {"x": jnp.ones((8, 2))})
+    for _ in range(3):
+        aud.audit_block_step(f, args, family="resnet", lo=0, hi=2,
+                             variant="buffered")
+    assert len(aud.table()) == 1
+    aud.audit_block_step(f, args, family="resnet", lo=0, hi=2,
+                         variant="recompute")      # distinct signature
+    assert len(aud.table()) == 2
+
+
+# ------------------------------------------------------------- dynamics
+@pytest.mark.parametrize("tau", [0.0, 1.0, 3.0, 10.0])
+@pytest.mark.parametrize("alpha", [0.0, 0.5, 1.5])
+def test_dynamics_discount_matches_fedbuff_rule(tau, alpha):
+    """The analyzer's local copy of the FedBuff polynomial discount must
+    stay in lockstep with the systime layer's (obs cannot import fl)."""
+    assert _discount(tau, alpha) == polynomial_discount(tau, alpha)
+
+
+def test_gini_bounds():
+    assert _gini([]) == 0.0
+    assert _gini([5, 5, 5, 5]) == pytest.approx(0.0)
+    assert 0.0 <= _gini([0, 0, 0, 10]) <= 1.0
+
+
+def test_dynamics_rounds_and_equity(capture):
+    dyn = capture["obs"].dynamics
+    assert dyn.rounds, "async aggregations must be analyzed"
+    for r in dyn.rounds:
+        assert r["engine"] == "systime-async"
+        assert 0.0 <= r["participation_gini"] <= 1.0
+        assert r["agg_norm"] >= 0.0
+        assert r["block_norms"]                 # per-subtree movement
+        for c in r["clients"]:
+            assert -1.0 <= c["cosine"] <= 1.0
+            assert c["norm"] >= 0.0
+            assert 0.0 < c["contribution"] <= 1.0
+            assert 0.0 < c["discount"] <= 1.0   # staleness-weighted
+        assert sum(c["contribution"] for c in r["clients"]) \
+            <= 1.0 + 1e-9
+    summary = dyn.client_summary()
+    assert summary and all(s["merged"] >= 1 for s in summary)
+    assert capture["obs"].metrics.value(
+        "dynamics_rounds", engine="systime-async") == len(dyn.rounds)
+
+
+def test_dynamics_quarantine_overlay():
+    """Faulted run: rejected updates land on the dynamics timeline with
+    the validator's reason — "who got rejected and why" is one
+    ``client_summary`` query."""
+    obs = Obs(dynamics=DynamicsAnalyzer())
+    heavy = FaultPlan(seed=7, corrupt_rate=0.3, diverge_rate=0.2)
+    eng = AsyncEngine(get_strategy("fedavg"), _ctx(_sim(rounds=4)),
+                      system=SystemModel(mixed_profiles(8, MIX, seed=0)),
+                      mode="async", faults=heavy,
+                      resilience=ResiliencePolicy(), obs=obs)
+    eng.run(eval_every=4)
+    assert any(t[0] == "quarantine" for t in eng.trace)
+    dyn = obs.dynamics
+    assert dyn.rejections
+    for rej in dyn.rejections:
+        assert rej["reason"] in ("nonfinite", "abs", "norm")
+        assert rej["engine"] == "systime-async"
+    rejected = [s for s in dyn.client_summary() if s["rejected"]]
+    assert rejected and all(s["reasons"] for s in rejected)
+    n = sum(obs.metrics.value("dynamics_rejections", reason=r) or 0
+            for r in ("nonfinite", "abs", "norm"))
+    assert n == len(dyn.rejections)
+
+
+# ---------------------------------------- bitwise non-perturbation (full)
+@pytest.mark.parametrize("method", ["fedavg", "fedepth"])
+def test_full_obs_bitwise_round_engine(method):
+    """The whole diagnostics stack observes, never participates: same
+    history and params as the plain engine (wall-clock RoundEngine)."""
+    s0, h0 = RoundEngine(get_strategy(method), _ctx()).run(eval_every=2)
+    s1, h1 = RoundEngine(get_strategy(method), _ctx(),
+                         obs="full").run(eval_every=2)
+    _same_params(s0, s1)
+    assert _strip(h0) == _strip(h1)
+
+
+@pytest.mark.parametrize("method", ["fedavg", "fedepth"])
+def test_full_obs_bitwise_systime(method):
+    def run(obs):
+        eng = AsyncEngine(get_strategy(method), _ctx(),
+                          system=SystemModel(mixed_profiles(8, MIX,
+                                                            seed=0)),
+                          mode="async", obs=obs)
+        state, hist = eng.run(eval_every=2)
+        return eng, state, hist
+
+    e0, s0, h0 = run(None)
+    e1, s1, h1 = run("full")
+    _same_params(s0, s1)
+    assert _strip(h0) == _strip(h1)
+    assert repr(e0.trace) == repr(e1.trace)
+    assert e1.obs.dynamics.rounds        # and it did actually analyze
+
+
+# --------------------------------------------- registry reset (satellite)
+def test_obs_reset_isolates_sequential_runs():
+    """Two sequential ``RoundEngine.run``s sharing one ``Obs``:
+    ``Obs.reset()`` between them gives per-run scope — counters restart
+    instead of accumulating."""
+    obs = make_obs("full")
+    eng1 = RoundEngine(get_strategy("fedavg"), _ctx(), obs=obs)
+    eng1.run(eval_every=2)
+    rounds1 = obs.metrics.value("engine_rounds", engine="round")
+    spans1 = len(obs.tracer.spans)
+    assert rounds1 == 2 and spans1 > 0
+    obs.reset()
+    assert len(obs.tracer.spans) == 0 and len(obs.metrics) == 0
+    eng2 = RoundEngine(get_strategy("fedavg"), _ctx(), obs=obs)
+    eng2.run(eval_every=2)
+    assert obs.metrics.value("engine_rounds", engine="round") == rounds1
+    assert len(obs.tracer.spans) == spans1
+    # without reset, a third run accumulates on top
+    eng3 = RoundEngine(get_strategy("fedavg"), _ctx(), obs=obs)
+    eng3.run(eval_every=2)
+    assert obs.metrics.value("engine_rounds", engine="round") == 2 * rounds1
+
+
+# ------------------------------------------- trace_report CLI (satellite)
+def test_trace_report_empty_trace_exits_2(tmp_path, capsys):
+    p = tmp_path / "empty.json"
+    p.write_text(json.dumps({"traceEvents": []}))
+    assert trace_report.main([str(p)]) == 2
+    assert "empty trace" in capsys.readouterr().err
+
+
+def test_trace_report_unreadable_trace_exits_2(tmp_path, capsys):
+    p = tmp_path / "broken.json"
+    p.write_text("{not json")
+    assert trace_report.main([str(p)]) == 2
+    assert "cannot read" in capsys.readouterr().err
+    assert trace_report.main([str(tmp_path / "missing.json")]) == 2
+
+
+def test_trace_report_events_without_phase_attrs_exit_1(tmp_path, capsys):
+    """Events missing the tier/phase attrs (wall-clock capture, foreign
+    trace): clear message + exit 1, not a crash or an empty report."""
+    events = [{"ph": "X", "name": "compute", "ts": 0, "dur": 5e6,
+               "args": {}},                      # no tier
+              {"ph": "X", "name": "round", "ts": 0, "dur": 1e6},
+              "not-a-dict",                      # malformed entry
+              {"ph": "M", "name": "process_name"}]
+    p = tmp_path / "untagged.json"
+    p.write_text(json.dumps({"traceEvents": events}))
+    assert trace_report.main([str(p)]) == 1
+    assert "no tier-tagged phase slices" in capsys.readouterr().err
+
+
+# --------------------------------------- prometheus format (satellite)
+def test_prometheus_label_escaping():
+    m = MetricsRegistry()
+    m.counter("odd", path='a"b\\c\nd').inc(2)
+    text = to_prometheus(m)
+    assert 'path="a\\"b\\\\c\\nd"' in text
+    assert "\n\n" not in text        # the raw newline never leaks
+
+
+def test_prometheus_labeled_histogram_cumulative_buckets():
+    m = MetricsRegistry()
+    h = m.histogram("lat_s", buckets=(1.0, 2.0), tier="iot")
+    for v in (0.5, 1.5, 5.0):
+        h.observe(v)
+    text = to_prometheus(m)
+    assert '# TYPE repro_lat_s histogram' in text
+    assert 'repro_lat_s_bucket{tier="iot",le="1.0"} 1' in text
+    assert 'repro_lat_s_bucket{tier="iot",le="2.0"} 2' in text
+    assert 'repro_lat_s_bucket{tier="iot",le="+Inf"} 3' in text
+    assert 'repro_lat_s_sum{tier="iot"} 7.0' in text
+    assert 'repro_lat_s_count{tier="iot"} 3' in text
+
+
+def test_prom_name_sanitization_round_trip():
+    import re
+    for raw in ("block.step/ms", "weird metric-name", "jit_cache_hits"):
+        name = _prom_name(raw)
+        assert re.fullmatch(r"[a-zA-Z_:][a-zA-Z0-9_:]*", name), name
+        assert name.startswith("repro_")
+    assert _prom_name("block.step/ms") == "repro_block_step_ms"
+
+
+# ------------------------------------------- bench_compare (satellite)
+def _write_bench(tmp_path, value):
+    art = tmp_path / "BENCH_x.json"
+    art.write_text(json.dumps(
+        {"cells": {"a/b": {"final_acc": value}},
+         "rows": [{"kind": "parity", "kernel": "k1", "err": 1e-6},
+                  {"kind": "timing", "kernel": "k1", "us": 10.0}]}))
+    return art
+
+
+def _write_baselines(tmp_path, rules):
+    bl = tmp_path / "baselines.json"
+    bl.write_text(json.dumps({"version": 1,
+                              "files": {"BENCH_x.json": {"rules": rules}}}))
+    return bl
+
+
+def test_bench_compare_pass_and_dict_path_step(tmp_path, capsys):
+    _write_bench(tmp_path, 0.5)
+    bl = _write_baselines(tmp_path, [
+        {"path": ["cells", "a/b", "final_acc"], "direction": "min",
+         "limit": 0.4},
+        {"path": ["rows", {"kind": "parity", "kernel": "k1"}, "err"],
+         "direction": "max", "limit": 1e-3},
+    ])
+    assert bench_compare.main(["--baselines", str(bl),
+                               "--dir", str(tmp_path)]) == 0
+    out = capsys.readouterr().out
+    assert "0 regression" in out
+
+
+def test_bench_compare_flags_synthetic_regression(tmp_path, capsys):
+    """Acceptance: a metric on the wrong side of its rule exits 1."""
+    _write_bench(tmp_path, 0.1)                  # below the 0.4 floor
+    bl = _write_baselines(tmp_path, [
+        {"path": ["cells", "a/b", "final_acc"], "direction": "min",
+         "limit": 0.4}])
+    assert bench_compare.main(["--baselines", str(bl),
+                               "--dir", str(tmp_path)]) == 1
+    assert "regression" in capsys.readouterr().out
+
+
+def test_bench_compare_strict_only_gating(tmp_path, monkeypatch, capsys):
+    _write_bench(tmp_path, 0.1)
+    bl = _write_baselines(tmp_path, [
+        {"path": ["cells", "a/b", "final_acc"], "direction": "min",
+         "limit": 0.4, "strict_only": True}])
+    monkeypatch.delenv("REPRO_BENCH_STRICT", raising=False)
+    assert bench_compare.main(["--baselines", str(bl),
+                               "--dir", str(tmp_path)]) == 0
+    assert "advisory" in capsys.readouterr().out
+    assert bench_compare.main(["--baselines", str(bl),
+                               "--dir", str(tmp_path), "--strict"]) == 1
+    monkeypatch.setenv("REPRO_BENCH_STRICT", "1")
+    assert bench_compare.main(["--baselines", str(bl),
+                               "--dir", str(tmp_path)]) == 1
+
+
+def test_bench_compare_missing_artifact_and_path_warn(tmp_path, capsys):
+    _write_bench(tmp_path, 0.5)
+    bl = tmp_path / "baselines.json"
+    bl.write_text(json.dumps({"version": 1, "files": {
+        "BENCH_missing.json": {"rules": [
+            {"path": ["x"], "direction": "min", "limit": 0}]},
+        "BENCH_x.json": {"rules": [
+            {"path": ["cells", "nope", "x"], "direction": "min",
+             "limit": 0},
+            {"path": ["rows", {"kind": "parity", "kernel": "ghost"},
+                      "err"], "direction": "max", "limit": 1}]}}}))
+    assert bench_compare.main(["--baselines", str(bl),
+                               "--dir", str(tmp_path)]) == 0
+    out = capsys.readouterr().out
+    assert out.count("warn") >= 3 and "skipped" in out
+
+
+def test_bench_compare_equals_rule_catches_flag_flip(tmp_path):
+    art = tmp_path / "BENCH_x.json"
+    art.write_text(json.dumps({"rows": {"equiv": {"bitwise_equal":
+                                                  False}}}))
+    bl = _write_baselines(tmp_path, [
+        {"path": ["rows", "equiv", "bitwise_equal"],
+         "direction": "equals", "value": True}])
+    assert bench_compare.main(["--baselines", str(bl),
+                               "--dir", str(tmp_path)]) == 1
+
+
+def test_committed_baselines_parse_against_schema():
+    """The committed rules file stays loadable and well-formed."""
+    root = pathlib.Path(__file__).resolve().parent.parent
+    doc = json.loads((root / "benchmarks" / "baselines.json").read_text())
+    assert doc["version"] == 1 and doc["files"]
+    for fname, spec in doc["files"].items():
+        assert fname.startswith("BENCH_")
+        for rule in spec["rules"]:
+            assert isinstance(rule["path"], list) and rule["path"]
+            assert rule["direction"] in ("min", "max", "equals")
+            if rule["direction"] == "equals":
+                assert "value" in rule
+            else:
+                assert isinstance(rule["limit"], (int, float))
+
+
+# ----------------------------------------------- run_report (tentpole)
+def test_run_report_self_contained_html(capture, tmp_path, capsys):
+    out = tmp_path / "report.html"
+    assert run_report.main(["--history", capture["history"],
+                            "--telemetry", capture["telemetry"],
+                            "--trace", capture["trace"],
+                            "--out", str(out)]) == 0
+    html = out.read_text()
+    assert html.startswith("<!DOCTYPE html>")
+    # self-contained: no external fetches, no scripts
+    assert "http://" not in html and "https://" not in html
+    assert "<script" not in html
+    for section in ("Memory-model conformance", "Learning dynamics",
+                    "Per-tier compute / comm lanes", "Round curves",
+                    "Metrics snapshot"):
+        assert section in html, section
+    assert "resnet" in html                 # conformance rows rendered
+    assert "<svg" in html and "<polyline" in html
+    assert 'class="legend"' in html         # >=2-series charts only
+
+
+def test_run_report_degrades_without_inputs(tmp_path, capsys):
+    hist = tmp_path / "h.jsonl"
+    hist.write_text(json.dumps({"kind": "round", "round": 1,
+                                "accuracy": 0.5, "seconds": 1.0,
+                                "comm_bytes": 10, "sim_seconds": 0.0,
+                                "down_bytes": 20}) + "\n"
+                    + "{torn line\n")
+    out = tmp_path / "r.html"
+    assert run_report.main(["--history", str(hist),
+                            "--out", str(out)]) == 0
+    html = out.read_text()
+    assert "no Chrome trace supplied" in html
+    assert "no audit cells" in html and "no dynamics records" in html
+    # nothing readable at all -> nonzero with a message
+    assert run_report.main(["--history", str(tmp_path / "nope.jsonl"),
+                            "--out", str(tmp_path / "x.html")]) == 2
+    assert "no readable inputs" in capsys.readouterr().err

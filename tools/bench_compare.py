@@ -1,0 +1,160 @@
+#!/usr/bin/env python
+"""Diff current ``BENCH_*.json`` artifacts against committed baselines.
+
+``benchmarks/baselines.json`` pins, per artifact file, a list of rules:
+
+    {"version": 1,
+     "files": {
+       "BENCH_scale.json": {"rules": [
+         {"path": ["rows", "equiv/fedavg", "bitwise_equal"],
+          "direction": "equals", "value": true},
+         ...]}}}
+
+Rule fields:
+
+* ``path`` — a JSON-pointer-style LIST of steps into the artifact
+  (artifact keys contain ``.`` and ``/``, so dotted strings are
+  ambiguous).  A step that is a dict, e.g. ``{"kind": "parity",
+  "kernel": "attention"}``, selects the first element of a list whose
+  items carry all those key/value pairs.
+* ``direction`` — ``min`` (value must be >= ``limit``), ``max``
+  (<= ``limit``), or ``equals`` (== ``value``, exact; used for
+  invariants like bitwise-equivalence flags).
+* ``strict_only`` — rule is enforced only under ``REPRO_BENCH_STRICT=1``
+  (matching the benchmark runners' own strict gating); otherwise it is
+  still evaluated and printed, but cannot fail the run.  Use it for
+  timing-derived metrics that are noisy on shared CI runners.
+* ``label`` — optional display name.
+
+A baseline file listed here but missing on disk is a WARN + skip (CI
+jobs produce different artifact subsets), as is a path that does not
+resolve — only a present value on the wrong side of its rule exits 1.
+
+    python tools/bench_compare.py --baselines benchmarks/baselines.json
+    python tools/bench_compare.py --baselines ... --dir $REPRO_BENCH_DIR
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Any, List, Optional, Tuple
+
+OK, WARN, FAIL = "ok", "warn", "FAIL"
+
+
+def resolve(doc: Any, path: List[Any]) -> Tuple[bool, Any]:
+    """Walk ``path`` into ``doc``; returns (found, value)."""
+    cur = doc
+    for step in path:
+        if isinstance(step, dict):
+            if not isinstance(cur, list):
+                return False, None
+            for item in cur:
+                if isinstance(item, dict) and all(
+                        item.get(k) == v for k, v in step.items()):
+                    cur = item
+                    break
+            else:
+                return False, None
+        elif isinstance(cur, dict) and step in cur:
+            cur = cur[step]
+        elif isinstance(cur, list) and isinstance(step, int) \
+                and -len(cur) <= step < len(cur):
+            cur = cur[step]
+        else:
+            return False, None
+    return True, cur
+
+
+def path_str(path: List[Any]) -> str:
+    return "/".join(json.dumps(s, sort_keys=True)
+                    if isinstance(s, dict) else str(s) for s in path)
+
+
+def check_rule(rule: dict, value: Any) -> Tuple[str, str]:
+    """Returns (status, detail) for a resolved value."""
+    direction = rule.get("direction")
+    if direction == "equals":
+        want = rule.get("value")
+        if value == want:
+            return OK, f"{value!r} == {want!r}"
+        return FAIL, f"{value!r} != expected {want!r}"
+    limit = rule.get("limit")
+    if not isinstance(value, (int, float)) or isinstance(value, bool) \
+            or value != value:                       # NaN-safe
+        return FAIL, f"non-numeric value {value!r} for {direction} rule"
+    if direction == "min":
+        if value >= limit:
+            return OK, f"{value:g} >= {limit:g}"
+        return FAIL, f"{value:g} < floor {limit:g} (regression)"
+    if direction == "max":
+        if value <= limit:
+            return OK, f"{value:g} <= {limit:g}"
+        return FAIL, f"{value:g} > ceiling {limit:g} (regression)"
+    return FAIL, f"unknown direction {direction!r}"
+
+
+def run(baselines_path: str, bench_dir: str, strict: bool) -> int:
+    try:
+        with open(baselines_path) as f:
+            baselines = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"error: cannot read baselines {baselines_path!r}: {e}",
+              file=sys.stderr)
+        return 2
+    rows: List[Tuple[str, str, str, str]] = []   # status, file, rule, detail
+    failures = 0
+    for fname, spec in sorted((baselines.get("files") or {}).items()):
+        fpath = os.path.join(bench_dir, fname)
+        try:
+            with open(fpath) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            rows.append((WARN, fname, "-", f"artifact missing/unreadable "
+                         f"({e.__class__.__name__}) — skipped"))
+            continue
+        for rule in spec.get("rules", []):
+            label = rule.get("label") or path_str(rule.get("path", []))
+            advisory = bool(rule.get("strict_only")) and not strict
+            found, value = resolve(doc, rule.get("path", []))
+            if not found:
+                rows.append((WARN, fname, label,
+                             "path not present — skipped"))
+                continue
+            status, detail = check_rule(rule, value)
+            if status == FAIL and advisory:
+                status, detail = WARN, detail + " [strict-only, advisory]"
+            if status == FAIL:
+                failures += 1
+            rows.append((status, fname, label, detail))
+    w_file = max([len(r[1]) for r in rows] + [4])
+    w_rule = max([len(r[2]) for r in rows] + [4])
+    print(f"{'stat':<5} {'file':<{w_file}} {'rule':<{w_rule}} detail")
+    for status, fname, label, detail in rows:
+        print(f"{status:<5} {fname:<{w_file}} {label:<{w_rule}} {detail}")
+    n_ok = sum(1 for r in rows if r[0] == OK)
+    n_warn = sum(1 for r in rows if r[0] == WARN)
+    print(f"\n{n_ok} ok, {n_warn} warn/skipped, {failures} regression(s)"
+          f" — strict={'on' if strict else 'off'}")
+    return 1 if failures else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baselines", default="benchmarks/baselines.json")
+    ap.add_argument("--dir", default=None,
+                    help="directory holding BENCH_*.json artifacts "
+                    "(default: $REPRO_BENCH_DIR or cwd)")
+    ap.add_argument("--strict", action="store_true",
+                    help="enforce strict_only rules (also enabled by "
+                    "REPRO_BENCH_STRICT=1)")
+    args = ap.parse_args(argv)
+    bench_dir = args.dir or os.environ.get("REPRO_BENCH_DIR", ".")
+    strict = args.strict or os.environ.get("REPRO_BENCH_STRICT") == "1"
+    return run(args.baselines, bench_dir, strict)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,533 @@
+#!/usr/bin/env python
+"""Fold one run's artifacts into a self-contained HTML run report.
+
+Inputs (all produced by the repo's own exporters):
+
+* ``--history``   round-record JSONL (``JsonlHistorySink`` / engine
+  ``history_sink``: lines with ``kind == "round"``);
+* ``--telemetry`` telemetry JSONL (``Obs.export_jsonl``: ``metric`` /
+  ``audit_cell`` / ``dynamics_round`` / ``dynamics_rejection`` lines);
+* ``--trace``     Chrome trace (``Obs.export_chrome_trace``), folded
+  into per-tier compute/comm lanes via ``tools/trace_report.py``.
+
+Output: ONE html file — no external scripts, stylesheets, fonts or
+images — with round curves, per-tier lanes, the memory-conformance
+table, dynamics panels and a metrics snapshot.  Sections for missing
+inputs degrade to a note, never an error; only a run with no readable
+rounds at all exits nonzero.
+
+    python tools/run_report.py --history hist.jsonl --out report.html \
+        [--telemetry telem.jsonl] [--trace trace.json] [--title NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import html
+import json
+import math
+import sys
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import trace_report
+
+# Reference dataviz palette (first three categorical slots — validated
+# all-pairs CVD-safe in both modes), status colors, and chart chrome.
+# Light/dark swap through CSS custom properties; marks reference roles.
+_CSS = """
+:root {
+  color-scheme: light;
+  --surface-1: #fcfcfb; --page: #f9f9f7;
+  --ink-1: #0b0b0b; --ink-2: #52514e; --ink-3: #898781;
+  --grid: #e1e0d9; --axis: #c3c2b7;
+  --series-1: #2a78d6; --series-2: #eb6834; --series-3: #1baf7a;
+  --status-good: #0ca30c; --status-critical: #d03b3b;
+  --status-warning: #fab219;
+  --border: rgba(11,11,11,0.10);
+}
+@media (prefers-color-scheme: dark) {
+  :root {
+    color-scheme: dark;
+    --surface-1: #1a1a19; --page: #0d0d0d;
+    --ink-1: #ffffff; --ink-2: #c3c2b7; --ink-3: #898781;
+    --grid: #2c2c2a; --axis: #383835;
+    --series-1: #3987e5; --series-2: #d95926; --series-3: #199e70;
+    --border: rgba(255,255,255,0.10);
+  }
+}
+body { background: var(--page); color: var(--ink-1); margin: 0;
+       font-family: system-ui, -apple-system, "Segoe UI", sans-serif; }
+main { max-width: 1180px; margin: 0 auto; padding: 24px; }
+h1 { font-size: 22px; font-weight: 600; margin: 8px 0 2px; }
+h2 { font-size: 15px; font-weight: 600; margin: 28px 0 10px; }
+.sub { color: var(--ink-2); font-size: 13px; margin-bottom: 18px; }
+.tiles { display: flex; flex-wrap: wrap; gap: 12px; }
+.tile { background: var(--surface-1); border: 1px solid var(--border);
+        border-radius: 8px; padding: 12px 16px; min-width: 128px; }
+.tile .label { color: var(--ink-2); font-size: 12px; }
+.tile .value { font-size: 26px; font-weight: 600; margin-top: 2px; }
+.card { background: var(--surface-1); border: 1px solid var(--border);
+        border-radius: 8px; padding: 14px 16px; }
+.row { display: flex; flex-wrap: wrap; gap: 16px; }
+.note { color: var(--ink-3); font-size: 13px; }
+.legend { display: flex; gap: 16px; font-size: 12px;
+          color: var(--ink-2); margin: 6px 2px 0; }
+.legend .key { display: inline-block; width: 10px; height: 10px;
+               border-radius: 50%; margin-right: 5px;
+               vertical-align: -1px; }
+table { border-collapse: collapse; font-size: 13px; width: 100%; }
+th { text-align: left; color: var(--ink-2); font-weight: 600;
+     border-bottom: 1px solid var(--axis); padding: 6px 10px 6px 0; }
+td { border-bottom: 1px solid var(--grid); padding: 6px 10px 6px 0;
+     font-variant-numeric: tabular-nums; }
+.status { white-space: nowrap; }
+.dot { display: inline-block; width: 9px; height: 9px;
+       border-radius: 50%; margin-right: 5px; vertical-align: -1px; }
+svg text { font-family: inherit; font-size: 11px; fill: var(--ink-3); }
+svg .endlabel { fill: var(--ink-2); font-size: 12px; }
+footer { color: var(--ink-3); font-size: 12px; margin: 32px 0 8px; }
+"""
+
+SERIES = ["var(--series-1)", "var(--series-2)", "var(--series-3)"]
+
+
+# --------------------------------------------------------------------------
+# tolerant readers (dependency-free mirrors of fl.scale.history.read_jsonl)
+# --------------------------------------------------------------------------
+def read_jsonl(path: Optional[str]) -> List[dict]:
+    if not path:
+        return []
+    rows = []
+    try:
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    obj = json.loads(line)
+                except json.JSONDecodeError:
+                    continue             # torn tail line — crash-tolerant
+                if isinstance(obj, dict):
+                    rows.append(obj)
+    except OSError as e:
+        print(f"warning: cannot read {path!r}: {e}", file=sys.stderr)
+    return rows
+
+
+def _by_kind(rows: Sequence[dict], kind: str) -> List[dict]:
+    return [r for r in rows if r.get("kind") == kind]
+
+
+# --------------------------------------------------------------------------
+# formatting
+# --------------------------------------------------------------------------
+def fmt_bytes(n) -> str:
+    if n is None:
+        return "—"
+    n = float(n)
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024 or unit == "TiB":
+            return f"{n:,.0f} {unit}" if unit == "B" else f"{n:,.2f} {unit}"
+        n /= 1024
+    return f"{n:,.2f} TiB"
+
+
+def fmt_num(x, digits: int = 3) -> str:
+    if x is None:
+        return "—"
+    if isinstance(x, float):
+        return f"{x:,.{digits}f}"
+    return f"{x:,}"
+
+
+def esc(x) -> str:
+    return html.escape(str(x))
+
+
+# --------------------------------------------------------------------------
+# inline-SVG charts (mark specs: 2px lines, >=8px ringed markers, <=24px
+# bars with 4px rounded data-ends, hairline solid gridlines)
+# --------------------------------------------------------------------------
+def _nice_ticks(lo: float, hi: float, n: int = 4) -> List[float]:
+    if hi <= lo:
+        hi = lo + 1.0
+    raw = (hi - lo) / max(1, n)
+    mag = 10 ** math.floor(math.log10(raw)) if raw > 0 else 1.0
+    for m in (1, 2, 2.5, 5, 10):
+        if raw <= m * mag:
+            step = m * mag
+            break
+    start = math.floor(lo / step) * step
+    ticks, t = [], start
+    while t <= hi + 1e-12:
+        if t >= lo - 1e-12:
+            ticks.append(round(t, 10))
+        t += step
+    return ticks or [lo, hi]
+
+
+def line_chart(series: List[Tuple[str, str, List[Tuple[float, float]]]],
+               *, width: int = 540, height: int = 220,
+               x_label: str = "", y_fmt=lambda v: f"{v:g}") -> str:
+    """``series``: [(name, color, [(x, y), ...])].  Legend is emitted
+    only for >= 2 series; every series gets a direct end label."""
+    pts_all = [p for _, _, pts in series for p in pts if p[1] is not None]
+    if not pts_all:
+        return '<p class="note">no data points</p>'
+    ml, mr, mt, mb = 46, 86, 10, 26
+    xs = [p[0] for p in pts_all]
+    ys = [p[1] for p in pts_all]
+    x0, x1 = min(xs), max(xs)
+    yticks = _nice_ticks(min(min(ys), 0 if min(ys) > 0 else min(ys)),
+                         max(ys))
+    y0, y1 = yticks[0], max(yticks[-1], max(ys))
+    iw, ih = width - ml - mr, height - mt - mb
+
+    def X(x):
+        return ml + (x - x0) / (x1 - x0 or 1) * iw
+
+    def Y(y):
+        return mt + ih - (y - y0) / (y1 - y0 or 1) * ih
+
+    parts = []
+    for t in yticks:
+        parts.append(f'<line x1="{ml}" y1="{Y(t):.1f}" x2="{ml + iw}" '
+                     f'y2="{Y(t):.1f}" stroke="var(--grid)" '
+                     f'stroke-width="1"/>')
+        parts.append(f'<text x="{ml - 6}" y="{Y(t) + 3:.1f}" '
+                     f'text-anchor="end">{esc(y_fmt(t))}</text>')
+    parts.append(f'<line x1="{ml}" y1="{mt + ih}" x2="{ml + iw}" '
+                 f'y2="{mt + ih}" stroke="var(--axis)" stroke-width="1"/>')
+    for x in sorted({p[0] for p in pts_all}):
+        parts.append(f'<text x="{X(x):.1f}" y="{height - 8}" '
+                     f'text-anchor="middle">{x:g}</text>')
+    for name, color, pts in series:
+        pts = [(x, y) for x, y in pts if y is not None]
+        if not pts:
+            continue
+        path = " ".join(f"{X(x):.1f},{Y(y):.1f}" for x, y in pts)
+        parts.append(f'<polyline points="{path}" fill="none" '
+                     f'stroke="{color}" stroke-width="2" '
+                     f'stroke-linejoin="round" stroke-linecap="round"/>')
+        for x, y in pts:      # >=8px markers with a 2px surface ring
+            parts.append(
+                f'<circle cx="{X(x):.1f}" cy="{Y(y):.1f}" r="4" '
+                f'fill="{color}" stroke="var(--surface-1)" '
+                f'stroke-width="2"><title>{esc(name)} @ {x:g}: '
+                f'{esc(y_fmt(y))}</title></circle>')
+        ex, ey = pts[-1]
+        parts.append(f'<text class="endlabel" x="{X(ex) + 9:.1f}" '
+                     f'y="{Y(ey) + 4:.1f}">{esc(name)} '
+                     f'{esc(y_fmt(ey))}</text>')
+    if x_label:
+        parts.append(f'<text x="{ml + iw / 2:.0f}" y="{height - 8}" '
+                     f'text-anchor="middle" dx="0" dy="12">'
+                     f'{esc(x_label)}</text>')
+    svg = (f'<svg viewBox="0 0 {width} {height}" width="{width}" '
+           f'height="{height}" role="img">' + "".join(parts) + "</svg>")
+    if len(series) >= 2:
+        svg += ('<div class="legend">' + "".join(
+            f'<span><span class="key" style="background:{c}"></span>'
+            f'{esc(n)}</span>' for n, c, _ in series) + "</div>")
+    return svg
+
+
+def lane_chart(rows: List[Tuple[str, List[float]]], names: List[str],
+               *, width: int = 540, unit: str = "s") -> str:
+    """Horizontal stacked lanes, one per tier: <=24px bars, 2px surface
+    gaps between segments, 4px rounded data-end, value at the tip."""
+    if not rows:
+        return '<p class="note">no lanes</p>'
+    ml, mr, bar_h, gap = 110, 90, 20, 14
+    iw = width - ml - mr
+    vmax = max(sum(vs) for _, vs in rows) or 1.0
+    height = len(rows) * (bar_h + gap) + 10
+    parts = []
+    for i, (label, vs) in enumerate(rows):
+        y = 5 + i * (bar_h + gap)
+        parts.append(f'<text x="{ml - 8}" y="{y + bar_h / 2 + 4:.1f}" '
+                     f'text-anchor="end">{esc(label)}</text>')
+        x = float(ml)
+        total = sum(vs)
+        for j, v in enumerate(vs):
+            w = v / vmax * iw
+            if w <= 0:
+                continue
+            last = j == len(vs) - 1 or all(u <= 0 for u in vs[j + 1:])
+            rx = 4 if last else 0
+            parts.append(
+                f'<rect x="{x:.1f}" y="{y}" width="{max(w - 2, 1):.1f}" '
+                f'height="{bar_h}" rx="{rx}" fill="{SERIES[j]}">'
+                f'<title>{esc(label)} {esc(names[j])}: {v:,.3f}{unit}'
+                f'</title></rect>')
+            x += w
+        parts.append(f'<text class="endlabel" x="{x + 6:.1f}" '
+                     f'y="{y + bar_h / 2 + 4:.1f}">{total:,.2f}{unit}'
+                     f'</text>')
+    svg = (f'<svg viewBox="0 0 {width} {height}" width="{width}" '
+           f'height="{height}" role="img">' + "".join(parts) + "</svg>")
+    svg += ('<div class="legend">' + "".join(
+        f'<span><span class="key" style="background:{SERIES[j]}"></span>'
+        f'{esc(n)}</span>' for j, n in enumerate(names)) + "</div>")
+    return svg
+
+
+def table_html(headers: List[str], rows: List[List[str]]) -> str:
+    if not rows:
+        return '<p class="note">no rows</p>'
+    head = "".join(f"<th>{h}</th>" for h in headers)
+    body = "".join("<tr>" + "".join(f"<td>{c}</td>" for c in r) + "</tr>"
+                   for r in rows)
+    return (f"<table><thead><tr>{head}</tr></thead>"
+            f"<tbody>{body}</tbody></table>")
+
+
+def status_cell(status: str) -> str:
+    color = {"ok": "var(--status-good)",
+             "unavailable": "var(--status-warning)"}.get(
+                 status, "var(--status-critical)")
+    mark = {"ok": "✓", "unavailable": "◌"}.get(status, "✗")
+    return (f'<span class="status"><span class="dot" '
+            f'style="background:{color}"></span>{mark} {esc(status)}</span>')
+
+
+# --------------------------------------------------------------------------
+# sections
+# --------------------------------------------------------------------------
+def tiles_section(rounds: List[dict]) -> str:
+    last = rounds[-1]
+    acc = last.get("accuracy")
+    up = sum(r.get("comm_bytes") or 0 for r in rounds)
+    down = sum(r.get("down_bytes") or 0 for r in rounds)
+    wall = sum(r.get("seconds") or 0 for r in rounds)
+    sim = last.get("sim_seconds") or 0
+    tiles = [
+        ("final accuracy", "—" if acc is None else f"{100 * acc:.1f}%"),
+        ("rounds", fmt_num(last.get("round"))),
+        ("uplink", fmt_bytes(up)),
+        ("downlink", fmt_bytes(down)),
+        ("wall time", f"{wall:,.1f} s"),
+    ]
+    if sim:
+        tiles.append(("sim time", f"{sim:,.1f} s"))
+    return '<div class="tiles">' + "".join(
+        f'<div class="tile"><div class="label">{esc(l)}</div>'
+        f'<div class="value">{v}</div></div>' for l, v in tiles) + "</div>"
+
+
+def curves_section(rounds: List[dict]) -> str:
+    acc_pts = [(r["round"], r.get("accuracy")) for r in rounds
+               if r.get("round") is not None]
+    up_pts = [(r["round"], (r.get("comm_bytes") or 0) / 2**20)
+              for r in rounds if r.get("round") is not None]
+    dn_pts = [(r["round"], (r.get("down_bytes") or 0) / 2**20)
+              for r in rounds if r.get("round") is not None]
+    out = ['<div class="row">']
+    out.append('<div class="card"><h2>Accuracy</h2>'
+               + line_chart([("accuracy", SERIES[0], acc_pts)],
+                            x_label="round",
+                            y_fmt=lambda v: f"{100 * v:.0f}%") + "</div>")
+    out.append('<div class="card"><h2>Bytes per record (MiB)</h2>'
+               + line_chart([("uplink", SERIES[0], up_pts),
+                             ("downlink", SERIES[1], dn_pts)],
+                            x_label="round",
+                            y_fmt=lambda v: f"{v:,.1f}") + "</div>")
+    out.append("</div>")
+    return "".join(out)
+
+
+def lanes_section(trace_path: Optional[str]) -> str:
+    if not trace_path:
+        return '<p class="note">no Chrome trace supplied (--trace)</p>'
+    try:
+        report = trace_report.summarize(trace_report.load_events(trace_path))
+    except (OSError, json.JSONDecodeError) as e:
+        return f'<p class="note">trace unreadable: {esc(e)}</p>'
+    tiers = report.get("tiers") or {}
+    if not tiers:
+        return ('<p class="note">trace has no tier-tagged phase slices '
+                '(wall-clock engine run?)</p>')
+    rows = [(tier, [t["compute_s"], t["comm_s"]])
+            for tier, t in tiers.items()]
+    o = report["overall"]
+    extra = (f'<p class="sub">{o["intervals"]} intervals, '
+             f'{o["missed_intervals"]} deadline-missed, '
+             f'{o["aggregates"]} aggregates, sim makespan '
+             f'{o["sim_makespan_s"]:,.2f} s</p>')
+    return lane_chart(rows, ["compute", "comm"]) + extra
+
+
+def conformance_section(cells: List[dict]) -> str:
+    if not cells:
+        return ('<p class="note">no audit cells — run with '
+                '<code>obs=Obs(audit=MemoryAuditor())</code> (or '
+                '<code>obs="full"</code>)</p>')
+    rows = []
+    for c in sorted(cells, key=lambda c: (c.get("family", ""),
+                                          c.get("lo", 0), c.get("hi", 0))):
+        ratio = c.get("error_ratio")
+        rows.append([
+            esc(c.get("family")), esc(c.get("block")),
+            esc(c.get("variant")), fmt_num(c.get("batch"), 0),
+            fmt_bytes(c.get("predicted_bytes")),
+            fmt_bytes(c.get("measured_bytes")),
+            "—" if ratio is None else f"{ratio:.2f}×",
+            fmt_bytes(c.get("budget_bytes")),
+            esc(", ".join(c.get("violated_tiers") or [])) or "—",
+            status_cell(c.get("status", "?")),
+        ])
+    return table_html(["family", "block", "variant", "batch", "predicted",
+                       "measured (XLA)", "ratio", "budget", "violations",
+                       "status"], rows)
+
+
+def dynamics_section(dyn_rounds: List[dict],
+                     rejections: List[dict]) -> str:
+    if not dyn_rounds and not rejections:
+        return ('<p class="note">no dynamics records — run with '
+                '<code>obs=Obs(dynamics=DynamicsAnalyzer())</code> (or '
+                '<code>obs="full"</code>)</p>')
+    out = []
+    norm_pts, cos_pts, gini_pts = [], [], []
+    per_client: Dict[int, dict] = {}
+    for r in dyn_rounds:
+        clients = r.get("clients") or []
+        rd = r.get("round", 0)
+        if clients:
+            norm_pts.append(
+                (rd, sum(c.get("norm", 0) for c in clients) / len(clients)))
+            cos_pts.append(
+                (rd, sum(c.get("cosine", 0) for c in clients)
+                 / len(clients)))
+        if r.get("participation_gini") is not None:
+            gini_pts.append((rd, r["participation_gini"]))
+        for c in clients:
+            rec = per_client.setdefault(c["client"], {
+                "merged": 0, "contribution": 0.0, "rejected": 0,
+                "reasons": {}})
+            rec["merged"] += 1
+            rec["contribution"] += c.get("contribution", 0.0)
+    for rej in rejections:
+        rec = per_client.setdefault(rej.get("client", -1), {
+            "merged": 0, "contribution": 0.0, "rejected": 0, "reasons": {}})
+        rec["rejected"] += 1
+        reason = rej.get("reason", "?")
+        rec["reasons"][reason] = rec["reasons"].get(reason, 0) + 1
+    out.append('<div class="row">')
+    out.append('<div class="card"><h2>Mean update norm</h2>'
+               + line_chart([("‖Δ‖", SERIES[0], norm_pts)],
+                            x_label="round",
+                            y_fmt=lambda v: f"{v:.3g}") + "</div>")
+    out.append('<div class="card"><h2>Update↔aggregate cosine</h2>'
+               + line_chart([("cosine", SERIES[2], cos_pts)],
+                            x_label="round",
+                            y_fmt=lambda v: f"{v:.2f}") + "</div>")
+    if gini_pts:
+        out.append('<div class="card"><h2>Participation Gini</h2>'
+                   + line_chart([("gini", SERIES[1], gini_pts)],
+                                x_label="round",
+                                y_fmt=lambda v: f"{v:.2f}") + "</div>")
+    out.append("</div>")
+    out.append("<h2>Client equity & rejections</h2>")
+    rows = []
+    for cid in sorted(per_client):
+        rec = per_client[cid]
+        reasons = ", ".join(f"{k}×{v}" for k, v in
+                            sorted(rec["reasons"].items())) or "—"
+        rows.append([fmt_num(cid, 0), fmt_num(rec["merged"], 0),
+                     f'{rec["contribution"]:.3f}',
+                     fmt_num(rec["rejected"], 0), esc(reasons)])
+    out.append(table_html(["client", "merged", "total contribution",
+                           "rejected", "rejection reasons"], rows))
+    return "".join(out)
+
+
+def metrics_section(metrics: List[dict], limit: int = 40) -> str:
+    if not metrics:
+        return '<p class="note">no metric lines in telemetry</p>'
+    scalar = [m for m in metrics if m.get("type") in ("counter", "gauge")]
+    scalar.sort(key=lambda m: (m.get("name", ""),
+                               json.dumps(m.get("labels", {}),
+                                          sort_keys=True)))
+    rows = [[esc(m.get("name")), esc(m.get("type")),
+             esc(", ".join(f"{k}={v}" for k, v in
+                           sorted((m.get("labels") or {}).items())) or "—"),
+             fmt_num(m.get("value"))] for m in scalar[:limit]]
+    note = "" if len(scalar) <= limit else \
+        (f'<p class="note">showing {limit} of {len(scalar)} scalar '
+         f'metrics ({len(metrics) - len(scalar)} histograms omitted — '
+         f'full snapshot in the telemetry JSONL)</p>')
+    return table_html(["metric", "type", "labels", "value"], rows) + note
+
+
+# --------------------------------------------------------------------------
+def build_report(history_rows: List[dict], telemetry_rows: List[dict],
+                 trace_path: Optional[str], title: str) -> str:
+    rounds = _by_kind(history_rows, "round")
+    rounds.sort(key=lambda r: r.get("round") or 0)
+    cells = _by_kind(telemetry_rows, "audit_cell")
+    dyn = _by_kind(telemetry_rows, "dynamics_round")
+    rej = _by_kind(telemetry_rows, "dynamics_rejection")
+    metrics = _by_kind(telemetry_rows, "metric")
+    body = [f"<h1>{esc(title)}</h1>",
+            '<p class="sub">self-contained run report — round curves, '
+            'per-tier lanes, memory-model conformance, learning '
+            'dynamics</p>']
+    if rounds:
+        body.append(tiles_section(rounds))
+        body.append("<h2>Round curves</h2>")
+        body.append(curves_section(rounds))
+    else:
+        body.append('<p class="note">no round records in history</p>')
+    body.append("<h2>Per-tier compute / comm lanes</h2>")
+    body.append('<div class="card">' + lanes_section(trace_path) + "</div>")
+    body.append("<h2>Memory-model conformance</h2>")
+    body.append('<div class="card">' + conformance_section(cells)
+                + "</div>")
+    body.append("<h2>Learning dynamics</h2>")
+    body.append(dynamics_section(dyn, rej))
+    body.append("<h2>Metrics snapshot</h2>")
+    body.append('<div class="card">' + metrics_section(metrics) + "</div>")
+    body.append("<footer>generated by tools/run_report.py · inputs: "
+                "history JSONL + Obs telemetry JSONL + Chrome trace"
+                "</footer>")
+    return ("<!DOCTYPE html><html lang=\"en\"><head>"
+            "<meta charset=\"utf-8\">"
+            "<meta name=\"viewport\" "
+            "content=\"width=device-width, initial-scale=1\">"
+            f"<title>{esc(title)}</title><style>{_CSS}</style></head>"
+            "<body><main>" + "".join(body) + "</main></body></html>")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--history", default=None,
+                    help="round-record JSONL (engine history_sink)")
+    ap.add_argument("--telemetry", default=None,
+                    help="telemetry JSONL (Obs.export_jsonl)")
+    ap.add_argument("--trace", default=None,
+                    help="Chrome trace JSON (Obs.export_chrome_trace)")
+    ap.add_argument("--title", default="FeDepth run report")
+    ap.add_argument("--out", required=True, help="output HTML path")
+    args = ap.parse_args(argv)
+    history_rows = read_jsonl(args.history)
+    telemetry_rows = read_jsonl(args.telemetry)
+    if not history_rows and not telemetry_rows and not args.trace:
+        print("error: no readable inputs (--history/--telemetry/--trace "
+              "all empty or missing)", file=sys.stderr)
+        return 2
+    html_text = build_report(history_rows, telemetry_rows, args.trace,
+                             args.title)
+    with open(args.out, "w") as f:
+        f.write(html_text)
+    print(f"wrote {args.out} "
+          f"({len(html_text) / 1024:.0f} KiB, "
+          f"{len(_by_kind(history_rows, 'round'))} round records, "
+          f"{len(_by_kind(telemetry_rows, 'audit_cell'))} audit cells, "
+          f"{len(_by_kind(telemetry_rows, 'dynamics_round'))} dynamics "
+          f"rounds)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -43,7 +43,9 @@ def summarize(events: list) -> dict:
     aggregates = 0
     t_max = 0.0
     for ev in events:
-        ts = float(ev.get("ts", 0.0))
+        if not isinstance(ev, dict):
+            continue                 # malformed entry, skip quietly
+        ts = float(ev.get("ts", 0.0) or 0.0)
         if ev.get("ph") == "i" and ev.get("name") == "aggregate":
             aggregates += 1
             t_max = max(t_max, ts / 1e6)
@@ -116,17 +118,35 @@ def render(report: dict) -> str:
 
 
 def main(argv=None) -> int:
+    """Exit codes: 0 = report produced; 1 = trace had events but none
+    were tier-tagged phase slices (events missing ``args.tier`` /
+    phase names — e.g. a wall-clock-only RoundEngine capture); 2 = the
+    trace is empty or unreadable.  The nonzero paths print a clear
+    message instead of crashing (tests/test_diagnostics.py)."""
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("trace", help="Chrome-trace JSON "
                     "(Obs.export_chrome_trace output)")
     ap.add_argument("--json", dest="json_out", default=None,
                     help="also write the report as JSON to this path")
     args = ap.parse_args(argv)
-    report = summarize(load_events(args.trace))
-    if not report["tiers"]:
-        print("no tier-tagged phase slices found — was the trace "
-              "produced by a systime engine run with obs enabled?",
+    try:
+        events = load_events(args.trace)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"error: cannot read trace {args.trace!r}: {e}",
               file=sys.stderr)
+        return 2
+    if not events:
+        print(f"error: empty trace {args.trace!r} — no traceEvents; "
+              "was it produced by Obs.export_chrome_trace on a run "
+              "with obs enabled?", file=sys.stderr)
+        return 2
+    report = summarize(events)
+    if not report["tiers"]:
+        print("error: no tier-tagged phase slices found (events are "
+              "missing the download/compute/upload phase attrs) — was "
+              "the trace produced by a systime engine run with obs "
+              "enabled?", file=sys.stderr)
+        return 1
     print(render(report))
     if args.json_out:
         with open(args.json_out, "w") as f:
